@@ -1,0 +1,63 @@
+"""Shared benchmark fixtures: a trained tiny LM + captured activations."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import capture_activations
+from repro.data.pipeline import batches, calibration_batch
+from repro.models import model as M
+from repro.models.common import cross_entropy
+from repro.quant import act_quant as act_quant_ctx, fake_quant_act
+from repro.train.trainer import Trainer
+
+CFG = get_config("llama2-7b").reduced().replace(
+    n_layers=2, d_model=64, d_ff=128, n_heads=4, n_kv_heads=4, head_dim=16,
+    vocab_size=256)
+
+
+@functools.lru_cache(maxsize=1)
+def trained_model():
+    tr = Trainer(CFG, batch_size=8, seq_len=64, lr=5e-3)
+    tr.train(100, verbose=False)
+    return tr.params
+
+
+@functools.lru_cache(maxsize=1)
+def captured_acts():
+    params = trained_model()
+    calib = jnp.asarray(calibration_batch(CFG, 8, 64))
+    return capture_activations(CFG, params, calib, sample_frac=0.5,
+                               key=jax.random.PRNGKey(0))
+
+
+def eval_ppl(cfg, params, a_bits=16, rot=None, seed=99, n_batches=4):
+    """Perplexity averaged over several held-out batches (variance control)."""
+    it = batches(cfg, 8, 64, seed=seed)
+    evs = [next(it) for _ in range(n_batches)]
+    toks = jnp.stack([jnp.asarray(b["tokens"]) for b in evs])
+    labels = jnp.stack([jnp.asarray(b["labels"]) for b in evs])
+
+    def run(t, l):
+        logits, _ = M.forward(cfg, params, t, rot=rot)
+        return cross_entropy(logits, l)
+
+    jrun = jax.jit(run)
+    if a_bits < 16:
+        with act_quant_ctx(lambda x: fake_quant_act(x, a_bits)):
+            ces = [float(jrun(toks[i], labels[i])) for i in range(n_batches)]
+    else:
+        ces = [float(jrun(toks[i], labels[i])) for i in range(n_batches)]
+    return float(jnp.exp(jnp.mean(jnp.asarray(ces))))
+
+
+def synthetic_acts(n=256, N=4096, n_outliers=8, scale=12.0, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.laplace(k1, (N, n)) * 0.5
+    oc = jax.random.choice(k2, n, (n_outliers,), replace=False)
+    x = x.at[:, oc].multiply(scale)
+    return x / jnp.std(x)

@@ -1,0 +1,32 @@
+"""Paper Figs. 3 & 6: outlier counts + quant error per transformation.
+
+Both on synthetic Laplace-with-outliers (paper App. G statistics) and on real
+captured activations of the trained tiny LM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import CFG, captured_acts, synthetic_acts
+from repro.core import (calibrate_rotation, outlier_count, quant_error,
+                        random_hadamard)
+
+
+def run() -> list:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for src, x in [("synthetic", synthetic_acts()),
+                   ("captured", captured_acts()["r1"])]:
+        n = x.shape[-1]
+        had = random_hadamard(n, key)
+        dart = calibrate_rotation(x, n, key, objective="whip", steps=80,
+                                  lr=0.2)
+        for name, r in [("identity", jnp.eye(n)), ("hadamard", had),
+                        ("dartquant", dart)]:
+            o = x @ r
+            rows.append((f"fig3,{src},{name},outliers",
+                         float(outlier_count(o)), "per_token"))
+            rows.append((f"fig3,{src},{name},quant_err",
+                         float(quant_error(o)), "mse"))
+    return rows

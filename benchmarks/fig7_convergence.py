@@ -1,0 +1,34 @@
+"""Paper Fig. 7a + Table 22: quant-error trajectories per objective.
+
+On REAL captured activations of the trained tiny LM (not synthetic): optimize
+R with each objective and measure activation quant error along the way.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import captured_acts
+from repro.core import quant_error, random_hadamard
+from repro.core.qr_orth import calibrate_qr, qr_rotation
+from repro.core.whip import OBJECTIVES
+
+
+def run() -> list:
+    acts = captured_acts()
+    x = acts["r1"]
+    n = x.shape[-1]
+    key = jax.random.PRNGKey(0)
+    z0 = random_hadamard(n, key)
+    rows = [("fig7,start_quant_err", float(quant_error(x @ z0)), "mse")]
+    for obj in ("whip", "variance", "kurtosis", "quant"):
+        errs = []
+
+        def cb(k, l, z):
+            if k % 20 == 0 or k == 79:
+                errs.append(float(quant_error(x @ qr_rotation(z))))
+
+        calibrate_qr(x, z0, OBJECTIVES[obj], steps=80, lr=0.1, callback=cb)
+        rows.append((f"fig7,{obj},final_quant_err", errs[-1], "mse"))
+        rows.append((f"fig7,{obj},delta_pct",
+                     100 * (errs[-1] - errs[0]) / errs[0], "%"))
+    return rows

@@ -1,0 +1,29 @@
+"""GPTQ-vs-RTN reconstruction (supports the paper's §5 'GPTQ for weights'):
+per-matrix reconstruction error on captured activations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import CFG, captured_acts, trained_model
+from repro.quant import gptq_quantize, hessian, recon_error, rtn_quantize
+
+
+def run() -> list:
+    params = trained_model()
+    acts = captured_acts()
+    x = acts["r1"]
+    rows = []
+    lp = jax.tree.map(lambda a: a[0], params["layers"])
+    for name in ("wq", "wo"):
+        w = lp["attn"][name] if name in lp["attn"] else None
+        if w is None or w.shape[-1] != x.shape[-1]:
+            continue
+        h = hessian(x)
+        wq, _ = gptq_quantize(w, h, bits=4)
+        e_g = float(recon_error(w, wq, x))
+        e_r = float(recon_error(w, rtn_quantize(w, 4), x))
+        rows.append((f"gptq,{name},gptq_err", e_g, "mse"))
+        rows.append((f"gptq,{name},rtn_err", e_r, "mse"))
+        rows.append((f"gptq,{name},improvement", e_r / max(e_g, 1e-12), "x"))
+    return rows

@@ -1,0 +1,48 @@
+"""Roofline report: reads the dry-run artifacts and emits the per-cell table
+(EXPERIMENTS.md §Roofline source of truth)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def model_flops(arch: str, shape: str, n_devices: int) -> float:
+    """Analytic MODEL_FLOPS per device: 6*N*D (train) / 2*N_active*D (decode)."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    n_active = cfg.n_active_params()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens / n_devices
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens / n_devices
+    tokens = cell.global_batch          # one new token per sequence
+    return 2.0 * n_active * tokens / n_devices
+
+
+def run() -> list:
+    rows = []
+    if not DRYRUN.exists():
+        return [("roofline,missing", 0, "run dryrun first")]
+    for p in sorted(DRYRUN.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("status") != "ok":
+            continue
+        tag = f"{rec['arch']},{rec['shape']},{'pod2' if rec['multi_pod'] else 'pod1'}"
+        r = rec["roofline"]
+        mf = model_flops(rec["arch"], rec["shape"], rec["n_devices"])
+        hlo_f = rec["hlo_stats"]["dot_flops"]
+        rows.append((f"roofline,{tag},t_compute", r["t_compute"], "s"))
+        rows.append((f"roofline,{tag},t_memory", r["t_memory"], "s"))
+        rows.append((f"roofline,{tag},t_collective", r["t_collective"], "s"))
+        rows.append((f"roofline,{tag},bottleneck", 0.0, r["bottleneck"]))
+        rows.append((f"roofline,{tag},useful_flop_ratio",
+                     mf / max(hlo_f, 1.0), "model/hlo"))
+        rows.append((f"roofline,{tag},mem_gib",
+                     rec["memory"]["peak_estimate_bytes"] / 2**30, "GiB"))
+    return rows

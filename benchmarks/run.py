@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,value,unit`` CSV.  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.table2_quality",      # Tab. 2: quant quality per bit setting
+    "benchmarks.table3_calib_cost",   # Tab. 3: calibration cost scaling
+    "benchmarks.table4_optimizer",    # Tab. 4 / Fig. 7b: QR-Orth vs Cayley
+    "benchmarks.fig7_convergence",    # Fig. 7a / Tab. 22: objectives
+    "benchmarks.fig3_outliers",       # Figs. 3/6: outliers + quant error
+    "benchmarks.table16_samples",     # Tabs. 16/5: sample/dataset robustness
+    "benchmarks.gptq_table",          # GPTQ vs RTN reconstruction
+    "benchmarks.roofline_report",     # §Roofline: dry-run derived terms
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,value,unit")
+    ok = True
+    for modname in MODULES:
+        if only and only not in modname:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            for name, value, unit in mod.run():
+                if isinstance(value, float):
+                    print(f"{name},{value:.6g},{unit}", flush=True)
+                else:
+                    print(f"{name},{value},{unit}", flush=True)
+            print(f"# {modname} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:      # noqa: BLE001 — keep the harness running
+            ok = False
+            print(f"# {modname} FAILED: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

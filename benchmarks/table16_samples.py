@@ -1,0 +1,38 @@
+"""Paper Table 16 + Table 5: robustness to sample size and calibration set."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import CFG, eval_ppl, trained_model
+from repro.core import calibrate_model, fuse_rotations
+from repro.core.rotations import online_hadamard
+from repro.data.pipeline import calibration_batch
+from repro.quant import quantize_params
+
+
+def run() -> list:
+    params = trained_model()
+    key = jax.random.PRNGKey(0)
+    rows = []
+    rot = {"r4": online_hadamard}
+    # sample-size sweep (Tab. 16)
+    for n_samples in (2, 4, 8, 16):
+        calib = jnp.asarray(calibration_batch(CFG, n_samples, 64))
+        pack = calibrate_model(CFG, params, calib, key=key, steps=60,
+                               lr_r1=0.05, use_r2=False)
+        dcfg, dp = fuse_rotations(CFG, params, pack)
+        rows.append((f"table16,samples={n_samples}",
+                     eval_ppl(dcfg, quantize_params(dcfg, dp), a_bits=4,
+                              rot=rot), "ppl"))
+    # dataset sweep (Tab. 5): calibrate on *different corpora*, evaluate on
+    # the training corpus — the paper's cross-dataset robustness check
+    for seed in (0, 7, 42):
+        calib = jnp.asarray(calibration_batch(CFG, 8, 64, corpus_seed=seed))
+        pack = calibrate_model(CFG, params, calib, key=key, steps=60,
+                               lr_r1=0.05, use_r2=False)
+        dcfg, dp = fuse_rotations(CFG, params, pack)
+        rows.append((f"table5,corpus_seed={seed}",
+                     eval_ppl(dcfg, quantize_params(dcfg, dp), a_bits=4,
+                              rot=rot), "ppl"))
+    return rows

@@ -1,0 +1,42 @@
+"""Paper Table 2: quant quality across bit settings x methods.
+
+PPL of the trained tiny LM under {16-16-16, 4-8-16, 4-4-16, 4-4-4} for
+{RTN, QuaRot(Hadamard), DartQuant}.  Absolute Llama PPLs are not reproducible
+without weights; the deliverable is the paper's ORDERING at each setting.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import CFG, eval_ppl, trained_model
+from repro.core import calibrate_model, fuse_rotations, random_pack
+from repro.core.rotations import online_hadamard
+from repro.data.pipeline import calibration_batch
+from repro.quant import make_kv_quant, quantize_params
+
+
+def run() -> list:
+    params = trained_model()
+    key = jax.random.PRNGKey(0)
+    calib = jnp.asarray(calibration_batch(CFG, 8, 64))
+    pack = calibrate_model(CFG, params, calib, key=key, steps=80,
+                           lr_r1=0.05, lr_r2=0.05)
+    dcfg, dparams = fuse_rotations(CFG, params, pack)
+    hcfg, hparams = fuse_rotations(CFG, params, random_pack(CFG, key))
+    rows = []
+    rows.append(("table2,fp,16-16-16", eval_ppl(CFG, params)))
+    for (w, a, kv), tag in [((4, 8, 16), "4-8-16"), ((4, 4, 16), "4-4-16"),
+                            ((4, 4, 4), "4-4-4")]:
+        kvq = make_kv_quant(kv)
+        rot_h = {"r4": online_hadamard, "kv_quant": kvq}
+        rows.append((f"table2,rtn,{tag}",
+                     eval_ppl(CFG, quantize_params(CFG, params), a_bits=a,
+                              rot={"kv_quant": kvq})))
+        rows.append((f"table2,quarot,{tag}",
+                     eval_ppl(hcfg, quantize_params(hcfg, hparams), a_bits=a,
+                              rot=rot_h)))
+        rows.append((f"table2,dartquant,{tag}",
+                     eval_ppl(dcfg, quantize_params(dcfg, dparams), a_bits=a,
+                              rot=rot_h)))
+    return [(name, ppl, "ppl") for name, ppl in rows]

@@ -1,0 +1,32 @@
+"""Paper Table 3: rotation-calibration cost (time, memory) vs model size.
+
+Measures wall-clock of a full DartQuant calibration (capture + R1 + R2) at
+three widths standing in for 7B/13B/70B hidden sizes (scaled to CPU), plus the
+analytic FLOP count per QR-Orth step vs the end-to-end fine-tuning
+alternative (which must backprop the whole model per step).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import synthetic_acts
+from repro.core import calibrate_rotation
+
+
+def run() -> list:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for n, tag in [(256, "7b-proxy"), (384, "13b-proxy"), (512, "70b-proxy")]:
+        x = synthetic_acts(n=n, N=2048)
+        t0 = time.time()
+        calibrate_rotation(x, n, key, objective="whip", steps=30, lr=0.1)
+        dt = (time.time() - t0) / 30
+        rows.append((f"table3,calib_step,{tag}", dt * 1e6, "us_per_step"))
+        # per-step FLOPs: whip fwd+bwd (4*N*n^2) + QR ((4/3)n^3) — vs
+        # end-to-end fine-tuning which is 6 * n_params * tokens per step.
+        qr_flops = 4 * x.shape[0] * n * n + (4 / 3) * n ** 3
+        rows.append((f"table3,calib_flops,{tag}", qr_flops, "flops_per_step"))
+    return rows

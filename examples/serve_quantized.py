@@ -1,0 +1,11 @@
+"""End-to-end serving driver: batched requests against a DartQuant W4A8KV4
+model with continuous batching (the repo's 'serve a small model with batched
+requests' deliverable).
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+from repro.launch.serve import main
+
+main(["--arch", "llama2-7b", "--requests", "8", "--slots", "4",
+      "--prompt-len", "12", "--max-new", "12", "--a-bits", "8",
+      "--kv-bits", "4"])

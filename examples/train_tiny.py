@@ -1,0 +1,20 @@
+"""Train a small LM for a few hundred steps with checkpointing + fault
+tolerance (end-to-end training driver on CPU).
+
+    PYTHONPATH=src python examples/train_tiny.py
+"""
+import tempfile
+
+from repro.configs import get_config
+from repro.train.trainer import Trainer
+
+cfg = get_config("llama2-7b").reduced().replace(
+    n_layers=4, d_model=128, d_ff=256, n_heads=4, n_kv_heads=4, head_dim=32,
+    vocab_size=512)
+
+with tempfile.TemporaryDirectory() as d:
+    tr = Trainer(cfg, batch_size=8, seq_len=64, lr=3e-3, ckpt_dir=d,
+                 ckpt_every=50)
+    hist = tr.train(200, log_every=50)
+    print(f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}; "
+          f"straggler events: {len(tr.monitor.events)}")

@@ -1,0 +1,36 @@
+"""Architecture registry: ``get_config("<arch-id>")`` -> ModelConfig."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig, QuantConfig, ShapeCell, SHAPES  # noqa: F401
+
+_REGISTRY = {
+    "mamba2-370m": "mamba2_370m",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "yi-34b": "yi_34b",
+    "gemma2-2b": "gemma2_2b",
+    "grok-1-314b": "grok1_314b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "chameleon-34b": "chameleon_34b",
+    "zamba2-7b": "zamba2_7b",
+    "whisper-medium": "whisper_medium",
+    "llama2-7b": "llama2_7b",
+}
+
+ARCH_IDS = tuple(k for k in _REGISTRY if k != "llama2-7b")
+ALL_ARCH_IDS = tuple(_REGISTRY)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[arch_id]}")
+    return mod.CONFIG
+
+
+def cells(arch_id: str):
+    """Valid (arch, shape) cells for an arch (honouring skip_shapes)."""
+    cfg = get_config(arch_id)
+    return [s for name, s in SHAPES.items() if name not in cfg.skip_shapes]

@@ -1,0 +1,269 @@
+"""Model/architecture configuration system.
+
+One ``ModelConfig`` describes everything the model factory needs: block kinds
+(attention/SSM/MoE/enc-dec), shapes, quantization + rotation (DartQuant) options,
+and sharding hints.  Each assigned architecture gets a module in this package
+exporting ``CONFIG``; ``repro.configs.get_config(arch_id)`` resolves them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """Quantization settings (paper: W4A4KV4 / W4A8 / W4A4KV16)."""
+    w_bits: int = 4
+    a_bits: int = 4
+    kv_bits: int = 16
+    w_group_size: int = -1          # -1 = per output channel
+    w_sym: bool = True              # per-channel symmetric weights
+    a_sym: bool = False             # per-token asymmetric activations
+    w_clip_ratio: float = 1.0
+    use_gptq: bool = True
+    # rotation sites (DartQuant)
+    use_r1: bool = True             # residual-stream rotation (fused)
+    use_r2: bool = True             # per-layer V->O head rotation (fused)
+    use_r3: bool = True             # online Hadamard on Q/K (KV-cache quant)
+    use_r4: bool = True             # online Hadamard before down-proj
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # identity -------------------------------------------------------------
+    arch_id: str = "unnamed"
+    family: str = "dense"           # dense | moe | ssm | hybrid | vlm | audio
+    # transformer core ------------------------------------------------------
+    n_layers: int = 2
+    d_model: int = 64
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    d_ff: int = 128
+    vocab_size: int = 256
+    max_seq_len: int = 8192
+    # attention -------------------------------------------------------------
+    attn_type: str = "gqa"          # gqa | mla | none
+    qkv_bias: bool = False
+    o_bias: bool = False
+    rope_theta: float = 10000.0
+    attn_softcap: float = 0.0       # gemma2/grok attention logit softcap
+    logit_softcap: float = 0.0      # final-logit softcap (gemma2)
+    local_window: int = 0           # sliding-window size for local layers
+    # per-layer pattern for local/global alternation; "L"/"G" string cycled
+    layer_pattern: str = ""
+    tie_embeddings: bool = False
+    sandwich_norm: bool = False     # gemma2: post-norms after attn/mlp
+    embed_scale: bool = False       # gemma2: scale embeddings by sqrt(d)
+    # MLA (deepseek-v3) ------------------------------------------------------
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+    # MoE --------------------------------------------------------------------
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0               # per-expert hidden (deepseek style)
+    n_dense_layers: int = 0         # leading dense layers before MoE layers
+    moe_impl: str = "einsum"        # einsum (capacity) | ragged (sort+ragged_dot EP)
+    capacity_factor: float = 1.25
+    router_scale: bool = False      # deepseek-v3 sigmoid routing + normalization
+    mtp_depth: int = 0              # deepseek-v3 multi-token-prediction modules
+    # SSM (mamba2) -----------------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+    # hybrid (zamba2): one shared attention+MLP block applied every N layers
+    shared_attn_every: int = 0
+    # encoder-decoder (whisper) -----------------------------------------------
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500         # whisper: 30s audio -> 1500 frames (stub input)
+    # mlp / norm flavour -------------------------------------------------------
+    mlp_type: str = "swiglu"        # swiglu | gelu (whisper plain MLP w/ bias)
+    norm_type: str = "rmsnorm"      # rmsnorm | layernorm
+    pos_embed: str = "rope"         # rope | learned | none
+    norm_eps: float = 1e-5
+    # dtypes -------------------------------------------------------------------
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    opt_state_dtype: str = "float32"
+    # training ----------------------------------------------------------------
+    remat: bool = True
+    z_loss: float = 1e-4
+    moe_aux_loss: float = 1e-2
+    # sharding hints ------------------------------------------------------------
+    # attention TP mode: "head" (heads divisible by TP) | "seq" (sequence parallel)
+    attn_shard: str = "head"
+    # MoE expert-parallel axes: "model" (EP=16) | "all" (EP over data x model,
+    # experts fully local per device — DeepSeek-style large EP)
+    ep_axes: str = "model"
+    # TP-shard attention weights even when activations are sequence-parallel
+    # (kills the full-weight FSDP gather; GSPMD inserts small act reshards)
+    attn_weight_tp: bool = False
+    # Megatron-style sequence-parallel residual stream: activations between
+    # blocks shard over ('model', seq) — divides activation-save memory by TP,
+    # enabling accum=1 (one param gather per step instead of per microbatch)
+    seq_parallel_residual: bool = False
+    # quantization ---------------------------------------------------------------
+    quant: QuantConfig = field(default_factory=QuantConfig)
+    # which shapes are valid ("skip long_500k for full-attention archs")
+    skip_shapes: Tuple[str, ...] = ()
+
+    # ------------------------------------------------------------------ helpers
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 512 so embeddings/logits shard
+        over TP=16 (MaxText-style vocab padding). Data uses vocab_size."""
+        return -(-self.vocab_size // 512) * 512
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.attn_type == "mla":
+            return self.qk_nope_head_dim + self.qk_rope_head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def d_inner(self) -> int:  # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.ssm_groups * self.ssm_state
+
+    @property
+    def ffn_hidden(self) -> int:
+        return self.moe_d_ff if (self.n_experts and self.moe_d_ff) else self.d_ff
+
+    def n_params(self) -> int:
+        """Approximate parameter count (for roofline MODEL_FLOPS)."""
+        d, v = self.d_model, self.vocab_size
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        total = emb
+        hd = self.resolved_head_dim
+
+        def attn_params() -> int:
+            if self.attn_type == "mla":
+                p = d * self.q_lora_rank + self.q_lora_rank * self.n_heads * hd
+                p += d * (self.kv_lora_rank + self.qk_rope_head_dim)
+                p += self.kv_lora_rank * self.n_heads * (self.qk_nope_head_dim + self.v_head_dim)
+                p += self.n_heads * self.v_head_dim * d
+                return p
+            if self.attn_type == "none":
+                return 0
+            return d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+
+        def dense_mlp(dff: int) -> int:
+            mult = 3 if self.mlp_type == "swiglu" else 2
+            return mult * d * dff
+
+        def ssm_params() -> int:
+            di, cd, nh = self.d_inner, self.conv_dim, self.ssm_nheads
+            return d * (2 * di + 2 * self.ssm_groups * self.ssm_state + nh) + \
+                self.ssm_conv * cd + di * d + di + 3 * nh
+
+        if self.family == "ssm":
+            total += self.n_layers * ssm_params()
+        elif self.family == "hybrid":
+            total += self.n_layers * (ssm_params() + d)
+            n_shared = 1
+            total += n_shared * (attn_params() + dense_mlp(self.d_ff) + 2 * d)
+        elif self.is_encoder_decoder:
+            total += self.n_encoder_layers * (attn_params() + dense_mlp(self.d_ff))
+            total += self.n_layers * (2 * attn_params() + dense_mlp(self.d_ff))
+        else:
+            n_moe = (self.n_layers - self.n_dense_layers) if self.n_experts else 0
+            n_dense = self.n_layers - n_moe
+            total += self.n_layers * attn_params()
+            total += n_dense * dense_mlp(self.d_ff)
+            if n_moe:
+                per_expert = dense_mlp(self.ffn_hidden)
+                total += n_moe * (self.n_experts * per_expert
+                                  + self.n_shared_experts * per_expert
+                                  + self.n_experts * d)  # router
+        return int(total)
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only top-k + shared experts)."""
+        if not self.n_experts:
+            return self.n_params()
+        d = self.d_model
+        mult = 3 if self.mlp_type == "swiglu" else 2
+        per_expert = mult * d * self.ffn_hidden
+        n_moe = self.n_layers - self.n_dense_layers
+        inactive = n_moe * (self.n_experts - self.moe_top_k) * per_expert
+        return int(self.n_params() - inactive)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        kw = dict(
+            n_layers=min(self.n_layers, 4),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            head_dim=16,
+            d_ff=128,
+            vocab_size=512,
+            max_seq_len=256,
+            remat=False,
+            param_dtype="float32",
+            compute_dtype="float32",
+        )
+        if self.attn_type == "mla":
+            kw.update(q_lora_rank=32, kv_lora_rank=32, qk_nope_head_dim=16,
+                      qk_rope_head_dim=8, v_head_dim=16, head_dim=0)
+        if self.n_experts:
+            kw.update(n_experts=min(self.n_experts, 8),
+                      moe_top_k=min(self.moe_top_k, 2),
+                      moe_d_ff=64 if self.moe_d_ff else 0,
+                      n_dense_layers=min(self.n_dense_layers, 1),
+                      n_shared_experts=min(self.n_shared_experts, 1),
+                      mtp_depth=min(self.mtp_depth, 1),
+                      # no token dropping in smoke tests (keeps prefill==forward)
+                      capacity_factor=float(min(self.n_experts, 8)))
+        if self.family in ("ssm", "hybrid"):
+            kw.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=16)
+            if self.shared_attn_every:
+                kw.update(shared_attn_every=2, n_layers=4)
+        if self.is_encoder_decoder:
+            kw.update(n_encoder_layers=2, encoder_seq=32)
+        if self.layer_pattern:
+            kw.update(local_window=32)
+        return self.replace(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shape cells (assigned): every arch pairs with these four shapes.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,24 @@
+"""chameleon-34b [vlm] — early-fusion, VQ image tokens [arXiv:2405.09818].
+
+Backbone only: image modality enters as VQ codes in the (shared) vocab; the
+VQ-GAN tokenizer frontend is a stub — ``input_specs`` supplies token ids that
+may be text or image codes, embedded by the same table (early fusion).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab_size=65536,
+    attn_type="gqa",
+    attn_shard="head",             # 64 % 16 == 0
+    max_seq_len=8192,
+    skip_shapes=("long_500k",),
+    param_dtype="bfloat16",       # bf16 params + fp32 opt state (FSDP)
+)

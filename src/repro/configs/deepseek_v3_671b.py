@@ -1,0 +1,32 @@
+"""deepseek-v3-671b [moe] — MLA, 1 shared + 256 routed top-8, MTP [arXiv:2412.19437]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,                # spec line (GQA kv=128); MLA uses latent cache
+    d_ff=18432,                    # dense-layer FFN (first n_dense_layers)
+    moe_d_ff=2048,                 # per-expert hidden (spec d_ff=2048)
+    vocab_size=129280,
+    attn_type="mla",
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_head_dim=128,
+    qk_rope_head_dim=64,
+    v_head_dim=128,
+    n_experts=256,
+    n_shared_experts=1,
+    moe_top_k=8,
+    n_dense_layers=3,
+    moe_impl="ragged",             # 256 experts: sort + ragged_dot shard_map EP
+    router_scale=True,             # sigmoid routing w/ weight normalization
+    mtp_depth=1,
+    attn_shard="head",             # 128 % 16 == 0
+    max_seq_len=131072,
+    skip_shapes=("long_500k",),
+    param_dtype="bfloat16",
+    opt_state_dtype="bfloat16",    # 671B: fully-sharded bf16 opt state to fit HBM
+)

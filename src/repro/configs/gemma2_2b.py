@@ -1,0 +1,26 @@
+"""gemma2-2b [dense] — local+global alternating, logit softcap [arXiv:2408.00118]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="gemma2-2b",
+    family="dense",
+    n_layers=26,
+    d_model=2304,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab_size=256000,
+    attn_type="gqa",
+    attn_softcap=50.0,
+    logit_softcap=30.0,
+    local_window=4096,
+    layer_pattern="LG",            # alternate local / global
+    tie_embeddings=True,
+    sandwich_norm=True,
+    embed_scale=True,
+    attn_shard="seq",              # 8 heads % 16 != 0
+    max_seq_len=8192,
+    # half the layers are *global* full attention -> quadratic at 500k; skipped
+    skip_shapes=("long_500k",),
+)

@@ -1,0 +1,25 @@
+"""grok-1-314b [moe] — 8 experts top-2 GQA [hf:xai-org/grok-1]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131072,
+    attn_type="gqa",
+    attn_softcap=30.0,
+    logit_softcap=30.0,
+    n_experts=8,
+    moe_top_k=2,
+    moe_impl="einsum",             # 8 experts: capacity/einsum dispatch under GSPMD
+    attn_shard="head",             # 48 % 16 == 0
+    max_seq_len=8192,
+    skip_shapes=("long_500k",),
+    param_dtype="bfloat16",        # 314B fully-FSDP
+    opt_state_dtype="bfloat16",
+)

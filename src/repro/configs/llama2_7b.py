@@ -1,0 +1,18 @@
+"""llama2-7b — the paper's own primary evaluation model (DartQuant Tab. 2)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="llama2-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=32000,
+    attn_type="gqa",
+    attn_shard="head",
+    max_seq_len=4096,
+    skip_shapes=("long_500k",),
+)

@@ -1,0 +1,24 @@
+"""mamba2-370m [ssm] — SSD (state-space duality) [arXiv:2405.21060]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="mamba2-370m",
+    family="ssm",
+    n_layers=48,
+    d_model=1024,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    attn_type="none",
+    pos_embed="none",
+    tie_embeddings=True,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_groups=1,
+    ssm_conv=4,
+    ssm_chunk=256,
+    attn_shard="head",   # SSM heads (32) TP-sharded
+    max_seq_len=1 << 20,
+)

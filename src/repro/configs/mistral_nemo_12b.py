@@ -1,0 +1,20 @@
+"""mistral-nemo-12b [dense] — 128k ctx GQA [hf:mistralai/Mistral-Nemo-Base-2407]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="mistral-nemo-12b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131072,
+    attn_type="gqa",
+    rope_theta=1e6,
+    attn_shard="head",   # 32 % 16 == 0
+    max_seq_len=131072,
+    skip_shapes=("long_500k",),
+    param_dtype="bfloat16",       # bf16 params + fp32 opt state (FSDP)
+)

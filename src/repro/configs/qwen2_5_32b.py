@@ -1,0 +1,21 @@
+"""qwen2.5-32b [dense] — GQA with QKV bias [hf:Qwen/Qwen2.5-32B]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen2.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=27648,
+    vocab_size=152064,
+    attn_type="gqa",
+    qkv_bias=True,
+    rope_theta=1e6,
+    attn_shard="seq",    # 40 heads % 16 != 0 -> sequence-parallel attention
+    max_seq_len=131072,
+    skip_shapes=("long_500k",),   # full attention: quadratic at 500k,
+    param_dtype="bfloat16",       # bf16 params + fp32 opt state (FSDP)
+)

@@ -1,0 +1,31 @@
+"""whisper-medium [audio] — enc-dec, conv frontend stub [arXiv:2212.04356].
+
+Backbone only: the mel+conv frontend is a stub; ``input_specs`` provides
+precomputed frame embeddings ``[B, encoder_seq, d_model]``.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-medium",
+    family="audio",
+    n_layers=24,                   # decoder layers
+    n_encoder_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51865,
+    attn_type="gqa",
+    is_encoder_decoder=True,
+    encoder_seq=1500,
+    mlp_type="gelu",
+    norm_type="layernorm",
+    pos_embed="learned",
+    qkv_bias=True,
+    o_bias=True,
+    tie_embeddings=True,
+    attn_shard="head",             # 16 % 16 == 0
+    max_seq_len=32768,
+    skip_shapes=("long_500k",),
+)

@@ -1,0 +1,20 @@
+"""yi-34b [dense] — llama-arch GQA [arXiv:2403.04652]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="yi-34b",
+    family="dense",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    attn_type="gqa",
+    rope_theta=5e6,
+    attn_shard="seq",    # 56 heads % 16 != 0
+    max_seq_len=32768,
+    skip_shapes=("long_500k",),
+    param_dtype="bfloat16",       # bf16 params + fp32 opt state (FSDP)
+)

@@ -1,0 +1,28 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + shared attention block [arXiv:2411.15242].
+
+81 Mamba2 layers; a single *shared* attention+MLP block is applied every
+``shared_attn_every`` layers (weights reused each application).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,                  # 3584 / 32
+    d_ff=14336,
+    vocab_size=32000,
+    attn_type="gqa",
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_groups=1,
+    ssm_conv=4,
+    ssm_chunk=256,
+    shared_attn_every=6,           # 81 layers -> 13 shared-attention applications
+    attn_shard="head",             # 32 % 16 == 0
+    max_seq_len=1 << 20,
+)

@@ -1,0 +1,113 @@
+"""DartQuant calibration driver (paper Algorithm 1, per rotation site).
+
+``calibrate_model`` = capture -> token-sample -> per-site QR-Orth/Whip
+optimization -> rotation pack ready for ``fuse_rotations``.
+
+Also provides the QuaRot baseline (``random_pack``: random Hadamard R1/R2) and
+identity pack, used by benchmarks to reproduce the paper's comparisons.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import whip as objectives
+from repro.core.capture import capture_activations
+from repro.core.qr_orth import calibrate_cayley, calibrate_qr, qr_rotation
+from repro.core.rotations import random_hadamard
+
+
+def calibrate_rotation(x: jax.Array, n: int, key, objective: str = "whip",
+                       method: str = "qr", optimizer: str = "sgd",
+                       steps: int = 100, lr: float = 5e-2,
+                       callback: Optional[Callable] = None) -> jax.Array:
+    """Optimize one rotation on captured activations x [N, n]."""
+    obj = objectives.OBJECTIVES[objective]
+    z0 = random_hadamard(n, key)           # paper App. K: Hadamard init
+    if method == "cayley":
+        return calibrate_cayley(x, z0, obj, steps=steps, lr=lr,
+                                callback=callback)
+    return calibrate_qr(x, z0, obj, steps=steps, lr=lr, optimizer=optimizer,
+                        callback=callback)
+
+
+def _r2_dim(cfg: ModelConfig) -> int:
+    return cfg.v_head_dim if cfg.attn_type == "mla" else cfg.resolved_head_dim
+
+
+def calibrate_model(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                    frames=None, key=None, objective: str = "whip",
+                    method: str = "qr", optimizer: str = "sgd",
+                    steps: int = 100, lr_r1: float = 2e-3,
+                    lr_r2: float = 1e-3, sample_frac: float = 0.1,
+                    use_r2: bool = True, verbose: bool = False) -> Dict:
+    """Full DartQuant calibration: returns a rotation pack for fuse_rotations."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    t0 = time.time()
+    acts = capture_activations(cfg, params, tokens, frames=frames,
+                               sample_frac=sample_frac, key=key)
+    ks = iter(jax.random.split(key, 64))
+    pack: Dict = {}
+
+    if not cfg.sandwich_norm:   # gemma2: R1 fusion blocked by post-norms
+        pack["r1"] = calibrate_rotation(acts["r1"], cfg.d_model, next(ks),
+                                        objective=objective, method=method,
+                                        optimizer=optimizer, steps=steps,
+                                        lr=lr_r1)
+        if "r1_enc" in acts:
+            pack["r1_enc"] = calibrate_rotation(acts["r1_enc"], cfg.d_model,
+                                                next(ks), objective=objective,
+                                                method=method,
+                                                optimizer=optimizer,
+                                                steps=steps, lr=lr_r1)
+    if use_r2 and "r2" in acts:
+        hd = _r2_dim(cfg)
+        r2_list = []
+        for i in range(acts["r2"].shape[0]):
+            r2_list.append(calibrate_rotation(
+                acts["r2"][i], hd, next(ks), objective=objective,
+                method=method, optimizer=optimizer, steps=steps, lr=lr_r2))
+        r2 = jnp.stack(r2_list, axis=0)
+        if cfg.family == "hybrid":
+            pack["r2_shared"] = jnp.mean(r2, axis=0) if r2.shape[0] == 1 else r2[0]
+            # shared block: calibrate on pooled V activations of all applications
+            pooled = acts["r2"].reshape(-1, hd)
+            pack["r2_shared"] = calibrate_rotation(
+                pooled, hd, next(ks), objective=objective, method=method,
+                optimizer=optimizer, steps=steps, lr=lr_r2)
+        else:
+            pack["r2"] = r2
+    pack["r4"] = True
+    if verbose:
+        print(f"calibration done in {time.time() - t0:.1f}s "
+              f"(sites: {list(pack)})")
+    return pack
+
+
+def random_pack(cfg: ModelConfig, key, use_r2: bool = True) -> Dict:
+    """QuaRot baseline: random Hadamard rotations, no calibration."""
+    ks = jax.random.split(key, 4)
+    pack: Dict = {"r4": True}
+    if not cfg.sandwich_norm:
+        pack["r1"] = random_hadamard(cfg.d_model, ks[0])
+        if cfg.is_encoder_decoder:
+            pack["r1_enc"] = random_hadamard(cfg.d_model, ks[1])
+    if use_r2 and cfg.attn_type != "none":
+        hd = _r2_dim(cfg)
+        if cfg.family == "hybrid":
+            pack["r2_shared"] = random_hadamard(hd, ks[2])
+        else:
+            n_r2 = cfg.n_layers
+            r2keys = jax.random.split(ks[2], n_r2)
+            pack["r2"] = jnp.stack([random_hadamard(hd, k) for k in r2keys])
+    return pack
+
+
+def identity_pack(cfg: ModelConfig) -> Dict:
+    """No rotation at all (RTN baseline); still absorbs norms for parity."""
+    return {"r4": None}

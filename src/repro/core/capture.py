@@ -1,0 +1,153 @@
+"""Activation capture at rotation sites (paper Alg. 1: ``X <- LLM(S)``).
+
+Sites:
+  r1      — post-norm residual-stream activations entering rotated consumers
+            (every layer's ln1/ln2 outputs + the final-norm output)
+  r2/<i>  — per-layer V-projection outputs, per head, [N, head_dim]
+  r1_enc  — whisper: encoder-stream equivalent of r1
+
+The capture pass runs layers *unrolled* (python loop over stacked-param
+slices): calibration is offline, layer-at-a-time — this is exactly the
+property that lets DartQuant calibrate a 70B on one 24GB GPU.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models.common import apply_norm, linear
+from repro.models.model import _embed
+
+
+def token_sample(x: jax.Array, frac: float, key) -> jax.Array:
+    """x [N, d] -> random fraction of rows (paper: 10%)."""
+    n = x.shape[0]
+    k = max(1, int(n * frac))
+    idx = jax.random.choice(key, n, (k,), replace=False)
+    return x[idx]
+
+
+def _slice(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _v_out(cfg: ModelConfig, attn_p: dict, h: jax.Array) -> jax.Array:
+    """V-projection outputs reshaped to [N_tokens*heads, head_dim] (R2 site)."""
+    B, S, _ = h.shape
+    if cfg.attn_type == "mla":
+        kvlr = cfg.kv_lora_rank
+        from repro.models.common import rmsnorm
+        ckv = linear(h, attn_p["wkv_a"])[..., :kvlr]
+        ckv = rmsnorm(ckv, attn_p["kv_norm"]["scale"], cfg.norm_eps)
+        kv = linear(ckv, attn_p["wkv_b"]).reshape(
+            B, S, cfg.n_heads, cfg.qk_nope_head_dim + cfg.v_head_dim)
+        v = kv[..., cfg.qk_nope_head_dim:]
+        return v.reshape(-1, cfg.v_head_dim)
+    hd = cfg.resolved_head_dim
+    v = linear(h, attn_p["wv"], attn_p.get("bv"))
+    return v.reshape(-1, hd)
+
+
+def capture_activations(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                        frames: Optional[jax.Array] = None,
+                        sample_frac: float = 0.1,
+                        key=None) -> Dict[str, jax.Array]:
+    """Returns {'r1': [N,D], 'r2': [L,Nv,hd] (if attn), 'r1_enc': [N,D] (enc-dec)}."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    B, S = tokens.shape
+    D = cfg.d_model
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = _embed(cfg, params, tokens)
+    r1_pool, r2_pool, r1e_pool = [], [], []
+
+    def collect_r1(h, k):
+        r1_pool.append(token_sample(h.reshape(-1, D).astype(jnp.float32),
+                                    sample_frac, k))
+
+    keys = iter(jax.random.split(key, 4 * cfg.n_layers + 16))
+
+    def run_dense_stack(layers, x, n, encoder_out=None, collect_r2=True,
+                        pool=r1_pool, windows=None):
+        for i in range(n):
+            lp = _slice(layers, i)
+            h = apply_norm(cfg, lp["ln1"], x)
+            pool.append(token_sample(h.reshape(-1, D).astype(jnp.float32),
+                                     sample_frac, next(keys)))
+            if collect_r2:
+                hd_v = cfg.v_head_dim if cfg.attn_type == "mla" else cfg.resolved_head_dim
+                v = _v_out(cfg, lp["attn"], h)
+                r2_pool.append(token_sample(v.astype(jnp.float32),
+                                            sample_frac, next(keys)))
+            win = int(tfm.layer_windows(cfg, n)[i]) if cfg.layer_pattern else 0
+            x, _ = tfm.dense_block(cfg, lp, x, positions, window=win,
+                                   encoder_out=encoder_out,
+                                   causal=not (encoder_out is not None and False))
+        return x
+
+    if cfg.family == "ssm":
+        for i in range(cfg.n_layers):
+            lp = _slice(params["layers"], i)
+            h = apply_norm(cfg, lp["ln"], x)
+            collect_r1(h, next(keys))
+            x = tfm.mamba_block(cfg, lp, x)
+    elif cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+        for g in range(n_groups):
+            for i in range(every):
+                lp = _slice(_slice(params["mamba_groups"], g), i)
+                h = apply_norm(cfg, lp["ln"], x)
+                collect_r1(h, next(keys))
+                x = tfm.mamba_block(cfg, lp, x)
+            sp = params["shared"]
+            h = apply_norm(cfg, sp["ln1"], x)
+            collect_r1(h, next(keys))
+            r2_pool.append(token_sample(
+                _v_out(cfg, sp["attn"], h).astype(jnp.float32),
+                sample_frac, next(keys)))
+            x, _ = tfm.dense_block(cfg, sp, x, positions)
+        for i in range(cfg.n_layers % every):
+            lp = _slice(params["mamba_rest"], i)
+            h = apply_norm(cfg, lp["ln"], x)
+            collect_r1(h, next(keys))
+            x = tfm.mamba_block(cfg, lp, x)
+    elif cfg.is_encoder_decoder:
+        enc = frames.astype(x.dtype) + params["pos_enc"][None].astype(x.dtype)
+        for i in range(cfg.n_encoder_layers):
+            lp = _slice(params["enc_layers"], i)
+            h = apply_norm(cfg, lp["ln1"], enc)
+            r1e_pool.append(token_sample(h.reshape(-1, D).astype(jnp.float32),
+                                         sample_frac, next(keys)))
+            enc, _ = tfm.dense_block(cfg, lp, enc,
+                                     jnp.arange(enc.shape[1], dtype=jnp.int32),
+                                     causal=False)
+        enc = apply_norm(cfg, params["enc_norm"], enc)
+        x = x + params["pos_dec"][positions][None].astype(x.dtype)
+        x = run_dense_stack(params["dec_layers"], x, cfg.n_layers,
+                            encoder_out=enc)
+    elif "dense_layers" in params:
+        x = run_dense_stack(params["dense_layers"], x, cfg.n_dense_layers)
+        x = run_dense_stack(params["moe_layers"], x,
+                            cfg.n_layers - cfg.n_dense_layers)
+    else:
+        x = run_dense_stack(params["layers"], x, cfg.n_layers)
+
+    # final-norm output (lm_head consumer)
+    xf = apply_norm(cfg, params["final_norm"], x)
+    r1_pool.append(token_sample(xf.reshape(-1, D).astype(jnp.float32),
+                                sample_frac, next(keys)))
+
+    out = {"r1": jnp.concatenate(r1_pool, axis=0)}
+    if r2_pool:
+        out["r2"] = jnp.stack(r2_pool, axis=0)
+    if r1e_pool:
+        out["r1_enc"] = jnp.concatenate(r1e_pool, axis=0)
+    return out

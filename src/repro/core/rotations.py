@@ -1,0 +1,504 @@
+"""Computational invariance: rotation construction + fusion into weights.
+
+Sites (paper App. A):
+  R1  residual-stream rotation, fused into every weight touching the stream
+      (consumers: right-multiply by R1; producers: left-multiply by R1^T;
+      embedding/lm_head/pos-embeds rotated; norm scales absorbed first).
+  R2  per-layer head-dim rotation between V and O, fused into wv / wo.
+  R3  online Hadamard on Q/K after RoPE (cancels in qk^T; smooths KV cache).
+  R4  online Hadamard before down-proj; its inverse is fused into w_down.
+
+LayerNorm models (whisper) are first converted to RMS-equivalent form by
+folding the centering matrix M = I - 11^T/d into all producers (SliceGPT):
+after that the stream is zero-mean and rotation commutes exactly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+# --------------------------------------------------------------------------- #
+# Hadamard construction (randomized; Sylvester x Paley factors)
+# --------------------------------------------------------------------------- #
+def _gf_elements(q: int):
+    """Elements + ops of GF(q) for q = p^k (k<=3 needed: q in {11, 19, 27})."""
+    for p in (3, 7, 11, 19, 23, 31):
+        k = 0
+        n = q
+        while n % p == 0:
+            n //= p
+            k += 1
+        if n == 1:
+            break
+    else:
+        raise ValueError(q)
+    if k == 1:
+        elems = list(range(q))
+        sub = lambda a, b: (a - b) % q
+        mul = lambda a, b: (a * b) % q
+        return elems, sub, mul
+    # GF(27) = GF(3)[x] / (x^3 + 2x + 1)  (irreducible over GF(3))
+    assert q == 27, "only GF(27) needed beyond primes"
+    elems = [(a, b, c) for a in range(3) for b in range(3) for c in range(3)]
+
+    def sub(a, b):
+        return tuple((x - y) % 3 for x, y in zip(a, b))
+
+    def mul(a, b):
+        # polynomial product then reduce by x^3 = x + 2  (= -2x - 1 mod 3)
+        coef = [0] * 5
+        for i, x in enumerate(a):
+            for j, y in enumerate(b):
+                coef[i + j] = (coef[i + j] + x * y) % 3
+        for d in (4, 3):
+            c = coef[d]
+            if c:
+                coef[d] = 0
+                coef[d - 3] = (coef[d - 3] + 2 * c) % 3   # +2c from x^3 -> 2
+                coef[d - 2] = (coef[d - 2] + c) % 3       # +c  from x^3 -> x
+        return tuple(coef[:3])
+
+    return elems, sub, mul
+
+
+def _paley(q: int) -> np.ndarray:
+    """Paley-I Hadamard of order q+1 (q = p^k ≡ 3 mod 4). Orders 12, 20, 28."""
+    elems, sub, mul = _gf_elements(q)
+    zero = elems[0] if not isinstance(elems[0], tuple) else (0, 0, 0)
+    squares = {mul(e, e) for e in elems if e != zero}
+    Q = np.zeros((q, q))
+    for i, ei in enumerate(elems):
+        for j, ej in enumerate(elems):
+            if i != j:
+                Q[i, j] = 1.0 if sub(ei, ej) in squares else -1.0
+    # Paley I: H = I + S, S = [[0, 1^T], [-1, Q]] skew => H H^T = (q+1) I
+    H = np.ones((q + 1, q + 1))
+    H[1:, 1:] = Q + np.eye(q)
+    H[1:, 0] = -1.0
+    return H
+
+
+_SMALL = {12: _paley(11), 20: _paley(19), 28: _paley(27)}
+
+
+def hadamard_matrix(n: int) -> np.ndarray:
+    """Unnormalized +-1 Hadamard of order n (Sylvester doubling x Paley)."""
+    if n == 1:
+        return np.ones((1, 1))
+    if n in _SMALL:
+        return _SMALL[n]
+    if n % 2 == 0 and _is_constructible(n // 2):
+        h = hadamard_matrix(n // 2)
+        return np.block([[h, h], [h, -h]])
+    for m, Hm in _SMALL.items():
+        if n % m == 0 and _is_constructible(n // m):
+            return np.kron(Hm, hadamard_matrix(n // m))
+    raise ValueError(f"no Hadamard construction for n={n}")
+
+
+def _is_constructible(n: int) -> bool:
+    if n == 1 or n in _SMALL:
+        return True
+    if n % 2 == 0 and _is_constructible(n // 2):
+        return True
+    for m in _SMALL:
+        if n % m == 0 and _is_constructible(n // m):
+            return True
+    return False
+
+
+def hadamard_chain(n: int) -> list:
+    """Ordered Kronecker factor chain mirroring hadamard_matrix's recursion:
+    hadamard_matrix(n) == kron(chain[0], kron(chain[1], ...))."""
+    if n == 1:
+        return []
+    if n in _SMALL:
+        return [n]
+    if n % 2 == 0 and _is_constructible(n // 2):
+        return [2] + hadamard_chain(n // 2)
+    for m in _SMALL:
+        if n % m == 0 and _is_constructible(n // m):
+            return [m] + hadamard_chain(n // m)
+    raise ValueError(f"no Hadamard construction for n={n}")
+
+
+def random_hadamard(n: int, key) -> jax.Array:
+    """Randomized orthogonal Hadamard: H diag(s) / sqrt(n), s ~ Rademacher.
+
+    Falls back to a random orthogonal matrix when no construction exists.
+    """
+    if _is_constructible(n):
+        h = jnp.asarray(hadamard_matrix(n), jnp.float32) / np.sqrt(n)
+        s = jax.random.rademacher(key, (n,), jnp.float32)
+        return h * s[None, :]
+    z = jax.random.normal(key, (n, n), jnp.float32)
+    q, r = jnp.linalg.qr(z)
+    return q * jnp.sign(jnp.diagonal(r))[None, :]
+
+
+def online_hadamard(x: jax.Array) -> jax.Array:
+    """Apply the (deterministic, unrandomized) WHT to the last dim: x @ H/sqrt(n).
+
+    jnp reference implementation; the Pallas kernel in repro.kernels.hadamard
+    provides the TPU fast path.  Requires a constructible last dim.
+    """
+    n = x.shape[-1]
+    h = jnp.asarray(hadamard_matrix(n), x.dtype) / np.sqrt(n).astype(np.float32)
+    return x @ h
+
+
+# --------------------------------------------------------------------------- #
+# Einsum helpers (leading dims broadcast over layer stacks)
+# --------------------------------------------------------------------------- #
+def _rot_in(w, R):       # consumer weight [..., out, in]: w @ R on the in dim
+    return jnp.einsum("...oi,ij->...oj", w, R.astype(w.dtype))
+
+
+def _rot_out(w, R):      # producer weight [..., out, in]: R^T @ w on the out dim
+    return jnp.einsum("...oi,oj->...ji", w, R.astype(w.dtype))
+
+
+def _rot_vec(v, R):      # row vector on the stream: v @ R
+    return jnp.einsum("...o,oj->...j", v, R.astype(v.dtype))
+
+
+# --------------------------------------------------------------------------- #
+# Norm absorption
+# --------------------------------------------------------------------------- #
+def _absorb_scale_into(ws: list, norm: dict):
+    """Fold rms scale gamma into consumer weights; returns new weights + unit norm."""
+    gamma = norm["scale"]
+    new = [w * gamma[..., None, :].astype(w.dtype) for w in ws]
+    out_norm = dict(norm)
+    out_norm["scale"] = jnp.ones_like(gamma)
+    return new, out_norm
+
+
+def _centering(d: int) -> jax.Array:
+    return jnp.eye(d, dtype=jnp.float32) - jnp.full((d, d), 1.0 / d, jnp.float32)
+
+
+# --------------------------------------------------------------------------- #
+# Block-level fusion (dense transformer block, stacked over leading dims)
+# --------------------------------------------------------------------------- #
+def _fuse_dense_block(cfg: ModelConfig, blk: dict, R1, R2s=None,
+                      R1_kv: Optional[jax.Array] = None,
+                      enc_gamma: Optional[jax.Array] = None) -> dict:
+    """R1 on stream; optional R2 [.., hd, hd]; cross-attn consumes R1_kv space."""
+    blk = dict(blk)
+    attn = dict(blk["attn"])
+    mla = cfg.attn_type == "mla"
+
+    consumers = ["wq_a", "wkv_a"] if mla else ["wq", "wk", "wv"]
+    # absorb ln1 into attention consumers
+    ws, blk["ln1"] = _absorb_scale_into([attn[c] for c in consumers], blk["ln1"])
+    for c, w in zip(consumers, ws):
+        attn[c] = w
+    if R1 is not None:
+        for c in consumers:
+            attn[c] = _rot_in(attn[c], R1)
+        attn["wo"] = _rot_out(attn["wo"], R1)
+        if "bo" in attn:
+            attn["bo"] = _rot_vec(attn["bo"], R1)
+    if R2s is not None:
+        hd = cfg.resolved_head_dim
+        if mla:
+            vd, nope = cfg.v_head_dim, cfg.qk_nope_head_dim
+            wkv_b = attn["wkv_b"]
+            lead = wkv_b.shape[:-2]
+            wkv_b = wkv_b.reshape(lead + (cfg.n_heads, nope + vd, cfg.kv_lora_rank))
+            wv = jnp.einsum("...hok,...oj->...hjk", wkv_b[..., nope:, :], R2s)
+            wkv_b = wkv_b.at[..., nope:, :].set(wv)
+            attn["wkv_b"] = wkv_b.reshape(lead + ((nope + vd) * cfg.n_heads,
+                                                  cfg.kv_lora_rank))
+            wo = attn["wo"]
+            wo = wo.reshape(wo.shape[:-1] + (cfg.n_heads, vd))
+            attn["wo"] = jnp.einsum("...dho,...oj->...dhj", wo,
+                                    R2s).reshape(attn["wo"].shape)
+        else:
+            wv = attn["wv"]
+            lead = wv.shape[:-2]
+            wv = wv.reshape(lead + (cfg.n_kv_heads, hd, cfg.d_model))
+            attn["wv"] = jnp.einsum("...hod,...oj->...hjd", wv,
+                                    R2s).reshape(attn["wv"].shape)
+            if "bv" in attn:
+                bv = attn["bv"].reshape(lead + (cfg.n_kv_heads, hd))
+                attn["bv"] = jnp.einsum("...ho,...oj->...hj", bv,
+                                        R2s).reshape(attn["bv"].shape)
+            wo = attn["wo"]
+            wo = wo.reshape(wo.shape[:-1] + (cfg.n_heads, hd))
+            attn["wo"] = jnp.einsum("...dho,...oj->...dhj", wo,
+                                    R2s).reshape(attn["wo"].shape)
+    blk["attn"] = attn
+
+    # cross attention (whisper): q/o live in decoder space, k/v in encoder space
+    if "xattn" in blk:
+        x = dict(blk["xattn"])
+        ws, blk["ln_x"] = _absorb_scale_into([x["wq"]], blk["ln_x"])
+        x["wq"] = ws[0]
+        if enc_gamma is not None:   # absorb encoder final norm into k/v consumers
+            x["wk"] = x["wk"] * enc_gamma[None, None, :].astype(x["wk"].dtype)
+            x["wv"] = x["wv"] * enc_gamma[None, None, :].astype(x["wv"].dtype)
+        if R1 is not None:
+            x["wq"] = _rot_in(x["wq"], R1)
+            x["wo"] = _rot_out(x["wo"], R1)
+            if "bo" in x:
+                x["bo"] = _rot_vec(x["bo"], R1)
+        if R1_kv is not None:
+            x["wk"] = _rot_in(x["wk"], R1_kv)
+            x["wv"] = _rot_in(x["wv"], R1_kv)
+        blk["xattn"] = x
+
+    # FFN
+    if "mlp" in blk:
+        blk["mlp"] = _fuse_mlp(blk, "mlp", R1)
+    if "moe" in blk:
+        moe = dict(blk["moe"])
+        gamma = blk["ln2"]["scale"]
+        moe["router"] = moe["router"] * gamma[..., None, :].astype(jnp.float32)
+        for wname in ("w_gate", "w_up"):
+            moe[wname] = moe[wname] * gamma[..., None, None, :].astype(moe[wname].dtype)
+        if "shared" in moe:
+            sh = dict(moe["shared"])
+            for wname in ("w_gate", "w_up"):
+                sh[wname] = sh[wname] * gamma[..., None, :].astype(sh[wname].dtype)
+            moe["shared"] = sh
+        norm2 = dict(blk["ln2"]); norm2["scale"] = jnp.ones_like(gamma)
+        blk["ln2"] = norm2
+        if R1 is not None:
+            moe["router"] = _rot_in(moe["router"], R1)
+            moe["w_gate"] = _rot_in(moe["w_gate"], R1)
+            moe["w_up"] = _rot_in(moe["w_up"], R1)
+            moe["w_down"] = _rot_out(moe["w_down"], R1)
+            if "shared" in moe:
+                sh = dict(moe["shared"])
+                sh["w_gate"] = _rot_in(sh["w_gate"], R1)
+                sh["w_up"] = _rot_in(sh["w_up"], R1)
+                sh["w_down"] = _rot_out(sh["w_down"], R1)
+                moe["shared"] = sh
+        blk["moe"] = moe
+    return blk
+
+
+def _fuse_mlp(blk: dict, key: str, R1) -> dict:
+    mlp = dict(blk[key])
+    gated = "w_gate" in mlp
+    consumers = ["w_gate", "w_up"] if gated else ["fc1"]
+    producer = "w_down" if gated else "fc2"
+    ws, blk["ln2"] = _absorb_scale_into([mlp[c] for c in consumers], blk["ln2"])
+    for c, w in zip(consumers, ws):
+        mlp[c] = w
+    if R1 is not None:
+        for c in consumers:
+            mlp[c] = _rot_in(mlp[c], R1)
+        mlp[producer] = _rot_out(mlp[producer], R1)
+        bkey = "b2"
+        if bkey in mlp:
+            mlp[bkey] = _rot_vec(mlp[bkey], R1)
+    return mlp
+
+
+def _fuse_mamba_block(cfg: ModelConfig, blk: dict, R1) -> dict:
+    blk = dict(blk)
+    mixer = dict(blk["mixer"])
+    ws, blk["ln"] = _absorb_scale_into([mixer["in_proj"]], blk["ln"])
+    mixer["in_proj"] = ws[0]
+    if R1 is not None:
+        mixer["in_proj"] = _rot_in(mixer["in_proj"], R1)
+        mixer["out_proj"] = _rot_out(mixer["out_proj"], R1)
+    blk["mixer"] = mixer
+    return blk
+
+
+# --------------------------------------------------------------------------- #
+# LayerNorm -> RMS conversion (SliceGPT; whisper)
+# --------------------------------------------------------------------------- #
+def _fold_ln_bias(blk_norm: dict, consumers: list, biases: list):
+    """beta folded into consumer biases: b' = b + beta @ W.T."""
+    beta = blk_norm.get("bias")
+    if beta is None:
+        return consumers, biases, blk_norm
+    new_b = []
+    for w, b in zip(consumers, biases):
+        shift = jnp.einsum("...oi,...i->...o", w, beta.astype(w.dtype))
+        new_b.append((b if b is not None else 0.0) + shift)
+    norm = dict(blk_norm)
+    norm["bias"] = jnp.zeros_like(beta)
+    return consumers, new_b, norm
+
+
+def convert_ln_to_rms(cfg: ModelConfig, params: dict) -> dict:
+    """Fold centering M = I - 11^T/d into every producer so LN == RMSNorm.
+
+    Also folds LN biases into consumer biases.  Whisper-only layout.
+    """
+    d = cfg.d_model
+    M = _centering(d)
+    p = jax.tree.map(lambda x: x, params)  # shallow-ish copy
+
+    def center_producers(blk, cross: bool):
+        blk = dict(blk)
+        for name in ("attn",) + (("xattn",) if cross else ()):
+            a = dict(blk[name])
+            a["wo"] = _rot_out(a["wo"], M)
+            if "bo" in a:
+                a["bo"] = _rot_vec(a["bo"], M)
+            blk[name] = a
+        mlp = dict(blk["mlp"])
+        mlp["fc2"] = _rot_out(mlp["fc2"], M)
+        mlp["b2"] = _rot_vec(mlp["b2"], M)
+        blk["mlp"] = mlp
+        return blk
+
+    def fold_biases(blk, cross: bool):
+        blk = dict(blk)
+        a = dict(blk["attn"])
+        (_, (a["bq"], a["bk"], a["bv"]), blk["ln1"]) = _fold_ln_bias(
+            blk["ln1"], [a["wq"], a["wk"], a["wv"]],
+            [a.get("bq"), a.get("bk"), a.get("bv")])
+        blk["attn"] = a
+        if cross:
+            xa = dict(blk["xattn"])
+            (_, (xa["bq"],), blk["ln_x"]) = _fold_ln_bias(
+                blk["ln_x"], [xa["wq"]], [xa.get("bq")])
+            blk["xattn"] = xa
+        mlp = dict(blk["mlp"])
+        (_, (mlp["b1"],), blk["ln2"]) = _fold_ln_bias(
+            blk["ln2"], [mlp["fc1"]], [mlp.get("b1")])
+        blk["mlp"] = mlp
+        return blk
+
+    p["embed"] = _rot_vec(p["embed"], M)
+    p["pos_dec"] = _rot_vec(p["pos_dec"], M)
+    p["pos_enc"] = _rot_vec(p["pos_enc"], M)
+    p["enc_layers"] = fold_biases(center_producers(p["enc_layers"], False), False)
+    p["dec_layers"] = fold_biases(center_producers(p["dec_layers"], True), True)
+    # encoder final norm bias -> folded into cross wk/wv consumers of every layer
+    beta = p["enc_norm"].get("bias")
+    if beta is not None:
+        dec = dict(p["dec_layers"])
+        xa = dict(dec["xattn"])
+        for wn, bn in (("wk", "bk"), ("wv", "bv")):
+            shift = jnp.einsum("loi,i->lo", xa[wn], beta.astype(xa[wn].dtype))
+            xa[bn] = xa.get(bn, 0.0) + shift
+        dec["xattn"] = xa
+        p["dec_layers"] = dec
+        en = dict(p["enc_norm"]); en["bias"] = jnp.zeros_like(beta)
+        p["enc_norm"] = en
+    # final (decoder) norm bias -> logits bias via lm_head
+    beta = p["final_norm"].get("bias")
+    if beta is not None:
+        head = p.get("lm_head", p["embed"])
+        p["lm_head_bias"] = jnp.einsum("vi,i->v", head, beta.astype(head.dtype))
+        fn = dict(p["final_norm"]); fn["bias"] = jnp.zeros_like(beta)
+        p["final_norm"] = fn
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# Top-level fusion
+# --------------------------------------------------------------------------- #
+def fuse_rotations(cfg: ModelConfig, params: dict, pack: Dict):
+    """Apply a rotation pack {'r1', 'r2', 'r1_enc', 'r4'} to params.
+
+    Absorbs norm scales first, unties embeddings when needed, and returns
+    ``(fused_cfg, fused_params)`` whose forward outputs are (float-exactly)
+    unchanged — verified by tests/test_rotations.py.  LayerNorm models are
+    converted to RMS-equivalent form (centering folded into producers), so the
+    fused config has ``norm_type == "rmsnorm"``.
+    """
+    R1 = pack.get("r1")
+    R2s = pack.get("r2")
+    p = dict(params)
+    out_cfg = cfg
+
+    if cfg.norm_type == "layernorm":
+        p = convert_ln_to_rms(cfg, p)
+        out_cfg = cfg.replace(norm_type="rmsnorm")
+
+    if cfg.tie_embeddings and "lm_head" not in p:
+        p["lm_head"] = p["embed"]    # untie: head and embed diverge under fusion
+
+    # final norm -> lm_head
+    gamma = p["final_norm"]["scale"]
+    p["lm_head"] = p["lm_head"] * gamma[None, :].astype(p["lm_head"].dtype)
+    fn = dict(p["final_norm"]); fn["scale"] = jnp.ones_like(gamma)
+    p["final_norm"] = fn
+    if R1 is not None:
+        p["embed"] = _rot_vec(p["embed"], R1)
+        p["lm_head"] = _rot_in(p["lm_head"], R1)
+        if "pos_dec" in p:
+            p["pos_dec"] = _rot_vec(p["pos_dec"], R1)
+
+    if cfg.family == "ssm":
+        p["layers"] = _fuse_mamba_block(cfg, p["layers"], R1)
+    elif cfg.family == "hybrid":
+        p["mamba_groups"] = _fuse_mamba_block(cfg, p["mamba_groups"], R1)
+        if "mamba_rest" in p:
+            p["mamba_rest"] = _fuse_mamba_block(cfg, p["mamba_rest"], R1)
+        shared_r2 = pack.get("r2_shared")
+        p["shared"] = _fuse_dense_block(cfg, p["shared"], R1, shared_r2)
+    elif cfg.is_encoder_decoder:
+        R1e = pack.get("r1_enc")
+        enc_gamma = p["enc_norm"]["scale"]
+        p["dec_layers"] = _fuse_dense_block(cfg, p["dec_layers"], R1, R2s,
+                                            R1_kv=R1e, enc_gamma=enc_gamma)
+        en = dict(p["enc_norm"]); en["scale"] = jnp.ones_like(enc_gamma)
+        p["enc_norm"] = en
+        p["enc_layers"] = _fuse_dense_block(cfg, p["enc_layers"], R1e)
+        if R1e is not None:
+            p["pos_enc"] = _rot_vec(p["pos_enc"], R1e)
+            # encoder stream starts at `frames` (stub embeddings): the frontend
+            # stub output is defined in rotated space at serve time.
+    elif "dense_layers" in p:
+        if R2s is not None:
+            nd = cfg.n_dense_layers
+            r2_d, r2_m = R2s[:nd], R2s[nd:]
+        else:
+            r2_d = r2_m = None
+        p["dense_layers"] = _fuse_dense_block(cfg, p["dense_layers"], R1, r2_d)
+        p["moe_layers"] = _fuse_dense_block(cfg, p["moe_layers"], R1, r2_m)
+    else:
+        p["layers"] = _fuse_dense_block(cfg, p["layers"], R1, R2s)
+
+    # R4: fold H into w_down so the online Hadamard on the hidden cancels
+    if pack.get("r4") is not None:
+        p = _fuse_r4(cfg, p)
+    return out_cfg, p
+
+
+def _fuse_r4(cfg: ModelConfig, p: dict) -> dict:
+    def fold(blk):
+        blk = dict(blk)
+        if "mlp" in blk and "w_down" in blk["mlp"]:
+            f = blk["mlp"]["w_down"].shape[-1]
+            H = jnp.asarray(hadamard_matrix(f), jnp.float32) / np.sqrt(f)
+            mlp = dict(blk["mlp"])
+            mlp["w_down"] = _rot_in(mlp["w_down"], H)
+            blk["mlp"] = mlp
+        if "moe" in blk:
+            moe = dict(blk["moe"])
+            f = moe["w_down"].shape[-1]
+            H = jnp.asarray(hadamard_matrix(f), jnp.float32) / np.sqrt(f)
+            moe["w_down"] = _rot_in(moe["w_down"], H)
+            if "shared" in moe and "w_down" in moe["shared"]:
+                sh = dict(moe["shared"])
+                fs = sh["w_down"].shape[-1]
+                Hs = jnp.asarray(hadamard_matrix(fs), jnp.float32) / np.sqrt(fs)
+                sh["w_down"] = _rot_in(sh["w_down"], Hs)
+                moe["shared"] = sh
+            blk["moe"] = moe
+        return blk
+
+    for key in ("layers", "dense_layers", "moe_layers", "dec_layers",
+                "enc_layers", "shared"):
+        if key in p and isinstance(p[key], dict) and (
+                "mlp" in p[key] or "moe" in p[key]):
+            p[key] = fold(p[key])
+    return p

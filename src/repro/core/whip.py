@@ -1,0 +1,78 @@
+"""Calibration objectives: Whip loss (the paper's) + ablation baselines.
+
+All objectives take the *rotated* activation matrix ``o = x @ R`` of shape
+[N_tokens, n] and return a scalar to minimize.  The Whip loss (Eq. 4)::
+
+    Whip(o) = sum_i exp(-|o_i|)
+
+is the CDF-derived Laplace->uniform transform surrogate: it pushes small values
+away from zero; rotation norm-invariance then forces outliers inward, driving
+each token's distribution toward uniform on [-tau, tau].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def whip(o: jax.Array) -> jax.Array:
+    """Paper Eq. 4, averaged over tokens."""
+    return jnp.mean(jnp.sum(jnp.exp(-jnp.abs(o)), axis=-1))
+
+
+def variance(o: jax.Array) -> jax.Array:
+    """Per-token variance (paper: ~constant under rotation -> flat objective)."""
+    return jnp.mean(jnp.var(o, axis=-1))
+
+
+def kurtosis(o: jax.Array) -> jax.Array:
+    """Per-token kurtosis (tail heaviness; slow objective per paper Fig. 7a)."""
+    mu = jnp.mean(o, axis=-1, keepdims=True)
+    d = o - mu
+    m2 = jnp.mean(d ** 2, axis=-1)
+    m4 = jnp.mean(d ** 4, axis=-1)
+    return jnp.mean(m4 / (m2 ** 2 + 1e-12))
+
+
+def _fake_quant_ste(o: jax.Array, bits: int = 4) -> jax.Array:
+    """Per-token asymmetric fake quant with straight-through gradients."""
+    qmax = 2 ** bits - 1
+    lo = jnp.min(o, axis=-1, keepdims=True)
+    hi = jnp.max(o, axis=-1, keepdims=True)
+    scale = (hi - lo) / qmax
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round((o - lo) / scale), 0, qmax)
+    deq = q * scale + lo
+    return o + jax.lax.stop_gradient(deq - o)   # STE
+
+
+def quant_loss(o: jax.Array, bits: int = 4) -> jax.Array:
+    """Direct quantization MSE (end-to-end-style objective; flat per Fig. 7a)."""
+    deq = _fake_quant_ste(o, bits)
+    return jnp.mean(jnp.sum((deq - o) ** 2, axis=-1))
+
+
+def quant_error(o: jax.Array, bits: int = 4) -> jax.Array:
+    """Measurement-only quantization MSE (no STE) — the paper's y-axis."""
+    qmax = 2 ** bits - 1
+    lo = jnp.min(o, axis=-1, keepdims=True)
+    hi = jnp.max(o, axis=-1, keepdims=True)
+    scale = jnp.maximum((hi - lo) / qmax, 1e-8)
+    q = jnp.clip(jnp.round((o - lo) / scale), 0, qmax)
+    deq = q * scale + lo
+    return jnp.mean(jnp.sum((deq - o) ** 2, axis=-1))
+
+
+def outlier_count(o: jax.Array, tau: float = None) -> jax.Array:
+    """Paper Eq. 1 measurement: #|o_i| > tau (default: 4 sigma)."""
+    if tau is None:
+        tau = 4.0 * jnp.std(o)
+    return jnp.mean(jnp.sum((jnp.abs(o) > tau).astype(jnp.float32), axis=-1))
+
+
+OBJECTIVES = {
+    "whip": whip,
+    "variance": variance,
+    "kurtosis": kurtosis,
+    "quant": quant_loss,
+}

@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: fused per-token asymmetric activation quantization.
+
+One VMEM pass per row block: min/max reduce across lanes, scale/zero-point,
+round, emit uint8 codes + fp32 affine metadata.  This is the A4/A8 hot path in
+front of every quantized matmul (paper Fig. 9: "all activations prior to the
+weights are quantized to INT4").
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _act_quant_kernel(x_ref, q_ref, s_ref, z_ref, *, bits: int):
+    x = x_ref[...].astype(jnp.float32)                 # [bm, d]
+    qmax = float(2 ** bits - 1)
+    lo = jnp.min(x, axis=1, keepdims=True)
+    hi = jnp.max(x, axis=1, keepdims=True)
+    s = jnp.maximum((hi - lo) / qmax, 1e-8)
+    q = jnp.clip(jnp.round((x - lo) / s), 0.0, qmax)
+    q_ref[...] = q.astype(jnp.uint8)
+    s_ref[...] = s
+    z_ref[...] = lo
+
+
+@partial(jax.jit, static_argnames=("bits", "block_m", "interpret"))
+def act_quant_pallas(x: jax.Array, bits: int = 4, block_m: int = 256,
+                     interpret: bool = True):
+    M, d = x.shape
+    bm = min(block_m, M)
+    assert M % bm == 0
+    grid = (M // bm,)
+    return pl.pallas_call(
+        partial(_act_quant_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, d), jnp.uint8),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,22 @@
+"""Public wrapper: fused activation quantization."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.kernels.act_quant.act_quant import act_quant_pallas
+from repro.kernels.common import use_interpret
+
+
+def act_quant(x: jax.Array, bits: int = 4, block_m: int = 256):
+    """Any-rank x quantized per last-dim row. Returns (codes, scale, zero)."""
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    m = int(np.prod(lead)) if lead else 1
+    bm = block_m
+    while m % bm and bm > 1:
+        bm //= 2
+    q, s, z = act_quant_pallas(x.reshape(m, d), bits=bits, block_m=bm,
+                               interpret=use_interpret())
+    return (q.reshape(x.shape), s.reshape(lead + (1,)), z.reshape(lead + (1,)))

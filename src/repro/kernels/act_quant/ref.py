@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for fused per-token asymmetric activation quantization."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def act_quant_ref(x, bits: int = 4):
+    """x [M, d] -> (codes uint8 [M,d], scale [M,1] f32, zero [M,1] f32)."""
+    qmax = 2 ** bits - 1
+    xf = x.astype(jnp.float32)
+    lo = jnp.min(xf, axis=-1, keepdims=True)
+    hi = jnp.max(xf, axis=-1, keepdims=True)
+    scale = jnp.maximum((hi - lo) / qmax, 1e-8)
+    q = jnp.clip(jnp.round((xf - lo) / scale), 0, qmax).astype(jnp.uint8)
+    return q, scale, lo

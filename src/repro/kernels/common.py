@@ -1,0 +1,32 @@
+"""Shared kernel utilities."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.rotations import _is_constructible, hadamard_chain
+
+
+def use_interpret() -> bool:
+    """Pallas interpret mode everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def wht_factors(n: int) -> tuple[int, int]:
+    """Split the canonical Kronecker chain so H_n == H_a (x) H_b exactly
+    (matching hadamard_matrix's recursion) with b near the 128 lane width."""
+    chain = hadamard_chain(n)
+    if not chain:
+        return 1, 1
+    b = 1
+    i = len(chain)
+    while i > 0 and b * chain[i - 1] <= 128:
+        i -= 1
+        b *= chain[i]
+    a = n // b
+    if b == 1:          # single factor > 128 (e.g. n prime-ish): whole matrix
+        return 1, n
+    return a, b
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m

@@ -1,0 +1,35 @@
+"""jit'd public wrapper for the WHT kernel (auto shape handling, CPU interpret)."""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rotations import hadamard_matrix
+from repro.kernels.common import use_interpret, wht_factors
+from repro.kernels.hadamard.hadamard import wht_pallas
+
+
+@lru_cache(maxsize=32)
+def _factors(n: int):
+    a, b = wht_factors(n)
+    ha = np.asarray(hadamard_matrix(a), np.float32) / np.sqrt(a)
+    hb = np.asarray(hadamard_matrix(b), np.float32) / np.sqrt(b)
+    return ha, hb
+
+
+def online_hadamard(x: jax.Array, block_m: int = 256) -> jax.Array:
+    """Apply WHT/sqrt(n) over the last dim of any-rank x (R3/R4 online op)."""
+    n = x.shape[-1]
+    ha, hb = _factors(n)
+    lead = x.shape[:-1]
+    m = int(np.prod(lead)) if lead else 1
+    xf = x.reshape(m, n)
+    bm = block_m
+    while m % bm and bm > 1:
+        bm //= 2
+    out = wht_pallas(xf, jnp.asarray(ha), jnp.asarray(hb), block_m=bm,
+                     interpret=use_interpret())
+    return out.reshape(x.shape)

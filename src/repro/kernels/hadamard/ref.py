@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the online Walsh–Hadamard transform."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rotations import hadamard_matrix
+
+
+def wht_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """x [..., n] -> x @ H_n / sqrt(n)."""
+    n = x.shape[-1]
+    h = jnp.asarray(hadamard_matrix(n), jnp.float32) / np.sqrt(n)
+    return (x.astype(jnp.float32) @ h).astype(x.dtype)

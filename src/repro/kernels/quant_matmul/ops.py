@@ -1,0 +1,27 @@
+"""Public wrapper: W4 dequant matmul over QTensor weights."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.kernels.common import use_interpret
+from repro.kernels.quant_matmul.quant_matmul import w4_matmul_pallas
+from repro.quant.quantizers import QTensor
+
+
+def w4_matmul(x: jax.Array, qt: QTensor) -> jax.Array:
+    """y = x @ dequant(qt).T for any-rank x; qt.q packed uint8 [N, K/2]."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    m = int(np.prod(lead)) if lead else 1
+    bm = 128
+    while m % bm and bm > 1:
+        bm //= 2
+    N = qt.q.shape[0]
+    bn = 128
+    while N % bn and bn > 1:
+        bn //= 2
+    y = w4_matmul_pallas(x.reshape(m, K), qt.q, qt.scale,
+                         block_m=bm, block_n=bn, interpret=use_interpret())
+    return y.reshape(lead + (N,))

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: int4-weight dequant matmul (the serving GEMM).
+
+TPU adaptation of the paper's CUTLASS INT4 GEMM: v5e has no INT4 MXU path, so
+the TPU-native form is weight-only int4 — packed nibbles are unpacked and
+dequantized to bf16 *inside VMEM* (halving HBM weight traffic, the actual
+bottleneck of decode) and fed to the MXU with f32 accumulation.
+
+Grid tiles (M/bm, N/bn); the full K stripe of x and the packed K/2 stripe of w
+live in VMEM per tile.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _w4_matmul_kernel(x_ref, qw_ref, s_ref, o_ref):
+    x = x_ref[...]                                          # [bm, K]
+    qw = qw_ref[...]                                        # [bn, K//2] uint8
+    lo = (qw & 0xF).astype(jnp.int8)
+    hi = ((qw >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    q = jnp.stack([lo, hi], axis=-1).reshape(qw.shape[0], qw.shape[1] * 2)
+    w = q.astype(jnp.float32) * s_ref[...].astype(jnp.float32)   # [bn, K]
+    acc = jax.lax.dot_general(x.astype(jnp.float32), w,
+                              (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def w4_matmul_pallas(x: jax.Array, qw: jax.Array, scale: jax.Array,
+                     block_m: int = 128, block_n: int = 128,
+                     interpret: bool = True) -> jax.Array:
+    """x [M,K] bf16/f32; qw [N,K/2] uint8; scale [N,1] -> y [M,N]."""
+    M, K = x.shape
+    N = qw.shape[0]
+    bm, bn = min(block_m, M), min(block_n, N)
+    assert M % bm == 0 and N % bn == 0
+    grid = (M // bm, N // bn)
+    return pl.pallas_call(
+        _w4_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, K // 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(x, qw, scale)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the W4 dequant matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.quantizers import unpack_int4
+
+
+def w4_matmul_ref(x, qw_packed, scale):
+    """x [M,K]; qw_packed [N,K/2] uint8 (two int4 nibbles); scale [N,1].
+
+    y = x @ (unpack(qw) * scale).T  in f32 accumulation.
+    """
+    q = unpack_int4(qw_packed).astype(jnp.float32)          # [N, K]
+    w = q * scale.astype(jnp.float32)
+    return (x.astype(jnp.float32) @ w.T).astype(x.dtype)

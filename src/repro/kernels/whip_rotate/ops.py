@@ -1,0 +1,38 @@
+"""Public wrapper with custom_vjp: drop-in Whip objective backed by Pallas."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.whip_rotate.whip_rotate import whip_bwd_pallas, whip_fwd_pallas
+
+
+def _block(m: int) -> int:
+    bm = 512
+    while m % bm and bm > 1:
+        bm //= 2
+    return bm
+
+
+@jax.custom_vjp
+def whip_rotate(x: jax.Array, r: jax.Array) -> jax.Array:
+    """Whip(X @ R), fused. Differentiable wrt r (x treated as data)."""
+    return whip_fwd_pallas(x, r, block_m=_block(x.shape[0]),
+                           interpret=use_interpret())
+
+
+def _fwd(x, r):
+    return whip_rotate(x, r), (x, r)
+
+
+def _bwd(res, ct):
+    x, r = res
+    g_r = whip_bwd_pallas(x, r, block_m=_block(x.shape[0]),
+                          interpret=use_interpret())
+    return None, (g_r * ct).astype(r.dtype)
+
+
+whip_rotate.defvjp(_fwd, _bwd)

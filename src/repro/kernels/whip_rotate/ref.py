@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused X@R + Whip loss (calibration hot loop)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def whip_rotate_ref(x, r):
+    """Returns scalar: mean_t sum_i exp(-|x_t @ R|_i)."""
+    o = x.astype(jnp.float32) @ r.astype(jnp.float32)
+    return jnp.mean(jnp.sum(jnp.exp(-jnp.abs(o)), axis=-1))
+
+
+def whip_rotate_grad_ref(x, r):
+    """dWhip/dR = X^T (-sign(O) exp(-|O|)) / N  — closed form."""
+    xf = x.astype(jnp.float32)
+    o = xf @ r.astype(jnp.float32)
+    g_o = -jnp.sign(o) * jnp.exp(-jnp.abs(o)) / x.shape[0]
+    return xf.T @ g_o

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: fused X@R + Whip loss value and gradient.
+
+The calibration hot loop evaluates ``Whip(X @ R)`` and its gradient wrt R for
+X = [tokens, n] with tokens >> n.  Fusing the matmul with the elementwise
+exp/abs reduce keeps O = X@R entirely in VMEM (never written to HBM), and the
+backward kernel recomputes O per tile to form G_R = X^T (-sign(O) e^{-|O|}).
+
+Forward grid tiles rows; each tile emits a partial loss sum (accumulated on
+host side).  Backward accumulates G_R across the grid in the output ref
+(sequential TPU grid => safe accumulation).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _whip_fwd_kernel(x_ref, r_ref, part_ref):
+    x = x_ref[...].astype(jnp.float32)                     # [bm, n]
+    o = jax.lax.dot_general(x, r_ref[...].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    part_ref[0, 0] = jnp.sum(jnp.exp(-jnp.abs(o)))
+
+
+def _whip_bwd_kernel(x_ref, r_ref, g_ref):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)
+    o = jax.lax.dot_general(x, r_ref[...].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    g_o = -jnp.sign(o) * jnp.exp(-jnp.abs(o))
+    g = jax.lax.dot_general(x, g_o, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = g
+
+    @pl.when(i > 0)
+    def _acc():
+        g_ref[...] += g
+
+
+@partial(jax.jit, static_argnames=("block_m", "interpret"))
+def whip_fwd_pallas(x, r, block_m: int = 512, interpret: bool = True):
+    M, n = x.shape
+    bm = min(block_m, M)
+    assert M % bm == 0
+    grid = (M // bm,)
+    parts = pl.pallas_call(
+        _whip_fwd_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0)),
+                  pl.BlockSpec((n, n), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], 1), jnp.float32),
+        interpret=interpret,
+    )(x, r)
+    return jnp.sum(parts) / M
+
+
+@partial(jax.jit, static_argnames=("block_m", "interpret"))
+def whip_bwd_pallas(x, r, block_m: int = 512, interpret: bool = True):
+    M, n = x.shape
+    bm = min(block_m, M)
+    assert M % bm == 0
+    grid = (M // bm,)
+    g = pl.pallas_call(
+        _whip_bwd_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0)),
+                  pl.BlockSpec((n, n), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(x, r)
+    return g / M

@@ -1,0 +1,199 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers the right step function (train_step / prefill / decode_step) with
+     ShapeDtypeStruct stand-ins and full sharding specs,
+  3. compiles, records memory_analysis + scan-aware HLO roofline stats,
+  4. appends the result JSON to experiments/dryrun/<cell>.json (resumable).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ALL_ARCH_IDS, ARCH_IDS, SHAPES, get_config
+from repro.dist.sharding import Sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.roofline.hlo_analysis import analyze_hlo, roofline_terms
+from repro.train.optimizer import OptState
+from repro.train import steps as S
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def cell_name(arch: str, shape: str, multi_pod: bool,
+              variant: str = "") -> str:
+    base = f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}"
+    return f"{base}__{variant}" if variant else base
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool = False,
+             skip_existing: bool = True, variant: dict = None) -> dict:
+    """variant: {"name": str, "cfg": {field: value}, "cache_dtype": "f8"}
+    — §Perf hillclimb runs baseline vs variants on the same cell."""
+    vname = variant["name"] if variant else ""
+    out_path = OUT_DIR / f"{cell_name(arch, shape, multi_pod, vname)}.json"
+    if skip_existing and out_path.exists():
+        return json.loads(out_path.read_text())
+    cfg = get_config(arch)
+    if variant and variant.get("cfg"):
+        cfg = cfg.replace(**variant["cfg"])
+    cell = SHAPES[shape]
+    if shape in cfg.skip_shapes:
+        rec = {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+               "status": "skipped", "reason": "skip_shapes (see DESIGN.md)"}
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shd = Sharding(cfg, mesh)
+    params_sds = S.params_shape(cfg)
+    pspecs = shd.param_specs(params_sds)
+    psh = shd.named(pspecs)
+
+    with mesh:
+        if cell.kind == "train":
+            opt_sds = S.opt_shape(cfg, params_sds)
+            osh = OptState(NamedSharding(mesh, P()), psh, psh)
+            batch_sds = S.input_specs(cfg, cell)
+            bsh = shd.named(shd.batch_specs(batch_sds))
+            # microbatch so activation memory fits HBM: remat saves one
+            # [tokens, d_model] residual per layer -> budget ~6 GiB
+            n_dp = int(np.prod([mesh.shape[a] for a in mesh.shape
+                                if a != "model"]))
+            tokens_per_dev = cell.global_batch * cell.seq_len // n_dp
+            budget_tokens = max(2048, int(6e9 / (cfg.n_layers * cfg.d_model * 2)))
+            target = min(16384, budget_tokens)
+            accum = max(1, -(-tokens_per_dev // target))
+            accum = 1 << (accum - 1).bit_length()          # round up to pow2
+            while (cell.global_batch % (accum * n_dp) or
+                   cell.global_batch // accum < n_dp) and accum > 1:
+                accum //= 2
+            if variant and variant.get("accum"):
+                accum = variant["accum"]
+            step = S.build_train_step(cfg, mesh=mesh, shd=shd,
+                                      grad_accum=accum, param_specs=pspecs)
+            jf = jax.jit(step, in_shardings=(psh, osh, bsh),
+                         donate_argnums=(0, 1))
+            lowered = jf.lower(params_sds, opt_sds, batch_sds)
+        elif cell.kind == "prefill":
+            ins = S.input_specs(cfg, cell)
+            ish = shd.named(shd.batch_specs(ins))
+            step = S.build_prefill(cfg, mesh=mesh, shd=shd)
+            if "frames" in ins:
+                jf = jax.jit(lambda p, t, f: step(p, t, frames=f),
+                             in_shardings=(psh, ish["tokens"], ish["frames"]))
+                lowered = jf.lower(params_sds, ins["tokens"], ins["frames"])
+            else:
+                jf = jax.jit(step, in_shardings=(psh, ish["tokens"]))
+                lowered = jf.lower(params_sds, ins["tokens"])
+        else:  # decode
+            cache_dtype = jnp.bfloat16
+            if variant and variant.get("cache_dtype") == "f8":
+                cache_dtype = jnp.float8_e4m3fn
+            ins = S.input_specs(cfg, cell, cache_dtype=cache_dtype)
+            csh = shd.named(shd.cache_specs(ins["cache"]))
+            tsh = shd.named(shd.batch_specs({"token": ins["token"]}))["token"]
+            step = S.build_decode_step(cfg, mesh=mesh, shd=shd)
+            jf = jax.jit(step,
+                         in_shardings=(psh, tsh, csh, NamedSharding(mesh, P())),
+                         donate_argnums=(2,))
+            lowered = jf.lower(params_sds, ins["token"], ins["cache"],
+                               jax.ShapeDtypeStruct((), jnp.int32))
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    stats = analyze_hlo(hlo)
+    terms = roofline_terms(stats)
+    ca = compiled.cost_analysis() or {}
+
+    rec = {
+        "arch": arch, "shape": shape, "multi_pod": multi_pod, "status": "ok",
+        "variant": vname or "baseline",
+        "n_devices": int(len(mesh.devices.flat)),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_estimate_bytes": int(ma.argument_size_in_bytes
+                                       + ma.output_size_in_bytes
+                                       + ma.temp_size_in_bytes
+                                       - ma.alias_size_in_bytes),
+        },
+        "hlo_stats": {k: (v if not isinstance(v, dict) else v)
+                      for k, v in stats.items()},
+        "xla_cost_analysis_flops": float(ca.get("flops", -1)),
+        "roofline": terms,
+        "model": {
+            "n_params": get_config(arch).n_params(),
+            "n_active_params": get_config(arch).n_active_params(),
+        },
+    }
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for a in archs:
+        for s in shapes:
+            cells.append((a, s))
+
+    for a, s in cells:
+        name = cell_name(a, s, args.multi_pod)
+        try:
+            rec = run_cell(a, s, multi_pod=args.multi_pod,
+                           skip_existing=not args.force)
+            if rec["status"] == "ok":
+                r = rec["roofline"]
+                print(f"[ok] {name}: compile={rec['compile_s']}s "
+                      f"mem={rec['memory']['peak_estimate_bytes']/2**30:.2f}GiB "
+                      f"t_c={r['t_compute']:.4f} t_m={r['t_memory']:.4f} "
+                      f"t_x={r['t_collective']:.4f} dom={r['bottleneck']}",
+                      flush=True)
+            else:
+                print(f"[skip] {name}: {rec.get('reason','')}", flush=True)
+        except Exception as e:
+            print(f"[FAIL] {name}: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+            OUT_DIR.mkdir(parents=True, exist_ok=True)
+            (OUT_DIR / f"{name}.FAILED").write_text(
+                f"{type(e).__name__}: {e}\n{traceback.format_exc()}")
+
+
+if __name__ == "__main__":
+    main()

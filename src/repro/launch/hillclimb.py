@@ -1,0 +1,59 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""§Perf hillclimb driver: re-lower the three chosen cells with optimization
+variants and print before/after roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb
+"""
+import json
+
+from repro.launch.dryrun import OUT_DIR, cell_name, run_cell
+
+# (arch, shape, variant) — hypotheses documented in EXPERIMENTS.md §Perf
+RUNS = [
+    # Cell A: deepseek-v3 train — kill per-microbatch expert-weight gathers
+    ("deepseek-v3-671b", "train_4k", {"name": "ep_all",
+                                      "cfg": {"ep_axes": "all"}}),
+    # Cell B: yi-34b train — TP-shard seq-arch attention weights
+    ("yi-34b", "train_4k", {"name": "attn_tp",
+                            "cfg": {"attn_weight_tp": True}}),
+    # Cell C: qwen decode — weight-stationary attention TP + fp8 KV cache
+    ("qwen2.5-32b", "decode_32k", {"name": "attn_tp",
+                                   "cfg": {"attn_weight_tp": True}}),
+    ("qwen2.5-32b", "decode_32k", {"name": "attn_tp_kv8",
+                                   "cfg": {"attn_weight_tp": True},
+                                   "cache_dtype": "f8"}),
+    # Round 2 — hypothesis: the replicated f32 grad-accum buffer forces a
+    # full AR per microbatch; sharding it (param_specs constraint) turns it
+    # into reduce-scatter.  With memory freed, fewer microbatches cut the
+    # per-micro FSDP param regathers.
+    ("yi-34b", "train_4k", {"name": "attn_tp_gshard",
+                            "cfg": {"attn_weight_tp": True}, "accum": 16}),
+    ("yi-34b", "train_4k", {"name": "attn_tp_gshard_acc4",
+                            "cfg": {"attn_weight_tp": True}, "accum": 4}),
+    ("deepseek-v3-671b", "train_4k", {"name": "ep_all_gshard",
+                                      "cfg": {"ep_axes": "all"}, "accum": 16}),
+    ("deepseek-v3-671b", "train_4k", {"name": "ep_all_gshard_acc4",
+                                      "cfg": {"ep_axes": "all"}, "accum": 4}),
+]
+
+
+def show(rec):
+    r = rec["roofline"]
+    return (f"mem={rec['memory']['peak_estimate_bytes']/2**30:6.2f}GiB "
+            f"t_c={r['t_compute']:8.3f} t_m={r['t_memory']:8.3f} "
+            f"t_x={r['t_collective']:8.3f} dom={r['bottleneck']}")
+
+
+def main():
+    for arch, shape, variant in RUNS:
+        base = json.loads(
+            (OUT_DIR / f"{cell_name(arch, shape, False)}.json").read_text())
+        print(f"--- {arch} {shape}")
+        print(f"    baseline          {show(base)}", flush=True)
+        rec = run_cell(arch, shape, variant=variant)
+        print(f"    {variant['name']:<17s} {show(rec)}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

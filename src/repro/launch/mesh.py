@@ -1,0 +1,22 @@
+"""Production mesh factory.
+
+A FUNCTION (not a module-level constant) so importing never touches jax device
+state.  Single pod: 16x16 = 256 chips (v5e pod).  Multi-pod: 2x16x16 = 512
+chips; the 'pod' axis composes with 'data' into the FSDP axis, so pods scale
+parameter/optimizer sharding without any resharding-logic changes.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """All available devices as a 1D data mesh (tests / tiny runs)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,53 @@
+"""End-to-end training driver.
+
+Small-scale (CPU, default): trains a reduced config on the synthetic corpus
+with checkpointing + fault tolerance.  Production: pass --production to build
+the 16x16 mesh (requires real devices or the dry-run env var).
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama2-7b --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.models.common import NO_SHARD
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--production", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    mesh = None
+    shd = NO_SHARD
+    if args.production:
+        from repro.launch.mesh import make_production_mesh
+        from repro.dist.sharding import Sharding
+        mesh = make_production_mesh()
+        shd = Sharding(cfg, mesh)
+    else:
+        cfg = cfg.reduced()
+
+    from repro.train.trainer import Trainer
+    tr = Trainer(cfg, batch_size=args.batch, seq_len=args.seq, lr=args.lr,
+                 mesh=mesh, shd=shd, ckpt_dir=args.ckpt_dir,
+                 grad_accum=args.grad_accum)
+    hist = tr.train(args.steps)
+    print(f"final loss: {hist[-1]['loss']:.4f} "
+          f"(from {hist[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

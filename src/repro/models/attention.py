@@ -1,0 +1,360 @@
+"""Attention: GQA (+bias, softcap, local windows), MLA (DeepSeek), decode paths.
+
+Prefill/train uses a flash-style chunked attention (lax.scan over KV blocks with
+an online-softmax accumulator) so the [S,S] score matrix never materializes.
+Decode attends a single query against the KV cache; a context-parallel variant
+(cache sharded over sequence, partial-softmax + psum combine) lives in
+``repro.dist.cp_attention`` and is routed via the sharding context.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (NO_SHARD, apply_rope, dense_init, linear,
+                                 norm_params, rmsnorm, softcap)
+
+
+# --------------------------------------------------------------------------- #
+# Params
+# --------------------------------------------------------------------------- #
+def gqa_params(cfg: ModelConfig, key) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (hq * hd, d), d, dt),
+        "wk": dense_init(ks[1], (hkv * hd, d), d, dt),
+        "wv": dense_init(ks[2], (hkv * hd, d), d, dt),
+        "wo": dense_init(ks[3], (d, hq * hd), hq * hd, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dt)
+        p["bk"] = jnp.zeros((hkv * hd,), dt)
+        p["bv"] = jnp.zeros((hkv * hd,), dt)
+    if cfg.o_bias:
+        p["bo"] = jnp.zeros((d,), dt)
+    return p
+
+
+def mla_params(cfg: ModelConfig, key) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    qlr, kvlr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": dense_init(ks[0], (qlr, d), d, dt),
+        "q_norm": {"scale": jnp.ones((qlr,), dt)},
+        "wq_b": dense_init(ks[1], (h * (nope + rope), qlr), qlr, dt),
+        "wkv_a": dense_init(ks[2], (kvlr + rope, d), d, dt),
+        "kv_norm": {"scale": jnp.ones((kvlr,), dt)},
+        "wkv_b": dense_init(ks[3], (h * (nope + vd), kvlr), kvlr, dt),
+        "wo": dense_init(ks[4], (d, h * vd), h * vd, dt),
+    }
+
+
+def attn_params(cfg: ModelConfig, key) -> dict:
+    return mla_params(cfg, key) if cfg.attn_type == "mla" else gqa_params(cfg, key)
+
+
+# --------------------------------------------------------------------------- #
+# Flash-style chunked attention core
+# --------------------------------------------------------------------------- #
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_pos: jax.Array, k_pos: jax.Array,
+                      causal: bool = True, window=0,
+                      logit_cap: float = 0.0, chunk: int = 512,
+                      scale: Optional[float] = None) -> jax.Array:
+    """q [B,Sq,Hq,hd]; k,v [B,Sk,Hkv,hd_k/hd_v]; GQA by head repetition.
+
+    Online-softmax scan over KV chunks of size ``chunk``.  ``window`` may be a
+    traced int32 scalar (per-layer local/global patterns scanned as xs);
+    window <= 0 means global.
+    """
+    B, Sq, Hq, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    hdv = v.shape[-1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    big = jnp.iinfo(jnp.int32).max
+    win = jnp.asarray(window, jnp.int32)
+    win_eff = jnp.where(win > 0, win, big)
+
+    nchunk = -(-Sk // chunk)
+    pad = nchunk * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+
+    qf = (q * scale).astype(jnp.float32).reshape(B, Sq, Hkv, G, hd)
+    kc = k.astype(jnp.float32).reshape(B, nchunk, chunk, Hkv, hd)
+    vc = v.astype(jnp.float32).reshape(B, nchunk, chunk, Hkv, hdv)
+    kpc = k_pos.reshape(nchunk, chunk)
+
+    def body(carry, xs):
+        m, l, o = carry                       # [B,Sq,Hkv,G], same, [B,Sq,Hkv,G,hdv]
+        kb, vb, kp = xs                       # [B,chunk,Hkv,hd], ..., [chunk]
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kb)      # [B,Sq,Hkv,G,chunk]
+        if logit_cap:
+            s = softcap(s, logit_cap)
+        mask = kp[None, :] < big                          # padding
+        if causal:
+            mask &= q_pos[:, None] >= kp[None, :]
+        mask &= (q_pos[:, None] - kp[None, :]) < win_eff  # local window (<=0: off)
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        o_new = o * corr[..., None] + jnp.einsum("bqhgk,bkhd->bqhgd", p, vb)
+        return (m_new, l_new, o_new), None
+
+    init = (jnp.full((B, Sq, Hkv, G), -jnp.inf, jnp.float32),
+            jnp.zeros((B, Sq, Hkv, G), jnp.float32),
+            jnp.zeros((B, Sq, Hkv, G, hdv), jnp.float32))
+    (m, l, o), _ = jax.lax.scan(
+        body, init,
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), kpc))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    return o.reshape(B, Sq, Hq, hdv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# GQA forward (train / prefill)
+# --------------------------------------------------------------------------- #
+def gqa_project(cfg: ModelConfig, p: dict, x: jax.Array,
+                positions: jax.Array, rot=None):
+    """Project + rope. Returns q [B,S,Hq,hd], k,v [B,S,Hkv,hd]."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = linear(x, p["wq"], p.get("bq")).reshape(B, S, cfg.n_heads, hd)
+    k = linear(x, p["wk"], p.get("bk")).reshape(B, S, cfg.n_kv_heads, hd)
+    v = linear(x, p["wv"], p.get("bv")).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.pos_embed == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if rot is not None and rot.get("r3") is not None:
+        # online Hadamard on q/k (R3): (qH)(kH)^T == qk^T; smooths KV for quant
+        q = rot["r3"](q)
+        k = rot["r3"](k)
+    if rot is not None and rot.get("kv_quant") is not None:
+        # paper's KV-4bit: quantize at cache-write; QDQ == integer cache
+        k = rot["kv_quant"](k)
+        v = rot["kv_quant"](v)
+    return q, k, v
+
+
+def gqa_attention(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+                  causal: bool = True, window=0, shd=NO_SHARD,
+                  kv_override: Optional[jax.Array] = None,
+                  rot=None, return_kv: bool = False):
+    """Full-sequence GQA attention.
+
+    kv_override: raw encoder hidden states [B,S_enc,D] (cross-attention) —
+    K/V are projected from them with this layer's wk/wv, no RoPE, non-causal.
+    return_kv: also return (k, v) for cache construction (prefill).
+    """
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    if kv_override is not None:
+        q = linear(x, p["wq"], p.get("bq")).reshape(B, S, cfg.n_heads, hd)
+        Se = kv_override.shape[1]
+        k = linear(kv_override, p["wk"], p.get("bk")).reshape(B, Se, cfg.n_kv_heads, hd)
+        v = linear(kv_override, p["wv"], p.get("bv")).reshape(B, Se, cfg.n_kv_heads, hd)
+        k_pos = jnp.arange(Se, dtype=jnp.int32)
+        causal = False
+    else:
+        q, k, v = gqa_project(cfg, p, x, positions, rot=rot)
+        k_pos = positions
+    if cfg.attn_shard == "seq" and kv_override is None:
+        q = shd(q, "act_bshd_seq")       # queries sharded over S on 'model'
+        k = shd(k, "act_bshd_rep")       # K/V replicated over 'model'
+        v = shd(v, "act_bshd_rep")
+    else:
+        q = shd(q, "act_bshd_heads")     # heads on 'model'
+        k = shd(k, "act_bskd_heads")
+        v = shd(v, "act_bskd_heads")
+    chunk = min(512, k.shape[1])
+    o = chunked_attention(q, k, v, positions, k_pos, causal=causal,
+                          window=window, logit_cap=cfg.attn_softcap, chunk=chunk)
+    o = o.reshape(B, S, -1)
+    out = linear(o, p["wo"], p.get("bo"))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# MLA forward (train / prefill)
+# --------------------------------------------------------------------------- #
+def mla_attention(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+                  shd=NO_SHARD, return_kv: bool = False):
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvlr = cfg.kv_lora_rank
+
+    cq = rmsnorm(linear(x, p["wq_a"]), p["q_norm"]["scale"], cfg.norm_eps)
+    q = linear(cq, p["wq_b"]).reshape(B, S, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = linear(x, p["wkv_a"])
+    c_kv, k_rope = ckv[..., :kvlr], ckv[..., kvlr:]
+    c_kv = rmsnorm(c_kv, p["kv_norm"]["scale"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,r]
+
+    kv = linear(c_kv, p["wkv_b"]).reshape(B, S, h, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, h, rope_d))], -1)
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+
+    q_full = shd(q_full, "act_bshd_heads")
+    k = shd(k, "act_bshd_heads")
+    v = shd(v, "act_bshd_heads")
+    o = chunked_attention(q_full, k, v, positions, positions, causal=True,
+                          chunk=min(512, S),
+                          scale=1.0 / math.sqrt(nope + rope_d))
+    out = linear(o.reshape(B, S, -1), p["wo"])
+    if return_kv:
+        # latent cache (absorbed-decode form): c_kv (normed) + rope key
+        return out, (c_kv, k_rope[:, :, 0, :])
+    return out
+
+
+def attention(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+              causal: bool = True, window=0, shd=NO_SHARD,
+              kv_override=None, rot=None, return_kv: bool = False):
+    if cfg.attn_type == "mla":
+        return mla_attention(cfg, p, x, positions, shd=shd, return_kv=return_kv)
+    return gqa_attention(cfg, p, x, positions, causal=causal, window=window,
+                         shd=shd, kv_override=kv_override, rot=rot,
+                         return_kv=return_kv)
+
+
+# --------------------------------------------------------------------------- #
+# Decode (single step, KV cache)
+# --------------------------------------------------------------------------- #
+def decode_attn_scores(q, k_cache, v_cache, k_pos, cur_pos, window: int = 0,
+                       logit_cap: float = 0.0, scale: Optional[float] = None):
+    """q [B,Hq,hd]; k/v_cache [B,S,Hkv,hd]; returns o [B,Hq,hdv] (plain path)."""
+    B, Hq, hd = q.shape
+    Hkv = k_cache.shape[2]
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    qf = (q * scale).astype(jnp.float32).reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    if logit_cap:
+        s = softcap(s, logit_cap)
+    big = jnp.iinfo(jnp.int32).max
+    win = jnp.asarray(window, jnp.int32)
+    win_eff = jnp.where(win > 0, win, big)
+    valid = k_pos[None, :] <= cur_pos                       # [B,S] (cur_pos [B,1])
+    valid &= (cur_pos - k_pos[None, :]) < win_eff
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, -1).astype(q.dtype)
+
+
+def gqa_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
+               pos: jax.Array, window: int = 0, shd=NO_SHARD,
+               rot=None, cp_fn=None) -> Tuple[jax.Array, dict]:
+    """x [B,1,D]; cache {'k','v': [B,Smax,Hkv,hd]}; pos scalar int32."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k, v = gqa_project(cfg, p, x, positions, rot=rot)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                           (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                           (0, pos, 0, 0))
+    k_pos = jnp.arange(k_cache.shape[1], dtype=jnp.int32)
+    cur = jnp.full((B, 1), pos, jnp.int32)
+    if cp_fn is not None:   # context-parallel: cache seq-sharded over 'model'
+        o = cp_fn(q[:, 0], k_cache, v_cache, k_pos, cur, window, cfg.attn_softcap)
+    else:
+        o = decode_attn_scores(q[:, 0], k_cache, v_cache, k_pos, cur,
+                               window=window, logit_cap=cfg.attn_softcap)
+    out = linear(o.reshape(B, 1, -1), p["wo"], p.get("bo"))
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def mla_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
+               pos: jax.Array, shd=NO_SHARD, cp_fn=None) -> Tuple[jax.Array, dict]:
+    """Absorbed MLA decode: cache holds the latent c_kv + rope key.
+
+    cache: {'ckv': [B,Smax,kvlr], 'krope': [B,Smax,r]}
+    """
+    B = x.shape[0]
+    h = cfg.n_heads
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvlr = cfg.kv_lora_rank
+    positions = jnp.full((1,), pos, jnp.int32)
+
+    cq = rmsnorm(linear(x, p["wq_a"]), p["q_norm"]["scale"], cfg.norm_eps)
+    q = linear(cq, p["wq_b"]).reshape(B, 1, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)[:, 0]   # [B,h,r]
+
+    ckv_new = linear(x, p["wkv_a"])                                 # [B,1,kvlr+r]
+    c_kv = rmsnorm(ckv_new[..., :kvlr], p["kv_norm"]["scale"], cfg.norm_eps)
+    k_rope = apply_rope(ckv_new[..., None, kvlr:], positions, cfg.rope_theta)[:, 0, 0]
+
+    ckv_cache = jax.lax.dynamic_update_slice(
+        cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, pos, 0))
+    krope_cache = jax.lax.dynamic_update_slice(
+        cache["krope"], k_rope[:, None].astype(cache["krope"].dtype), (0, pos, 0))
+
+    # absorb W_UK into q: q_lat [B,h,kvlr]
+    wkv_b = p["wkv_b"].reshape(h, nope + vd, kvlr)
+    w_uk, w_uv = wkv_b[:, :nope], wkv_b[:, nope:]                   # [h,nope,kvlr],[h,vd,kvlr]
+    q_lat = jnp.einsum("bhn,hnk->bhk", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    s = (jnp.einsum("bhk,bsk->bhs", q_lat, ckv_cache.astype(jnp.float32))
+         + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                      krope_cache.astype(jnp.float32))) * scale
+    k_pos = jnp.arange(ckv_cache.shape[1], dtype=jnp.int32)
+    s = jnp.where(k_pos[None, None, :] <= pos, s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsk->bhk", pr, ckv_cache.astype(jnp.float32))
+    o = jnp.einsum("bhk,hvk->bhv", o_lat, w_uv.astype(jnp.float32))
+    out = linear(o.reshape(B, 1, h * vd).astype(x.dtype), p["wo"])
+    return out, {"ckv": ckv_cache, "krope": krope_cache}
+
+
+def attn_decode(cfg: ModelConfig, p: dict, x, cache, pos, window=0,
+                shd=NO_SHARD, rot=None, cp_fn=None):
+    if cfg.attn_type == "mla":
+        return mla_decode(cfg, p, x, cache, pos, shd=shd, cp_fn=cp_fn)
+    return gqa_decode(cfg, p, x, cache, pos, window=window, shd=shd,
+                      rot=rot, cp_fn=cp_fn)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16,
+               n_layers: Optional[int] = None) -> dict:
+    """Stacked per-layer KV cache (leading layer dim for scan)."""
+    L = cfg.n_layers if n_layers is None else n_layers
+    if cfg.attn_type == "mla":
+        return {
+            "ckv": jnp.zeros((L, batch, max_seq, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((L, batch, max_seq, cfg.qk_rope_head_dim), dtype),
+        }
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+    }

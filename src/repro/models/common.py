@@ -1,0 +1,124 @@
+"""Shared model building blocks: norms, RoPE, init, softcap, sharding helper."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+# --------------------------------------------------------------------------- #
+# Sharding helper: models call shd(x, spec_name); a NoSharding default makes
+# every model runnable on a single device with zero mesh machinery.
+# --------------------------------------------------------------------------- #
+class NoSharding:
+    def __call__(self, x, name: str):
+        return x
+
+
+NO_SHARD = NoSharding()
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+def norm_params(cfg: ModelConfig, d: int) -> dict:
+    p = {"scale": jnp.ones((d,), jnp.dtype(cfg.param_dtype))}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.dtype(cfg.param_dtype))
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # [hd/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,S,1,hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Misc
+# --------------------------------------------------------------------------- #
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def dense_init(key, shape, in_dim: int, dtype) -> jax.Array:
+    std = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    """y = x @ w.T (+ b).  w: [out, in].
+
+    Consults the trace-time activation-quant context (repro.quant.context):
+    when set, x is per-token fake-quantized first — the paper's A4/A8 path.
+    """
+    from repro.quant import context as qctx
+    aq = qctx.get_act_quant()
+    if aq is not None:
+        x = aq(x)
+    y = jnp.einsum("...i,oi->...o", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 0.0) -> jax.Array:
+    """Mean token cross-entropy with optional z-loss; logits [..., V].
+
+    Uses a one-hot contraction (not take_along_axis) so vocab-TP-sharded
+    logits reduce with a psum instead of an all-gather under GSPMD.
+    """
+    lmax = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = (logits - lmax).astype(jnp.float32)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) \
+        + lmax[..., 0].astype(jnp.float32)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    ll = jnp.sum(shifted * onehot, axis=-1) + lmax[..., 0].astype(jnp.float32)
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)

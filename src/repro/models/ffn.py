@@ -1,0 +1,322 @@
+"""Feed-forward blocks: SwiGLU, plain GELU MLP, and two MoE implementations.
+
+MoE paths:
+  * ``einsum``  — GShard-style *grouped* capacity dispatch under GSPMD; right
+    for few experts (Grok-1: 8e top-2).  Tokens are split into groups of
+    ``MOE_GROUP`` so the one-hot dispatch tensor is O(T * g * K), not O(T^2);
+    groups shard over data, experts over 'model' (EP) and XLA emits the
+    all-to-alls from sharding propagation.
+  * ``ragged`` — sort-by-expert + ``jax.lax.ragged_dot`` (megablox-style).
+    Under a mesh this is an explicit shard_map: tokens are sequence-split over
+    the EP axis, bucketed by destination expert shard, exchanged with
+    all_to_all, matmul'd with the local expert slice via ragged_dot, and sent
+    back.  Right for many experts (DeepSeek-V3: 256e top-8) where one-hot
+    dispatch would be enormous.  Single-device fallback runs sort+ragged
+    locally; tiny token counts (decode) use a psum-combine variant.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import NO_SHARD, dense_init, linear
+
+MOE_GROUP = 2048          # einsum-path dispatch group size (tokens)
+
+
+# --------------------------------------------------------------------------- #
+# Dense MLPs
+# --------------------------------------------------------------------------- #
+def mlp_params(cfg: ModelConfig, key, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (f, d), d, dt),
+            "w_up": dense_init(ks[1], (f, d), d, dt),
+            "w_down": dense_init(ks[2], (d, f), f, dt),
+        }
+    # plain MLP with bias (whisper)
+    return {
+        "fc1": dense_init(ks[0], (f, d), d, dt),
+        "b1": jnp.zeros((f,), dt),
+        "fc2": dense_init(ks[1], (d, f), f, dt),
+        "b2": jnp.zeros((d,), dt),
+    }
+
+
+def mlp_forward(cfg: ModelConfig, p: dict, x: jax.Array, shd=NO_SHARD,
+                rot=None) -> jax.Array:
+    if "w_gate" in p:
+        h = jax.nn.silu(linear(x, p["w_gate"])) * linear(x, p["w_up"])
+        h = shd(h, "act_bsf")
+        if rot is not None and rot.get("r4") is not None:
+            h = rot["r4"](h)   # online Hadamard before down-proj (R4)
+        return linear(h, p["w_down"])
+    h = jax.nn.gelu(linear(x, p["fc1"], p["b1"]))
+    h = shd(h, "act_bsf")
+    if rot is not None and rot.get("r4") is not None:
+        h = rot["r4"](h)
+    return linear(h, p["fc2"], p["b2"])
+
+
+# --------------------------------------------------------------------------- #
+# MoE: routing
+# --------------------------------------------------------------------------- #
+def moe_params(cfg: ModelConfig, key) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.ffn_hidden
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (e, d), d, jnp.float32),  # router in fp32
+        "w_gate": dense_init(ks[1], (e, f, d), d, dt),
+        "w_up": dense_init(ks[2], (e, f, d), d, dt),
+        "w_down": dense_init(ks[3], (e, d, f), f, dt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_params(cfg, ks[4], d_ff=cfg.ffn_hidden * cfg.n_shared_experts)
+    if cfg.router_scale:
+        p["router_bias"] = jnp.zeros((e,), jnp.float32)  # ds-v3 aux-free balancing
+    return p
+
+
+def _route(cfg: ModelConfig, router, router_bias, x: jax.Array):
+    """x [T,D] -> (weights [T,k], idx [T,k], aux_loss scalar)."""
+    logits = jnp.einsum("td,ed->te", x.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    if cfg.router_scale:                      # deepseek-v3: sigmoid + bias + renorm
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + router_bias[None, :]
+        _, idx = jax.lax.top_k(sel, cfg.moe_top_k)
+        w = jnp.take_along_axis(scores, idx, axis=-1)
+        w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-20)
+        probs = scores / (jnp.sum(scores, -1, keepdims=True) + 1e-20)
+    else:                                     # softmax routing (grok/mixtral style)
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, cfg.moe_top_k)
+        w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-20)
+    E = logits.shape[-1]
+    hot = jax.nn.one_hot(idx[:, 0], E)        # switch-style load-balance aux
+    aux = E * jnp.sum(jnp.mean(hot, axis=0) * jnp.mean(probs, axis=0))
+    return w, idx, aux
+
+
+# --------------------------------------------------------------------------- #
+# MoE: grouped capacity/einsum path (GSPMD)
+# --------------------------------------------------------------------------- #
+def moe_einsum(cfg: ModelConfig, p: dict, x: jax.Array,
+               shd=NO_SHARD, rot=None) -> Tuple[jax.Array, jax.Array]:
+    """x [T,D] -> (y [T,D], aux). GShard grouped dispatch."""
+    T, D = x.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    g = min(MOE_GROUP, T)
+    G = T // g
+    assert G * g == T, f"token count {T} not divisible by group {g}"
+    w, idx, aux = _route(cfg, p["router"], p.get("router_bias"), x)
+    cap = max(1, int(cfg.capacity_factor * g * K / E))
+
+    idx_g = idx.reshape(G, g * K)
+    onehot = jax.nn.one_hot(idx_g, E, dtype=jnp.int32)          # [G,gK,E]
+    slot = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1) - 1    # [G,gK] 0-based
+    keep = (slot >= 0) & (slot < cap)
+    oe = jax.nn.one_hot(idx_g, E, dtype=x.dtype)                # [G,gK,E]
+    oslot = jax.nn.one_hot(jnp.where(keep, slot, cap), cap + 1,
+                           dtype=x.dtype)[..., :cap]            # [G,gK,cap]
+    disp = jnp.einsum("gae,gac->gaec", oe, oslot)               # [G,gK,E,cap]
+    disp = disp.reshape(G, g, K, E, cap)
+    wcomb = jnp.einsum("gtkec,gtk->gtec", disp,
+                       w.reshape(G, g, K).astype(x.dtype))      # [G,g,E,cap]
+    disp = disp.sum(2)                                          # [G,g,E,cap]
+
+    xg = x.reshape(G, g, D)
+    xg = shd(xg, "moe_gtd")
+    xe = jnp.einsum("gtd,gtec->gecd", xg, disp)                 # [G,E,cap,D]
+    xe = shd(xe, "moe_gecd")
+    wg = p["w_gate"].astype(x.dtype)
+    wu = p["w_up"].astype(x.dtype)
+    wd = p["w_down"].astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("gecd,efd->gecf", xe, wg)) \
+        * jnp.einsum("gecd,efd->gecf", xe, wu)
+    if rot is not None and rot.get("r4") is not None:
+        h = rot["r4"](h)      # online Hadamard before expert down-proj (R4)
+    ye = jnp.einsum("gecf,edf->gecd", h, wd)                    # [G,E,cap,D]
+    ye = shd(ye, "moe_gecd")
+    y = jnp.einsum("gecd,gtec->gtd", ye, wcomb)
+    return y.reshape(T, D), aux
+
+
+# --------------------------------------------------------------------------- #
+# MoE: sort + ragged_dot paths
+# --------------------------------------------------------------------------- #
+def _ragged_ffn(wg, wu, wd, xs: jax.Array, group_sizes: jax.Array,
+                rot=None) -> jax.Array:
+    """xs [M,D] sorted by expert; group_sizes [E] must sum to M."""
+    g = jax.lax.ragged_dot(xs, jnp.swapaxes(wg, 1, 2), group_sizes)
+    u = jax.lax.ragged_dot(xs, jnp.swapaxes(wu, 1, 2), group_sizes)
+    h = jax.nn.silu(g) * u
+    if rot is not None and rot.get("r4") is not None:
+        h = rot["r4"](h)      # online Hadamard before expert down-proj (R4)
+    return jax.lax.ragged_dot(h, jnp.swapaxes(wd, 1, 2), group_sizes)
+
+
+def moe_ragged_local(cfg: ModelConfig, p: dict, x: jax.Array, rot=None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Single-device sort + ragged_dot MoE. x [T,D]."""
+    T, D = x.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    w, idx, aux = _route(cfg, p["router"], p.get("router_bias"), x)
+    flat_e = idx.reshape(-1)                  # [T*K]
+    order = jnp.argsort(flat_e)
+    xs = jnp.repeat(x, K, axis=0)[order]
+    group_sizes = jnp.bincount(flat_e, length=E).astype(jnp.int32)
+    ys = _ragged_ffn(p["w_gate"].astype(x.dtype), p["w_up"].astype(x.dtype),
+                     p["w_down"].astype(x.dtype), xs, group_sizes, rot=rot)
+    y = jnp.zeros_like(xs).at[order].set(ys).reshape(T, K, D)
+    y = (y * w[..., None].astype(x.dtype)).sum(1)
+    return y, aux
+
+
+def moe_ragged_ep(cfg: ModelConfig, p: dict, x: jax.Array, mesh,
+                  ep_axis="model", dp_axes=("data",), rot=None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel sort+ragged MoE: shard_map + explicit all_to_all.
+
+    x [T,D] sharded over dp_axes.  Inside shard_map each (data, model) device
+    takes its 1/n_ep sequence slice of the data block (sequence-split EP),
+    buckets assignments by destination expert shard with fixed capacity,
+    all_to_all's buckets along the EP axis, runs ragged_dot over its local
+    expert slice, all_to_all's results back, combines, and all_gathers the
+    sequence slices so the output is again replicated over 'model'.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    E, K = cfg.n_experts, cfg.moe_top_k
+    ep_axes = (ep_axis,) if isinstance(ep_axis, str) else tuple(ep_axis)
+    n_ep = int(np.prod([mesh.shape[a] for a in ep_axes]))
+    e_local = E // n_ep
+    T = x.shape[0]
+    n_dp = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    t_rep = T // n_dp                       # tokens per data block
+    n_rep = int(np.prod([mesh.shape[a] for a in ep_axes if a not in dp_axes])) or 1
+    use_psum_path = (t_rep % n_rep != 0) or (t_rep < 2 * n_rep) or \
+        (t_rep // n_rep < 8)
+    dp_spec = tuple(dp_axes) if len(dp_axes) > 1 else dp_axes[0]
+    ep_spec = ep_axes if len(ep_axes) > 1 else ep_axes[0]
+    rb = p.get("router_bias")
+
+    def _ep_index():
+        idx = jax.lax.axis_index(ep_axes[0])
+        for a in ep_axes[1:]:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        return idx
+
+    def psum_fn(x_l, router, router_bias, wg, wu, wd):
+        # tiny token counts (decode): every EP shard processes all tokens
+        # against its local experts; combine with psum.
+        tl, D = x_l.shape
+        m = _ep_index()
+        w, idx, aux = _route(cfg, router, router_bias, x_l)
+        flat_e = idx.reshape(-1)
+        local_e = flat_e - m * e_local
+        valid = (local_e >= 0) & (local_e < e_local)
+        local_e = jnp.clip(local_e, 0, e_local - 1)
+        order = jnp.argsort(jnp.where(valid, local_e, e_local - 1))
+        xs = jnp.repeat(x_l, K, axis=0)[order]
+        group_sizes = jnp.bincount(
+            jnp.where(valid, local_e, e_local - 1), length=e_local).astype(jnp.int32)
+        ys = _ragged_ffn(wg.astype(x_l.dtype), wu.astype(x_l.dtype),
+                         wd.astype(x_l.dtype), xs, group_sizes, rot=rot)
+        ys = jnp.where(valid[order][:, None], ys, 0.0)
+        y = jnp.zeros_like(xs).at[order].set(ys).reshape(tl, K, D)
+        y = (y * w[..., None].astype(x_l.dtype)).sum(1)
+        y = jax.lax.psum(y, ep_axes)
+        return y, aux[None]
+
+    def a2a_fn(x_l, router, router_bias, wg, wu, wd):
+        D = x_l.shape[-1]
+        m = _ep_index()
+        # sequence-split only over axes the tokens are replicated across
+        rep_axes = tuple(a for a in ep_axes if a not in dp_axes)
+        n_rep = int(np.prod([mesh.shape[a] for a in rep_axes])) or 1
+        ridx = jax.lax.axis_index(rep_axes[0]) if rep_axes else 0
+        for a in rep_axes[1:]:
+            ridx = ridx * mesh.shape[a] + jax.lax.axis_index(a)
+        tl = x_l.shape[0] // n_rep
+        x_me = jax.lax.dynamic_slice_in_dim(x_l, ridx * tl, tl, 0)  # my slice
+        w, idx, aux = _route(cfg, router, router_bias, x_me)       # [tl,K]
+        flat_e = idx.reshape(-1)                                   # [tl*K]
+        dest = flat_e // e_local
+        cap = max(8, int(cfg.capacity_factor * tl * K / n_ep))
+        onehot = jax.nn.one_hot(dest, n_ep, dtype=jnp.int32)
+        slot = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1
+        keep = slot < cap
+        src_rows = jnp.repeat(jnp.arange(tl), K)
+        didx = dest
+        sidx = jnp.where(keep, slot, cap)                          # cap -> dropped
+        send_x = jnp.zeros((n_ep, cap, D), x_l.dtype)
+        send_x = send_x.at[didx, sidx].set(x_me[src_rows], mode="drop")
+        send_e = jnp.full((n_ep, cap), E, jnp.int32)
+        send_e = send_e.at[didx, sidx].set(flat_e, mode="drop")
+        recv_x = jax.lax.all_to_all(send_x, ep_axes, 0, 0)         # [n_ep,cap,D]
+        recv_e = jax.lax.all_to_all(send_e, ep_axes, 0, 0)
+        rx = recv_x.reshape(n_ep * cap, D)
+        re = recv_e.reshape(n_ep * cap)
+        valid = re < E
+        local_e = jnp.where(valid, re - m * e_local, e_local - 1)
+        order = jnp.argsort(local_e)
+        xs = rx[order]
+        group_sizes = jnp.bincount(local_e, length=e_local).astype(jnp.int32)
+        ys = _ragged_ffn(wg.astype(x_l.dtype), wu.astype(x_l.dtype),
+                         wd.astype(x_l.dtype), xs, group_sizes, rot=rot)
+        ys = jnp.where(valid[order][:, None], ys, 0.0)
+        y_sorted_back = jnp.zeros_like(ys).at[order].set(ys)
+        y_back = jax.lax.all_to_all(y_sorted_back.reshape(n_ep, cap, D),
+                                    ep_axes, 0, 0)
+        gathered = jnp.where(keep[:, None],
+                             y_back[didx, jnp.minimum(sidx, cap - 1)], 0.0)
+        y_tok = jnp.zeros((tl, K, D), x_l.dtype)
+        karr = jnp.tile(jnp.arange(K), tl)
+        y_tok = y_tok.at[src_rows, karr].add(gathered)
+        y_me = (y_tok * w[..., None].astype(x_l.dtype)).sum(1)     # [tl,D]
+        if rep_axes:
+            y_me = jax.lax.all_gather(y_me, rep_axes, tiled=True)
+        return y_me, aux[None]
+
+    fn = shard_map(
+        psum_fn if use_psum_path else a2a_fn, mesh=mesh,
+        in_specs=(P(dp_spec, None), P(None, None),
+                  (P(None) if rb is not None else None),
+                  P(ep_spec, None, None), P(ep_spec, None, None),
+                  P(ep_spec, None, None)),
+        out_specs=(P(dp_spec, None), P(dp_spec)),
+        check_rep=False)
+    y, aux = fn(x, p["router"], rb, p["w_gate"], p["w_up"], p["w_down"])
+    return y, jnp.mean(aux)
+
+
+def moe_forward(cfg: ModelConfig, p: dict, x: jax.Array, shd=NO_SHARD,
+                mesh=None, rot=None) -> Tuple[jax.Array, jax.Array]:
+    """x [B,S,D] -> (y [B,S,D], aux_loss). Adds shared experts if configured."""
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    if cfg.moe_impl == "ragged":
+        if mesh is not None and "model" in mesh.shape and mesh.shape["model"] > 1:
+            dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+            ep_axis = ("data", "model") if cfg.ep_axes == "all" else "model"
+            y, aux = moe_ragged_ep(cfg, p, xt, mesh, ep_axis=ep_axis,
+                                   dp_axes=dp_axes, rot=rot)
+        else:
+            y, aux = moe_ragged_local(cfg, p, xt, rot=rot)
+    else:
+        y, aux = moe_einsum(cfg, p, xt, shd=shd, rot=rot)
+    y = y.reshape(B, S, D)
+    if cfg.n_shared_experts:
+        y = y + mlp_forward(cfg, p["shared"], x, shd=shd, rot=rot)
+    return y, aux

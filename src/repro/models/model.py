@@ -1,0 +1,463 @@
+"""Top-level functional model API for all assigned architectures.
+
+    init_params(cfg, key)                      -> params pytree
+    forward(cfg, params, tokens, ...)          -> (logits, aux)
+    loss_fn(cfg, params, batch, ...)           -> (loss, metrics)
+    prefill(cfg, params, tokens, ...)          -> (logits, cache)
+    decode_step(cfg, params, token, cache, pos)-> (logits, cache)
+
+Caches are stacked over layers (leading dim) and consumed/produced by
+lax.scan — identical structure across prefill/decode so serve_step lowers
+with a fixed-size cache (decode shapes: cache length == shape.seq_len).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models.common import (NO_SHARD, apply_norm, cross_entropy,
+                                 norm_params, softcap)
+
+
+# --------------------------------------------------------------------------- #
+# Init
+# --------------------------------------------------------------------------- #
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 16)
+    D, V, L = cfg.d_model, cfg.padded_vocab, cfg.n_layers
+    p = {"embed": (jax.random.normal(ks[0], (V, D), jnp.float32) * 0.02).astype(dt)}
+    if cfg.pos_embed == "learned":
+        p["pos_dec"] = (jax.random.normal(ks[1], (cfg.max_seq_len, D),
+                                          jnp.float32) * 0.01).astype(dt)
+        if cfg.is_encoder_decoder:
+            p["pos_enc"] = (jax.random.normal(ks[2], (cfg.encoder_seq, D),
+                                              jnp.float32) * 0.01).astype(dt)
+
+    if cfg.family == "ssm":
+        p["layers"] = tfm.stacked(lambda k: tfm.mamba_block_params(cfg, k),
+                                  jax.random.split(ks[3], L))
+    elif cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        n_groups, rest = L // every, L % every
+        gkeys = jax.random.split(ks[3], n_groups * every).reshape(n_groups, every, 2)
+        p["mamba_groups"] = jax.vmap(jax.vmap(
+            lambda k: tfm.mamba_block_params(cfg, k)))(gkeys)
+        if rest:
+            p["mamba_rest"] = tfm.stacked(
+                lambda k: tfm.mamba_block_params(cfg, k),
+                jax.random.split(ks[4], rest))
+        p["shared"] = tfm.dense_block_params(cfg, ks[5])
+    elif cfg.is_encoder_decoder:
+        p["enc_layers"] = tfm.stacked(
+            lambda k: tfm.dense_block_params(cfg, k),
+            jax.random.split(ks[3], cfg.n_encoder_layers))
+        p["dec_layers"] = tfm.stacked(
+            lambda k: tfm.dense_block_params(cfg, k, cross_attn=True),
+            jax.random.split(ks[4], L))
+        p["enc_norm"] = norm_params(cfg, D)
+    elif cfg.n_experts and cfg.n_dense_layers:
+        p["dense_layers"] = tfm.stacked(
+            lambda k: tfm.dense_block_params(cfg, k),
+            jax.random.split(ks[3], cfg.n_dense_layers))
+        p["moe_layers"] = tfm.stacked(
+            lambda k: tfm.dense_block_params(cfg, k, use_moe=True),
+            jax.random.split(ks[4], L - cfg.n_dense_layers))
+    else:
+        p["layers"] = tfm.stacked(
+            lambda k: tfm.dense_block_params(cfg, k, use_moe=bool(cfg.n_experts)),
+            jax.random.split(ks[3], L))
+
+    p["final_norm"] = norm_params(cfg, D)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(ks[6], (V, D), jnp.float32)
+                        / math.sqrt(D)).astype(dt)
+    if cfg.mtp_depth:
+        p["mtp"] = {
+            "proj": (jax.random.normal(ks[7], (D, 2 * D), jnp.float32)
+                     / math.sqrt(2 * D)).astype(dt),
+            "norm": norm_params(cfg, D),
+            "block": tfm.dense_block_params(cfg, ks[8]),
+        }
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# Shared pieces
+# --------------------------------------------------------------------------- #
+def _embed(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    return x
+
+
+def _head(cfg: ModelConfig, params: dict, x: jax.Array, shd=NO_SHARD) -> jax.Array:
+    # fusion (core/rotations.py) unties embeddings: prefer lm_head if present
+    w = params["lm_head"] if "lm_head" in params else params["embed"]
+    logits = jnp.einsum("bsd,vd->bsv", x, w.astype(x.dtype))
+    if "lm_head_bias" in params:
+        logits = logits + params["lm_head_bias"].astype(logits.dtype)
+    logits = softcap(logits, cfg.logit_softcap)
+    return shd(logits, "logits")
+
+
+def _windows(cfg: ModelConfig, n: int) -> jnp.ndarray:
+    return tfm.layer_windows(cfg, n)
+
+
+# --------------------------------------------------------------------------- #
+# Forward (train / eval full sequence)
+# --------------------------------------------------------------------------- #
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            frames: Optional[jax.Array] = None, shd=NO_SHARD, mesh=None,
+            rot=None, want_mtp: bool = False):
+    """tokens [B,S] -> (logits [B,S,V], aux dict)."""
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = _embed(cfg, params, tokens)
+    x = shd(x, "act_bsd")
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "ssm":
+        x = tfm.mamba_stack(cfg, params["layers"], x, shd=shd)
+    elif cfg.family == "hybrid":
+        x = tfm.hybrid_stack(cfg, params, x, positions, shd=shd, mesh=mesh,
+                             rot=rot)
+    elif cfg.is_encoder_decoder:
+        enc = frames.astype(x.dtype) + params["pos_enc"][None].astype(x.dtype)
+        enc, _ = tfm.dense_stack(cfg, params["enc_layers"], enc,
+                                 jnp.arange(enc.shape[1], dtype=jnp.int32),
+                                 _windows(cfg, cfg.n_encoder_layers),
+                                 shd=shd, causal=False)
+        enc = apply_norm(cfg, params["enc_norm"], enc)
+        x = x + params["pos_dec"][positions][None].astype(x.dtype)
+        x, _ = tfm.dense_stack(cfg, params["dec_layers"], x, positions,
+                               _windows(cfg, cfg.n_layers), shd=shd,
+                               encoder_out=enc)
+    elif "dense_layers" in params:        # deepseek: dense prefix + moe rest
+        x, _ = tfm.dense_stack(cfg, params["dense_layers"], x, positions,
+                               _windows(cfg, cfg.n_dense_layers), shd=shd,
+                               mesh=mesh, rot=rot)
+        x, aux = tfm.dense_stack(cfg, params["moe_layers"], x, positions,
+                                 _windows(cfg, cfg.n_layers - cfg.n_dense_layers),
+                                 shd=shd, mesh=mesh, rot=rot)
+    else:
+        x, aux = tfm.dense_stack(cfg, params["layers"], x, positions,
+                                 _windows(cfg, cfg.n_layers), shd=shd,
+                                 mesh=mesh, rot=rot)
+
+    h_final = x
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = _head(cfg, params, x, shd=shd)
+    extras = {"aux": aux}
+    if want_mtp and cfg.mtp_depth and "mtp" in params:
+        # MTP (deepseek-v3): predict token t+2 from h_t combined with emb_{t+1}
+        mp = params["mtp"]
+        h = apply_norm(cfg, mp["norm"], h_final[:, :-1])
+        nxt = _embed(cfg, params, tokens[:, 1:])
+        comb = jnp.concatenate([h, nxt], axis=-1)
+        hin = jnp.einsum("bsk,dk->bsd", comb, mp["proj"].astype(comb.dtype))
+        hmtp, _ = tfm.dense_block(cfg, mp["block"], hin, positions[:-1],
+                                  shd=shd, mesh=mesh)
+        extras["mtp_logits"] = _head(cfg, params, hmtp, shd=shd)
+    return logits, extras
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, shd=NO_SHARD,
+            mesh=None, rot=None):
+    logits, extras = forward(cfg, params, batch["tokens"],
+                             frames=batch.get("frames"), shd=shd, mesh=mesh,
+                             rot=rot, want_mtp=True)
+    loss = cross_entropy(logits, batch["labels"], z_loss=cfg.z_loss)
+    metrics = {"ce": loss}
+    if cfg.n_experts:
+        loss = loss + cfg.moe_aux_loss * extras["aux"]
+        metrics["aux"] = extras["aux"]
+    if "mtp_logits" in extras:
+        mtp_loss = cross_entropy(extras["mtp_logits"], batch["labels"][:, 1:])
+        loss = loss + 0.3 * mtp_loss
+        metrics["mtp"] = mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# --------------------------------------------------------------------------- #
+# Prefill: full forward that also builds the cache
+# --------------------------------------------------------------------------- #
+def _dense_stack_prefill(cfg, layers, x, positions, windows, shd=NO_SHARD,
+                         mesh=None, rot=None, encoder_out=None):
+    def body(carry, xs):
+        x, = carry
+        lp, win = xs
+        h = apply_norm(cfg, lp["ln1"], x)
+        h, kv = attn_mod.attention(cfg, lp["attn"], h, positions, window=win,
+                                   shd=shd, rot=rot, return_kv=True)
+        if cfg.sandwich_norm:
+            h = apply_norm(cfg, lp["post_ln1"], h)
+        x = x + h
+        cross_kv = None
+        if encoder_out is not None:
+            h = apply_norm(cfg, lp["ln_x"], x)
+            h, cross_kv = attn_mod.attention(cfg, lp["xattn"], h, positions,
+                                             shd=shd, kv_override=encoder_out,
+                                             return_kv=True)
+            x = x + h
+        h = apply_norm(cfg, lp["ln2"], x)
+        if "moe" in lp:
+            h, _ = ffn_mod.moe_forward(cfg, lp["moe"], h, shd=shd, mesh=mesh,
+                                       rot=rot)
+        else:
+            h = ffn_mod.mlp_forward(cfg, lp["mlp"], h, shd=shd, rot=rot)
+        if cfg.sandwich_norm:
+            h = apply_norm(cfg, lp["post_ln2"], h)
+        x = shd(x + h, "act_bsd")
+        ys = (kv, cross_kv) if encoder_out is not None else kv
+        return (x,), ys
+
+    (x,), kvs = jax.lax.scan(body, (x,), (layers, windows))
+    return x, kvs
+
+
+def _mamba_stack_prefill(cfg, layers, x, shd=NO_SHARD):
+    def body(x, lp):
+        h = apply_norm(cfg, lp["ln"], x)
+        out, st = ssm_mod.mamba2_forward(cfg, lp["mixer"], h, shd=shd,
+                                         return_state=True)
+        return shd(x + out, "act_bsd"), st
+    return jax.lax.scan(body, x, layers)
+
+
+def _kv_cache_dict(cfg, kvs):
+    if cfg.attn_type == "mla":
+        return {"ckv": kvs[0], "krope": kvs[1]}
+    return {"k": kvs[0], "v": kvs[1]}
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            frames: Optional[jax.Array] = None, shd=NO_SHARD, mesh=None,
+            rot=None):
+    """Returns (logits [B,S,V], cache)."""
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = _embed(cfg, params, tokens)
+    cache = {}
+
+    if cfg.family == "ssm":
+        x, st = _mamba_stack_prefill(cfg, params["layers"], x, shd=shd)
+        cache["ssm"] = st
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def group_body(x, glp):
+            x, st = _mamba_stack_prefill(cfg, glp, x, shd=shd)
+            h = apply_norm(cfg, shared["ln1"], x)
+            h, kv = attn_mod.attention(cfg, shared["attn"], h, positions,
+                                       shd=shd, rot=rot, return_kv=True)
+            x = x + h
+            h = apply_norm(cfg, shared["ln2"], x)
+            x = x + ffn_mod.mlp_forward(cfg, shared["mlp"], h, shd=shd, rot=rot)
+            return x, (st, kv)
+
+        x, (st_g, kv) = jax.lax.scan(group_body, x, params["mamba_groups"])
+        cache["ssm_groups"] = st_g
+        cache["kv_shared"] = _kv_cache_dict(cfg, kv)
+        if "mamba_rest" in params:
+            x, st_r = _mamba_stack_prefill(cfg, params["mamba_rest"], x, shd=shd)
+            cache["ssm_rest"] = st_r
+    elif cfg.is_encoder_decoder:
+        enc = frames.astype(x.dtype) + params["pos_enc"][None].astype(x.dtype)
+        enc, _ = tfm.dense_stack(cfg, params["enc_layers"], enc,
+                                 jnp.arange(enc.shape[1], dtype=jnp.int32),
+                                 _windows(cfg, cfg.n_encoder_layers),
+                                 shd=shd, causal=False)
+        enc = apply_norm(cfg, params["enc_norm"], enc)
+        x = x + params["pos_dec"][positions][None].astype(x.dtype)
+        x, (kv, cross_kv) = _dense_stack_prefill(
+            cfg, params["dec_layers"], x, positions,
+            _windows(cfg, cfg.n_layers), shd=shd, encoder_out=enc)
+        cache["kv"] = _kv_cache_dict(cfg, kv)
+        cache["cross"] = {"k": cross_kv[0], "v": cross_kv[1]}
+    elif "dense_layers" in params:
+        x, kv_d = _dense_stack_prefill(cfg, params["dense_layers"], x,
+                                       positions,
+                                       _windows(cfg, cfg.n_dense_layers),
+                                       shd=shd, mesh=mesh, rot=rot)
+        x, kv_m = _dense_stack_prefill(cfg, params["moe_layers"], x, positions,
+                                       _windows(cfg, cfg.n_layers - cfg.n_dense_layers),
+                                       shd=shd, mesh=mesh, rot=rot)
+        cache["kv_dense"] = _kv_cache_dict(cfg, kv_d)
+        cache["kv_moe"] = _kv_cache_dict(cfg, kv_m)
+    else:
+        x, kv = _dense_stack_prefill(cfg, params["layers"], x, positions,
+                                     _windows(cfg, cfg.n_layers), shd=shd,
+                                     mesh=mesh, rot=rot)
+        cache["kv"] = _kv_cache_dict(cfg, kv)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = _head(cfg, params, x, shd=shd)
+    return logits, cache
+
+
+# --------------------------------------------------------------------------- #
+# Decode step
+# --------------------------------------------------------------------------- #
+def _dense_decode_stack(cfg, layers, x, kv_cache, pos, windows, shd=NO_SHARD,
+                        mesh=None, rot=None, cross=None, cp_fn=None):
+    def body(x, xs):
+        if cross is not None:
+            lp, cache_l, cr_l, win = xs
+        else:
+            lp, cache_l, win = xs
+            cr_l = None
+        h = apply_norm(cfg, lp["ln1"], x)
+        h, new_cache = attn_mod.attn_decode(cfg, lp["attn"], h, cache_l, pos,
+                                            window=win, shd=shd, rot=rot,
+                                            cp_fn=cp_fn)
+        if cfg.sandwich_norm:
+            h = apply_norm(cfg, lp["post_ln1"], h)
+        x = x + h
+        if cr_l is not None:
+            h = apply_norm(cfg, lp["ln_x"], x)
+            B = h.shape[0]
+            hd = cfg.resolved_head_dim
+            from repro.models.common import linear
+            q = linear(h, lp["xattn"]["wq"], lp["xattn"].get("bq"))
+            q = q.reshape(B, cfg.n_heads, hd)
+            Se = cr_l["k"].shape[1]
+            kp = jnp.arange(Se, dtype=jnp.int32)
+            o = attn_mod.decode_attn_scores(
+                q, cr_l["k"], cr_l["v"], kp,
+                jnp.full((B, 1), Se, jnp.int32))
+            o = linear(o.reshape(B, 1, -1), lp["xattn"]["wo"],
+                       lp["xattn"].get("bo"))
+            x = x + o
+        h = apply_norm(cfg, lp["ln2"], x)
+        if "moe" in lp:
+            h, _ = ffn_mod.moe_forward(cfg, lp["moe"], h, shd=shd, mesh=mesh,
+                                       rot=rot)
+        else:
+            h = ffn_mod.mlp_forward(cfg, lp["mlp"], h, shd=shd, rot=rot)
+        if cfg.sandwich_norm:
+            h = apply_norm(cfg, lp["post_ln2"], h)
+        x = x + h
+        return x, new_cache
+
+    xs = (layers, kv_cache, cross, windows) if cross is not None else \
+         (layers, kv_cache, windows)
+    x, new_cache = jax.lax.scan(body, x, xs)
+    return x, new_cache
+
+
+def _mamba_decode_stack(cfg, layers, x, cache, shd=NO_SHARD):
+    def body(x, xs):
+        lp, cache_l = xs
+        h = apply_norm(cfg, lp["ln"], x)
+        out, st = ssm_mod.mamba2_decode(cfg, lp["mixer"], h, cache_l, shd=shd)
+        return x + out, st
+    return jax.lax.scan(body, x, (layers, cache))
+
+
+def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, cache: dict,
+                pos, shd=NO_SHARD, mesh=None, rot=None, cp_fn=None):
+    """token [B,1] int32; pos scalar int32. Returns (logits [B,1,V], cache)."""
+    x = _embed(cfg, params, token)
+    new_cache = {}
+
+    if cfg.family == "ssm":
+        x, st = _mamba_decode_stack(cfg, params["layers"], x, cache["ssm"],
+                                    shd=shd)
+        new_cache["ssm"] = st
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def group_body(x, xs):
+            glp, st_l, kv_l = xs
+            x, st = _mamba_decode_stack(cfg, glp, x, st_l, shd=shd)
+            h = apply_norm(cfg, shared["ln1"], x)
+            h, new_kv = attn_mod.attn_decode(cfg, shared["attn"], h, kv_l, pos,
+                                             shd=shd, rot=rot, cp_fn=cp_fn)
+            x = x + h
+            h = apply_norm(cfg, shared["ln2"], x)
+            x = x + ffn_mod.mlp_forward(cfg, shared["mlp"], h, shd=shd, rot=rot)
+            return x, (st, new_kv)
+
+        x, (st_g, kv) = jax.lax.scan(
+            group_body, x,
+            (params["mamba_groups"], cache["ssm_groups"], cache["kv_shared"]))
+        new_cache["ssm_groups"] = st_g
+        new_cache["kv_shared"] = kv
+        if "mamba_rest" in params:
+            x, st_r = _mamba_decode_stack(cfg, params["mamba_rest"], x,
+                                          cache["ssm_rest"], shd=shd)
+            new_cache["ssm_rest"] = st_r
+    elif cfg.is_encoder_decoder:
+        x = x + params["pos_dec"][pos][None, None].astype(x.dtype)
+        x, kv = _dense_decode_stack(cfg, params["dec_layers"], x, cache["kv"],
+                                    pos, _windows(cfg, cfg.n_layers), shd=shd,
+                                    cross=cache["cross"], cp_fn=cp_fn)
+        new_cache["kv"] = kv
+        new_cache["cross"] = cache["cross"]
+    elif "dense_layers" in params:
+        x, kv_d = _dense_decode_stack(cfg, params["dense_layers"], x,
+                                      cache["kv_dense"], pos,
+                                      _windows(cfg, cfg.n_dense_layers),
+                                      shd=shd, mesh=mesh, rot=rot, cp_fn=cp_fn)
+        x, kv_m = _dense_decode_stack(cfg, params["moe_layers"], x,
+                                      cache["kv_moe"], pos,
+                                      _windows(cfg, cfg.n_layers - cfg.n_dense_layers),
+                                      shd=shd, mesh=mesh, rot=rot, cp_fn=cp_fn)
+        new_cache["kv_dense"] = kv_d
+        new_cache["kv_moe"] = kv_m
+    else:
+        x, kv = _dense_decode_stack(cfg, params["layers"], x, cache["kv"], pos,
+                                    _windows(cfg, cfg.n_layers), shd=shd,
+                                    mesh=mesh, rot=rot, cp_fn=cp_fn)
+        new_cache["kv"] = kv
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = _head(cfg, params, x, shd=shd)
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# Empty cache factories (decode-shape dry-run: cache of seq_len, one new token)
+# --------------------------------------------------------------------------- #
+def make_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    if cfg.family == "ssm":
+        return {"ssm": ssm_mod.init_ssm_cache(cfg, batch, cfg.n_layers)}
+    if cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        n_groups, rest = cfg.n_layers // every, cfg.n_layers % every
+        c = {"ssm_groups": jax.tree.map(
+                lambda x: x.reshape((n_groups, every) + x.shape[1:]),
+                ssm_mod.init_ssm_cache(cfg, batch, n_groups * every)),
+             "kv_shared": attn_mod.init_cache(cfg, batch, max_seq, dtype,
+                                              n_layers=n_groups)}
+        if rest:
+            c["ssm_rest"] = ssm_mod.init_ssm_cache(cfg, batch, rest)
+        return c
+    if cfg.is_encoder_decoder:
+        hd = cfg.resolved_head_dim
+        return {"kv": attn_mod.init_cache(cfg, batch, max_seq, dtype),
+                "cross": {
+                    "k": jnp.zeros((cfg.n_layers, batch, cfg.encoder_seq,
+                                    cfg.n_kv_heads, hd), dtype),
+                    "v": jnp.zeros((cfg.n_layers, batch, cfg.encoder_seq,
+                                    cfg.n_kv_heads, hd), dtype)}}
+    if cfg.n_experts and cfg.n_dense_layers:
+        return {"kv_dense": attn_mod.init_cache(cfg, batch, max_seq, dtype,
+                                                n_layers=cfg.n_dense_layers),
+                "kv_moe": attn_mod.init_cache(
+                    cfg, batch, max_seq, dtype,
+                    n_layers=cfg.n_layers - cfg.n_dense_layers)}
+    return {"kv": attn_mod.init_cache(cfg, batch, max_seq, dtype)}

@@ -1,0 +1,208 @@
+"""Mamba-2 (SSD — state-space duality) in JAX.
+
+Training/prefill uses the chunked SSD algorithm (arXiv:2405.21060 §6): quadratic
+attention-like computation *within* chunks (MXU-friendly matmuls) + a linear
+recurrence *across* chunk states (lax.scan).  Decode is the O(1) recurrent step
+h <- exp(dt*A) h + dt*B x; y = C.h + D x.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import NO_SHARD, dense_init, linear, rmsnorm
+
+
+def ssm_params(cfg: ModelConfig, key) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    nh, gn = cfg.ssm_nheads, cfg.ssm_groups * cfg.ssm_state
+    conv_dim = cfg.conv_dim
+    d_in_proj = 2 * di + 2 * gn + nh
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(ks[2], (nh,), jnp.float32)
+    dt_init = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))   # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], (d_in_proj, d), d, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32)
+                   * (1.0 / cfg.ssm_conv)).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)).astype(dt),
+        "D": jnp.ones((nh,), dt),
+        "dt_bias": dt_bias.astype(dt),
+        "norm": {"scale": jnp.ones((di,), dt)},
+        "out_proj": dense_init(jax.random.fold_in(key, 7), (d, di), di, dt),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, gn, nh = cfg.d_inner, cfg.ssm_groups * cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn:]
+    assert dt.shape[-1] == nh
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width K. xbc [B,S,C]; w [K,C]."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    S = xbc.shape[1]
+    for i in range(K):   # K is tiny (4); unrolled taps
+        out = out + pad[:, i:i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def ssd_chunked(x: jax.Array, a: jax.Array, Bm: jax.Array, Cm: jax.Array,
+                dt: jax.Array, chunk: int,
+                h0: jax.Array | None = None) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan. x [B,S,H,P]; a=dt*A [B,S,H] (<=0); Bm/Cm [B,S,H,N]; dt [B,S,H].
+
+    Returns y [B,S,H,P] and final state [B,H,P,N].
+    """
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    f32 = jnp.float32
+    xc = x.reshape(B_, nc, chunk, H, P).astype(f32)
+    ac = a.reshape(B_, nc, chunk, H).astype(f32)
+    Bc = Bm.reshape(B_, nc, chunk, H, N).astype(f32)
+    Cc = Cm.reshape(B_, nc, chunk, H, N).astype(f32)
+    dtc = dt.reshape(B_, nc, chunk, H).astype(f32)
+
+    if h0 is None:
+        h0 = jnp.zeros((B_, H, P, N), f32)
+
+    def body(h, xs):
+        xq, aq, Bq, Cq, dq = xs                       # [B,chunk,...]
+        cum = jnp.cumsum(aq, axis=1)                  # inclusive [B,Q,H]
+        # intra-chunk: L[t,s] = exp(cum[t]-cum[s]) for t>=s
+        diff = cum[:, :, None, :] - cum[:, None, :, :]          # [B,t,s,H]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        L = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bthn,bshn->btsh", Cq, Bq) * L      # [B,t,s,H]
+        y = jnp.einsum("btsh,bsh,bshp->bthp", scores, dq, xq)
+        # carry-in contribution: decay exp(cum[t])
+        y = y + jnp.einsum("bthn,bhpn->bthp", Cq * jnp.exp(cum)[..., None], h)
+        # new chunk state
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)               # [B,Q,H]
+        s_c = jnp.einsum("bsh,bshn,bshp->bhpn", decay_end * dq, Bq, xq)
+        h_new = jnp.exp(cum[:, -1])[:, :, None, None] * h + s_c
+        return h_new, y
+
+    h_final, yc = jax.lax.scan(
+        body, h0,
+        (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(ac, 1, 0), jnp.moveaxis(Bc, 1, 0),
+         jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(dtc, 1, 0)))
+    y = jnp.moveaxis(yc, 0, 1).reshape(B_, nc * chunk, H, P)[:, :S]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_reference(x, a, Bm, Cm, dt, h0=None):
+    """Naive O(S) recurrent oracle for tests. Shapes as ssd_chunked."""
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    h = jnp.zeros((B_, H, P, N), jnp.float32) if h0 is None else h0
+    ys = []
+    for t in range(S):
+        h = (jnp.exp(a[:, t]).astype(jnp.float32)[:, :, None, None] * h
+             + jnp.einsum("bh,bhn,bhp->bhpn", dt[:, t].astype(jnp.float32),
+                          Bm[:, t].astype(jnp.float32), x[:, t].astype(jnp.float32)))
+        ys.append(jnp.einsum("bhn,bhpn->bhp", Cm[:, t].astype(jnp.float32), h))
+    return jnp.stack(ys, 1).astype(x.dtype), h
+
+
+def mamba2_forward(cfg: ModelConfig, p: dict, u: jax.Array,
+                   shd=NO_SHARD, return_state: bool = False):
+    """Full-sequence Mamba-2 mixer. u [B,S,D] -> [B,S,D] (+ state if asked)."""
+    B, S, _ = u.shape
+    H, P, N, G = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    di = cfg.d_inner
+    zxbcdt = linear(u, p["in_proj"])
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc_raw = xbc
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    x = xbc[..., :di].reshape(B, S, H, P)
+    Bm = xbc[..., di:di + G * N].reshape(B, S, G, N)
+    Cm = xbc[..., di + G * N:].reshape(B, S, G, N)
+    rep = H // G
+    Bm = jnp.repeat(Bm, rep, axis=2)
+    Cm = jnp.repeat(Cm, rep, axis=2)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))        # [B,S,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                    # [H]
+    a = dt * A
+    x = shd(x, "ssm_bshp")
+    y, h_final = ssd_chunked(x, a, Bm, Cm, dt, cfg.ssm_chunk)
+    y = y + x.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"]["scale"],
+                cfg.norm_eps)
+    out = linear(y.astype(u.dtype), p["out_proj"])
+    if return_state:
+        K = cfg.ssm_conv
+        state = {"conv": xbc_raw[:, -(K - 1):].astype(jnp.float32),
+                 "h": h_final}
+        return out, state
+    return out
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, n_layers: int,
+                   dtype=jnp.float32) -> dict:
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, cfg.conv_dim), dtype),
+        "h": jnp.zeros((n_layers, batch, cfg.ssm_nheads, cfg.ssm_head_dim,
+                        cfg.ssm_state), dtype),
+    }
+
+
+def mamba2_decode(cfg: ModelConfig, p: dict, u: jax.Array, cache: dict,
+                  shd=NO_SHARD) -> Tuple[jax.Array, dict]:
+    """Single-token recurrent step. u [B,1,D]; cache {'conv','h'} per layer."""
+    B = u.shape[0]
+    H, P, N, G = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    di = cfg.d_inner
+    zxbcdt = linear(u[:, 0], p["in_proj"])                           # [B, dproj]
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    # conv state: window of last K-1 inputs
+    window = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)   # [B,K,C]
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    xbc_c = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)).astype(u.dtype)
+    new_conv = window[:, 1:]
+
+    x = xbc_c[..., :di].reshape(B, H, P)
+    Bm = xbc_c[..., di:di + G * N].reshape(B, G, N)
+    Cm = xbc_c[..., di + G * N:].reshape(B, G, N)
+    rep = H // G
+    Bm = jnp.repeat(Bm, rep, axis=1)
+    Cm = jnp.repeat(Cm, rep, axis=1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))          # [B,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h = cache["h"].astype(jnp.float32)
+    h = (jnp.exp(dt * A)[:, :, None, None] * h
+         + jnp.einsum("bh,bhn,bhp->bhpn", dt, Bm.astype(jnp.float32),
+                      x.astype(jnp.float32)))
+    y = jnp.einsum("bhn,bhpn->bhp", Cm.astype(jnp.float32), h)
+    y = y + x.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"]["scale"],
+                cfg.norm_eps)
+    out = linear(y[:, None].astype(u.dtype), p["out_proj"])
+    return out, {"conv": new_conv, "h": h.astype(cache["h"].dtype)}

@@ -1,0 +1,157 @@
+"""Block assembly: scan-over-layers transformer stacks for every family.
+
+Layer stacks are homogeneous pytrees with a leading layer dim consumed by
+``lax.scan`` (keeps HLO compact — essential for the 512-device dry-run).
+Heterogeneous patterns are expressed structurally:
+  * gemma2 local/global      — per-layer scalar flag array scanned as xs
+  * deepseek dense-then-moe  — two scans (dense prefix, MoE rest)
+  * zamba2 hybrid            — nested scan: groups of N mamba layers, the
+                               *shared* attention block applied between groups
+  * whisper enc-dec          — separate encoder and decoder scans
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import NO_SHARD, apply_norm, norm_params
+
+
+# --------------------------------------------------------------------------- #
+# Per-layer parameter factories
+# --------------------------------------------------------------------------- #
+def dense_block_params(cfg: ModelConfig, key, use_moe: bool = False,
+                       cross_attn: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": norm_params(cfg, cfg.d_model),
+        "attn": attn_mod.attn_params(cfg, ks[0]),
+        "ln2": norm_params(cfg, cfg.d_model),
+    }
+    if use_moe:
+        p["moe"] = ffn_mod.moe_params(cfg, ks[1])
+    else:
+        p["mlp"] = ffn_mod.mlp_params(cfg, ks[1])
+    if cross_attn:
+        p["ln_x"] = norm_params(cfg, cfg.d_model)
+        p["xattn"] = attn_mod.attn_params(cfg, ks[2])
+    if cfg.sandwich_norm:
+        p["post_ln1"] = norm_params(cfg, cfg.d_model)
+        p["post_ln2"] = norm_params(cfg, cfg.d_model)
+    return p
+
+
+def mamba_block_params(cfg: ModelConfig, key) -> dict:
+    return {"ln": norm_params(cfg, cfg.d_model),
+            "mixer": ssm_mod.ssm_params(cfg, key)}
+
+
+def stacked(fn, keys):
+    return jax.vmap(fn)(keys)
+
+
+# --------------------------------------------------------------------------- #
+# Block forwards
+# --------------------------------------------------------------------------- #
+def dense_block(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+                window: jax.Array | int = 0, shd=NO_SHARD, mesh=None, rot=None,
+                encoder_out: Optional[jax.Array] = None,
+                causal: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x, aux_loss)."""
+    h = apply_norm(cfg, p["ln1"], x)
+    h = attn_mod.attention(cfg, p["attn"], h, positions, causal=causal,
+                           window=window, shd=shd, rot=rot)
+    if cfg.sandwich_norm:
+        h = apply_norm(cfg, p["post_ln1"], h)
+    x = x + h
+    if encoder_out is not None:
+        h = apply_norm(cfg, p["ln_x"], x)
+        h = attn_mod.attention(cfg, p["xattn"], h, positions, shd=shd,
+                               kv_override=encoder_out)
+        x = x + h
+    h = apply_norm(cfg, p["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        h, aux = ffn_mod.moe_forward(cfg, p["moe"], h, shd=shd, mesh=mesh, rot=rot)
+    else:
+        h = ffn_mod.mlp_forward(cfg, p["mlp"], h, shd=shd, rot=rot)
+    if cfg.sandwich_norm:
+        h = apply_norm(cfg, p["post_ln2"], h)
+    x = shd(x + h, "act_bsd")
+    return x, aux
+
+
+def mamba_block(cfg: ModelConfig, p: dict, x: jax.Array, shd=NO_SHARD
+                ) -> jax.Array:
+    h = apply_norm(cfg, p["ln"], x)
+    return shd(x + ssm_mod.mamba2_forward(cfg, p["mixer"], h, shd=shd), "act_bsd")
+
+
+# --------------------------------------------------------------------------- #
+# Stacks (full-sequence forward: train / prefill-without-cache)
+# --------------------------------------------------------------------------- #
+def _maybe_remat(cfg: ModelConfig, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def dense_stack(cfg: ModelConfig, layers: dict, x, positions, windows,
+                shd=NO_SHARD, mesh=None, rot=None, encoder_out=None,
+                causal=True):
+    """layers: stacked params; windows: per-layer int32 array (0 = global)."""
+    def body(carry, xs):
+        x, aux = carry
+        lp, win = xs
+        x, a = dense_block(cfg, lp, x, positions, window=win, shd=shd,
+                           mesh=mesh, rot=rot, encoder_out=encoder_out,
+                           causal=causal)
+        return (x, aux + a), None
+    (x, aux), _ = jax.lax.scan(_maybe_remat(cfg, body), (x, 0.0),
+                               (layers, windows))
+    return x, aux
+
+
+def mamba_stack(cfg: ModelConfig, layers: dict, x, shd=NO_SHARD):
+    def body(x, lp):
+        return mamba_block(cfg, lp, x, shd=shd), None
+    x, _ = jax.lax.scan(_maybe_remat(cfg, body), x, layers)
+    return x
+
+
+def hybrid_stack(cfg: ModelConfig, params: dict, x, positions,
+                 shd=NO_SHARD, mesh=None, rot=None):
+    """Zamba2: groups of ``shared_attn_every`` mamba layers, then the shared
+    attention block; remainder layers at the end."""
+    shared = params["shared"]
+
+    def group_body(x, glp):
+        x = mamba_stack(cfg, glp, x, shd=shd)
+        x, _ = dense_block(cfg, shared, x, positions, shd=shd, mesh=mesh,
+                           rot=rot)
+        return x, None
+
+    x, _ = jax.lax.scan(_maybe_remat(cfg, group_body), x,
+                        params["mamba_groups"])
+    if "mamba_rest" in params:
+        x = mamba_stack(cfg, params["mamba_rest"], x, shd=shd)
+    return x
+
+
+# --------------------------------------------------------------------------- #
+# Layer-kind metadata
+# --------------------------------------------------------------------------- #
+def layer_windows(cfg: ModelConfig, n_layers: int) -> jnp.ndarray:
+    """Per-layer attention window (0 = global full attention)."""
+    if not cfg.layer_pattern:
+        return jnp.zeros((n_layers,), jnp.int32)
+    pat = [cfg.local_window if c == "L" else 0
+           for i, c in enumerate((cfg.layer_pattern
+                                  * (n_layers // len(cfg.layer_pattern) + 1))
+                                 [:n_layers])]
+    return jnp.asarray(pat, jnp.int32)

@@ -1,0 +1,11 @@
+"""Quantization substrate: RTN/GPTQ weights, per-token activations, KV cache."""
+from repro.quant.context import act_quant, get_act_quant, set_act_quant
+from repro.quant.gptq import gptq_quantize, hessian, recon_error, rtn_quantize
+from repro.quant.kv_cache import (QuantKV, dequantize_kv, kv_bytes,
+                                  make_kv_quant, quantize_kv)
+from repro.quant.qlinear import (memory_bytes, pack_params, qlinear_matmul,
+                                 quantize_params)
+from repro.quant.quantizers import (QTensor, dequant_act, dequant_weight,
+                                    fake_quant_act, fake_quant_kv,
+                                    fake_quant_weight, pack_int4, quant_act,
+                                    quant_weight, unpack_int4)

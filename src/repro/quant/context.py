@@ -1,0 +1,31 @@
+"""Trace-time quantization context.
+
+``models.common.linear`` consults this before every matmul, so enabling W?A?
+simulation requires zero plumbing through model code.  The hook is a
+trace-time constant: set it before tracing/jit, clear after.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Optional
+
+_STATE = {"act_quant": None}
+
+
+def set_act_quant(fn: Optional[Callable]) -> None:
+    _STATE["act_quant"] = fn
+
+
+def get_act_quant() -> Optional[Callable]:
+    return _STATE["act_quant"]
+
+
+@contextlib.contextmanager
+def act_quant(fn: Callable):
+    """with act_quant(lambda x: fake_quant_act(x, 4)): ... trace model ..."""
+    prev = _STATE["act_quant"]
+    _STATE["act_quant"] = fn
+    try:
+        yield
+    finally:
+        _STATE["act_quant"] = prev

@@ -1,0 +1,61 @@
+"""Quantized KV cache (paper: 4-bit KV with R3 online-Hadamard smoothing).
+
+Two layers of support:
+  * QDQ hook (``make_kv_quant``) plugged into the model's rot context — the
+    cache stores fake-quantized values, so decode quality matches the real
+    integer cache bit-for-bit.
+  * Integer storage (``QuantKV``) — int8-packed int4 codes + fp16 scales, the
+    serving memory format; ``kv_bytes`` reports the real footprint used by the
+    serve engine for capacity planning.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.quantizers import fake_quant_kv, pack_int4, unpack_int4
+
+
+def make_kv_quant(bits: int):
+    """Rot-context hook: quantize K/V (or MLA latent) at cache-write time."""
+    if bits >= 16:
+        return None
+    return lambda kv: fake_quant_kv(kv, bits)
+
+
+class QuantKV(NamedTuple):
+    q: jax.Array        # packed codes [B,S,H,hd/2] uint8 (4-bit) or int8 (8-bit)
+    scale: jax.Array    # [B,S,H,1] fp16
+    zero: jax.Array     # [B,S,H,1] fp16
+
+
+def quantize_kv(kv: jax.Array, bits: int = 4) -> QuantKV:
+    qmax = 2 ** bits - 1
+    lo = jnp.min(kv, axis=-1, keepdims=True)
+    hi = jnp.max(kv, axis=-1, keepdims=True)
+    scale = jnp.maximum((hi - lo) / qmax, 1e-8)
+    q = jnp.clip(jnp.round((kv - lo) / scale), 0, qmax).astype(jnp.uint8)
+    if bits == 4:
+        q = q[..., 0::2] | (q[..., 1::2] << 4)   # two nibbles per byte
+    return QuantKV(q, scale.astype(jnp.float16), lo.astype(jnp.float16))
+
+
+def dequantize_kv(qkv: QuantKV, bits: int = 4, dtype=jnp.bfloat16) -> jax.Array:
+    q = qkv.q
+    if bits == 4:
+        lo = (q & 0xF).astype(dtype)
+        hi = ((q >> 4) & 0xF).astype(dtype)
+        q = jnp.stack([lo, hi], axis=-1).reshape(q.shape[:-1] + (q.shape[-1] * 2,))
+    else:
+        q = q.astype(dtype)
+    return q * qkv.scale.astype(dtype) + qkv.zero.astype(dtype)
+
+
+def kv_bytes(batch: int, seq: int, n_layers: int, n_kv: int, hd: int,
+             bits: int) -> int:
+    """Cache footprint (codes + per-(token,head) fp16 scale/zero)."""
+    codes = batch * seq * n_layers * n_kv * hd * 2 * bits // 8
+    meta = batch * seq * n_layers * n_kv * 2 * 2 * 2   # scale+zero fp16, K and V
+    return codes + meta

@@ -1,0 +1,76 @@
+"""Quantized model parameters: QDQ simulation + int4-packed serving weights.
+
+``quantize_params``       — fake-quantize (QDQ) all projection weights (RTN or
+                            GPTQ given calibration inputs); quality-exact with
+                            the paper's W4 setting, runs through normal matmuls.
+``pack_params``           — int4-pack projection weights into QTensor storage
+                            (serving memory format; consumed by the
+                            quant_matmul kernel / qlinear_matmul fallback).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.quant.quantizers import (QTensor, dequant_weight, fake_quant_weight,
+                                    pack_int4, quant_weight, unpack_int4)
+
+# projection-weight leaf names (rotation consumers/producers); everything else
+# (norms, biases, embeddings, router, conv, SSM scalars) stays high precision.
+_WEIGHT_KEYS = {
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "fc1", "fc2",
+    "in_proj", "out_proj", "wq_a", "wq_b", "wkv_a", "wkv_b",
+}
+
+
+def _is_weight(path) -> bool:
+    last = path[-1]
+    name = getattr(last, "key", getattr(last, "name", None))
+    return name in _WEIGHT_KEYS
+
+
+def quantize_params(cfg: ModelConfig, params: dict,
+                    qcfg: Optional[QuantConfig] = None) -> dict:
+    """RTN fake-quant every projection weight (QDQ, same pytree)."""
+    qcfg = qcfg or cfg.quant
+
+    def fn(path, leaf):
+        if _is_weight(path) and leaf.ndim >= 2:
+            return fake_quant_weight(leaf, bits=qcfg.w_bits,
+                                     group=qcfg.w_group_size,
+                                     clip_ratio=qcfg.w_clip_ratio)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fn, params)
+
+
+def pack_params(cfg: ModelConfig, params: dict,
+                qcfg: Optional[QuantConfig] = None) -> dict:
+    """Replace projection weights with int4-packed QTensors (serving format)."""
+    qcfg = qcfg or cfg.quant
+
+    def fn(path, leaf):
+        if _is_weight(path) and leaf.ndim >= 2 and leaf.shape[-1] % 2 == 0:
+            qt = quant_weight(leaf, bits=qcfg.w_bits, group=qcfg.w_group_size,
+                              clip_ratio=qcfg.w_clip_ratio)
+            return QTensor(pack_int4(qt.q), qt.scale.astype(jnp.float16), None)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fn, params)
+
+
+def qlinear_matmul(x: jax.Array, qt: QTensor, group: int = -1) -> jax.Array:
+    """y = x @ dequant(qt).T — jnp fallback; the Pallas kernel fuses unpack+
+    dequant+matmul in VMEM (repro.kernels.quant_matmul)."""
+    q = unpack_int4(qt.q)
+    w = q.astype(x.dtype) * qt.scale.astype(x.dtype)
+    return jnp.einsum("...i,oi->...o", x, w)
+
+
+def memory_bytes(params: dict) -> int:
+    """Total storage bytes of a (possibly packed) param tree."""
+    leaves = jax.tree_util.tree_leaves(params)
+    return sum(int(l.size) * l.dtype.itemsize for l in leaves)

@@ -1,0 +1,114 @@
+"""Quantizers: RTN weights, per-token asymmetric activations, KV-cache quant.
+
+Paper settings (§5): per-channel symmetric weights (GPTQ-reconstructed),
+per-token asymmetric activations, 4-bit KV.  ``fake_*`` variants are QDQ
+(quantize->dequantize) used for quality evaluation — bit-exact with the real
+integer path; the integer path lives in qlinear.py / kernels.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QTensor(NamedTuple):
+    """Integer-quantized tensor + affine metadata."""
+    q: jax.Array            # int8 storage (int4 values occupy [-8, 7])
+    scale: jax.Array
+    zero: Optional[jax.Array]   # None => symmetric
+
+
+# --------------------------------------------------------------------------- #
+# Weights: per-output-channel symmetric (optionally grouped)
+# --------------------------------------------------------------------------- #
+def quant_weight(w: jax.Array, bits: int = 4, group: int = -1,
+                 clip_ratio: float = 1.0) -> QTensor:
+    """w [..., out, in] -> symmetric int; scale per (out-channel[, group])."""
+    qmax = 2 ** (bits - 1) - 1
+    if group > 0:
+        shp = w.shape
+        wg = w.reshape(shp[:-1] + (shp[-1] // group, group))
+        amax = jnp.max(jnp.abs(wg), axis=-1, keepdims=True) * clip_ratio
+        scale = jnp.maximum(amax / qmax, 1e-8)
+        q = jnp.clip(jnp.round(wg / scale), -qmax - 1, qmax)
+        return QTensor(q.reshape(shp).astype(jnp.int8),
+                       scale.reshape(shp[:-1] + (shp[-1] // group,)), None)
+    amax = jnp.max(jnp.abs(w), axis=-1, keepdims=True) * clip_ratio
+    scale = jnp.maximum(amax / qmax, 1e-8)
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax)
+    return QTensor(q.astype(jnp.int8), scale, None)
+
+
+def dequant_weight(qt: QTensor, group: int = -1,
+                   dtype=jnp.float32) -> jax.Array:
+    if group > 0:
+        shp = qt.q.shape
+        qg = qt.q.reshape(shp[:-1] + (shp[-1] // group, group)).astype(dtype)
+        return (qg * qt.scale[..., None].astype(dtype)).reshape(shp)
+    return qt.q.astype(dtype) * qt.scale.astype(dtype)
+
+
+def fake_quant_weight(w: jax.Array, bits: int = 4, group: int = -1,
+                      clip_ratio: float = 1.0) -> jax.Array:
+    qt = quant_weight(w, bits=bits, group=group, clip_ratio=clip_ratio)
+    return dequant_weight(qt, group=group, dtype=w.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Activations: per-token asymmetric
+# --------------------------------------------------------------------------- #
+def quant_act(x: jax.Array, bits: int = 4) -> QTensor:
+    """x [..., d] -> asymmetric uint-range int; scale/zero per token (row)."""
+    qmax = 2 ** bits - 1
+    lo = jnp.min(x, axis=-1, keepdims=True)
+    hi = jnp.max(x, axis=-1, keepdims=True)
+    scale = jnp.maximum((hi - lo) / qmax, 1e-8)
+    q = jnp.clip(jnp.round((x - lo) / scale), 0, qmax)
+    return QTensor(q.astype(jnp.uint8), scale, lo)
+
+
+def dequant_act(qt: QTensor, dtype=jnp.float32) -> jax.Array:
+    return qt.q.astype(dtype) * qt.scale.astype(dtype) + qt.zero.astype(dtype)
+
+
+def fake_quant_act(x: jax.Array, bits: int = 4) -> jax.Array:
+    if bits >= 16:
+        return x
+    return dequant_act(quant_act(x, bits), dtype=x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# KV cache: per (token, head) asymmetric — paper's 4-bit KV setting
+# --------------------------------------------------------------------------- #
+def fake_quant_kv(kv: jax.Array, bits: int = 4) -> jax.Array:
+    """kv [..., hd]: affine per leading index (token x head)."""
+    if bits >= 16:
+        return kv
+    qmax = 2 ** bits - 1
+    lo = jnp.min(kv, axis=-1, keepdims=True)
+    hi = jnp.max(kv, axis=-1, keepdims=True)
+    scale = jnp.maximum((hi - lo) / qmax, 1e-8)
+    q = jnp.clip(jnp.round((kv - lo) / scale), 0, qmax)
+    return (q * scale + lo).astype(kv.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# int4 packing (two nibbles per int8 byte) — serving storage format
+# --------------------------------------------------------------------------- #
+def pack_int4(q: jax.Array) -> jax.Array:
+    """int8 values in [-8,7], last dim even -> packed uint8 [..., d/2]."""
+    lo = (q[..., 0::2] & 0xF).astype(jnp.uint8)
+    hi = (q[..., 1::2] & 0xF).astype(jnp.uint8)
+    return lo | (hi << 4)
+
+
+def unpack_int4(p: jax.Array) -> jax.Array:
+    """packed uint8 -> int8 in [-8,7], interleaved back."""
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = ((p >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(p.shape[:-1] + (p.shape[-1] * 2,))

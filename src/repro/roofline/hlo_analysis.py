@@ -1,0 +1,295 @@
+"""Scan-aware HLO cost analyzer for the roofline report.
+
+XLA's built-in ``cost_analysis()`` counts a ``while`` (lax.scan) body ONCE —
+useless for scan-over-layers models.  This module parses the *post-SPMD
+optimized* HLO text (``compiled.as_text()``, i.e. the per-device program),
+builds the computation call graph, extracts while-loop trip counts, and
+accumulates with multipliers:
+
+  * dot FLOPs (2 * prod(out) * prod(contracting))        -> compute term
+  * dot operand+output bytes (HBM traffic lower bound)   -> memory term
+  * collective payload bytes by op kind                  -> collective term
+
+All quantities are PER DEVICE (the partitioned module is the per-device
+program), which is exactly what the roofline wants.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALL_ATTR_RE = re.compile(
+    r"(?:to_apply|calls|body|condition|branch_computations)=\{?%?([\w\.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(dt_dims: Tuple[str, str]) -> int:
+    dims = dt_dims[1]
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: List[str] = field(default_factory=list)
+
+
+def split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if ((line.startswith("%") or line.startswith("ENTRY"))
+                and "(" in line and line.rstrip().endswith("{")):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    comps["__entry__"] = cur
+                continue
+        if cur is not None and stripped and stripped != "}":
+            cur.lines.append(stripped)
+        if not line.startswith(" ") and stripped == "}":
+            cur = None
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Max s32 constant in the while condition ~ scan trip count."""
+    best = 1
+    for line in cond.lines:
+        for c in _CONST_RE.findall(line):
+            best = max(best, int(c))
+    return best
+
+
+def compute_multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    entry = comps.get("__entry__")
+    mult: Dict[str, float] = {}
+    if entry is None:
+        return {name: 1.0 for name in comps}
+
+    def visit(comp: Computation, m: float):
+        if mult.get(comp.name, 0) >= m and comp.name in mult:
+            # keep the max multiplier path (a computation reached twice)
+            pass
+        mult[comp.name] = max(mult.get(comp.name, 0.0), m)
+        for line in comp.lines:
+            cb = _COND_BODY_RE.search(line)
+            if cb and " while(" in line:
+                cond_name, body_name = cb.group(1), cb.group(2)
+                cond = comps.get(cond_name)
+                body = comps.get(body_name)
+                trips = _trip_count(cond) if cond else 1
+                if cond:
+                    visit(cond, m * trips)
+                if body:
+                    visit(body, m * trips)
+                continue
+            for cal in _CALL_ATTR_RE.findall(line):
+                child = comps.get(cal)
+                if child and child.name != comp.name:
+                    visit(child, m)
+
+    visit(entry, 1.0)
+    return mult
+
+
+_DEF_RE = re.compile(r"^%?([\w\.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*(\([^)]*\)|\w+\[[\d,]*\](?:\{[\d,]*\})?)")
+_OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _first_shape(type_str: str):
+    m = _SHAPE_RE.findall(type_str)
+    return m[0] if m else None
+
+
+def _symbol_table(header_and_lines: List[str]) -> Dict[str, str]:
+    """Map value name -> type string (params + op results)."""
+    table: Dict[str, str] = {}
+    for line in header_and_lines:
+        d = _DEF_RE.match(line)
+        if d:
+            table[d.group(1)] = d.group(2)
+    return table
+
+
+def analyze_hlo(hlo: str) -> Dict[str, float]:
+    comps = split_computations(hlo)
+    mult = compute_multipliers(comps)
+    flops = 0.0
+    dot_bytes = 0.0
+    coll_bytes: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    coll_count = 0
+
+    # global symbol table: names are unique module-wide in optimized HLO
+    sym: Dict[str, str] = {}
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        for line in comp.lines:
+            d = _DEF_RE.match(line)
+            if d:
+                sym[d.group(1)] = line.split("=", 1)[1]
+        if name != "__entry__":
+            pass
+    # parameters appear in headers; re-scan raw text headers for param types
+    for line in hlo.splitlines():
+        if (line.startswith("%") or line.startswith("ENTRY")) and \
+                line.rstrip().endswith("{"):
+            for pname, ptype in _PARAM_RE.findall(line):
+                sym.setdefault(pname, ptype)
+
+    def operand_types(operand_str: str) -> List[str]:
+        return [sym.get(n, "") for n in _OPERAND_NAME_RE.findall(operand_str)]
+
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult.get(name, 1.0)
+        for line in comp.lines:
+            if " dot(" in line:
+                d = _DEF_RE.match(line)
+                if not d:
+                    continue
+                out_type = d.group(2)
+                osh = _first_shape(out_type)
+                if not osh:
+                    continue
+                out_elems = _shape_elems(osh)
+                operand_str = line[line.index("dot(") + 4:].split(")", 1)[0]
+                ops = operand_types(operand_str)
+                csize = 1
+                cm = _CONTRACT_RE.search(line)
+                if cm and ops:
+                    lsh = _first_shape(ops[0])
+                    lhs_dims = lsh[1].split(",") if (lsh and lsh[1]) else []
+                    for dd in (cm.group(1).split(",") if cm.group(1) else []):
+                        if dd and int(dd) < len(lhs_dims):
+                            csize *= int(lhs_dims[int(dd)])
+                flops += m * 2.0 * out_elems * csize
+                dot_bytes += m * (sum(_shape_bytes(t) for t in ops)
+                                  + _shape_bytes(out_type))
+                continue
+            for kind in _COLLECTIVES:
+                token = f" {kind}(" if f" {kind}(" in line else (
+                    f" {kind}-start(" if f" {kind}-start(" in line else None)
+                if token:
+                    d = _DEF_RE.match(line)
+                    out_type = d.group(2) if d else ""
+                    idx = line.index(token) + len(token)
+                    operand_str = line[idx:].split(")", 1)[0]
+                    op_bytes = sum(_shape_bytes(t)
+                                   for t in operand_types(operand_str))
+                    out_b = _shape_bytes(out_type)
+                    if kind == "all-gather":
+                        payload = out_b                      # receive n-1 shards
+                    elif kind == "all-reduce":
+                        payload = 2 * op_bytes               # reduce + broadcast
+                    else:                                    # rs / a2a / permute
+                        payload = op_bytes
+                    coll_bytes[kind] += m * payload
+                    coll_count += int(m)
+                    break
+
+    return {
+        "dot_flops": flops,
+        "dot_bytes": dot_bytes,
+        "collective_bytes": sum(coll_bytes.values()),
+        "collective_by_kind": coll_bytes,
+        "collective_count": coll_count,
+    }
+
+
+def top_collectives(hlo: str, k: int = 12) -> List[Tuple[float, str]]:
+    """The §Perf 'profile': largest collectives (bytes x multiplier) w/ shapes."""
+    comps = split_computations(hlo)
+    mult = compute_multipliers(comps)
+    sym: Dict[str, str] = {}
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        for line in comp.lines:
+            d = _DEF_RE.match(line)
+            if d:
+                sym[d.group(1)] = line.split("=", 1)[1]
+    items = []
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult.get(name, 1.0)
+        for line in comp.lines:
+            for kind in _COLLECTIVES:
+                token = f" {kind}(" if f" {kind}(" in line else (
+                    f" {kind}-start(" if f" {kind}-start(" in line else None)
+                if token:
+                    d = _DEF_RE.match(line)
+                    out_type = d.group(2) if d else "?"
+                    idx = line.index(token) + len(token)
+                    operand_str = line[idx:].split(")", 1)[0]
+                    names_ = _OPERAND_NAME_RE.findall(operand_str)
+                    op_b = sum(_shape_bytes(sym.get(n_, "")) for n_ in names_)
+                    out_b = _shape_bytes(out_type)
+                    payload = out_b if kind == "all-gather" else (
+                        2 * op_b if kind == "all-reduce" else op_b)
+                    meta = ""
+                    mm = re.search(r'op_name="([^"]*)"', line)
+                    if mm:
+                        meta = mm.group(1)[-70:]
+                    items.append((m * payload,
+                                  f"{kind} x{int(m)} {out_type[:48]} :: {meta}"))
+                    break
+    items.sort(reverse=True)
+    return items[:k]
+
+
+# --------------------------------------------------------------------------- #
+# Roofline terms (TPU v5e per chip)
+# --------------------------------------------------------------------------- #
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+
+
+def roofline_terms(stats: Dict[str, float]) -> Dict[str, float]:
+    t_compute = stats["dot_flops"] / PEAK_FLOPS
+    t_memory = stats["dot_bytes"] / HBM_BW
+    t_coll = stats["collective_bytes"] / ICI_BW
+    terms = {"t_compute": t_compute, "t_memory": t_memory,
+             "t_collective": t_coll}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom
+    total = max(t_compute, t_memory, t_coll)
+    terms["roofline_fraction"] = t_compute / total if total > 0 else 0.0
+    return terms

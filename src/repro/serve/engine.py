@@ -1,0 +1,124 @@
+"""Batched serving engine over a (quantized, rotated) model.
+
+Pipeline: quantize/fuse offline -> prefill the prompt batch -> lockstep decode
+with slot-based continuous batching (finished sequences are replaced by queued
+requests between decode steps).  The rot context carries the online R3/R4
+Hadamards + KV-quant hook, so the engine serves exactly the paper's Fig. 9
+data path (W4 weights, A-quant at linears, 4-bit KV).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.common import NO_SHARD
+from repro.quant import act_quant, fake_quant_act, kv_bytes, make_kv_quant
+from repro.quant.context import set_act_quant
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, rot=None, mesh=None,
+                 shd=NO_SHARD, batch_slots: int = 4, max_seq: int = 256,
+                 a_bits: int = 16, kv_bits: int = 16, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.slots = batch_slots
+        self.a_bits = a_bits
+        rot = dict(rot or {})
+        if kv_bits < 16 and rot.get("kv_quant") is None:
+            rot["kv_quant"] = make_kv_quant(kv_bits)
+        self.rot = rot
+        self.kv_bits = kv_bits
+
+        aq = (lambda x: fake_quant_act(x, a_bits)) if a_bits < 16 else None
+        set_act_quant(aq)
+        try:
+            from repro.train import steps as S
+            self._prefill = jax.jit(S.build_prefill(cfg, mesh=mesh, shd=shd,
+                                                    rot=self.rot))
+            self._decode = jax.jit(S.build_decode_step(cfg, mesh=mesh,
+                                                       shd=shd, rot=self.rot))
+        finally:
+            set_act_quant(None)
+        self._aq = aq
+
+    # ------------------------------------------------------------------ #
+    def generate(self, requests: List[Request], verbose: bool = False):
+        """Serve a request list with slot-based continuous batching."""
+        cfg = self.cfg
+        queue = list(requests)
+        active: List[Optional[Request]] = [None] * self.slots
+        # all prompts padded to the same length for lockstep prefill
+        plen = max(len(r.prompt) for r in queue)
+        B = self.slots
+
+        def take():
+            return queue.pop(0) if queue else None
+
+        for i in range(B):
+            active[i] = take()
+
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(active):
+            if r is not None:
+                toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
+        t0 = time.time()
+        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+        # grow cache to max_seq
+        cache = jax.tree.map(
+            lambda x: (jnp.pad(x, [(0, 0)] * 2
+                               + [(0, self.max_seq - x.shape[2])]
+                               + [(0, 0)] * (x.ndim - 3))
+                       if x.ndim >= 3 and x.shape[2] == plen else x), cache)
+        prefill_s = time.time() - t0
+
+        last = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
+        pos = plen
+        n_tokens = 0
+        t0 = time.time()
+        while any(r is not None for r in active) and pos < self.max_seq:
+            logits, cache = self._decode(self.params, last[:, None], cache,
+                                         jnp.int32(pos))
+            nxt = jnp.argmax(logits[:, 0, :cfg.vocab_size], axis=-1)
+            nxt_np = np.array(nxt)   # writable copy (slot refill overwrites)
+            for i, r in enumerate(active):
+                if r is None:
+                    continue
+                r.out.append(int(nxt_np[i]))
+                n_tokens += 1
+                if len(r.out) >= r.max_new:
+                    r.done = True
+                    active[i] = take()   # continuous batching: refill slot
+                    if active[i] is not None:
+                        # new request decodes from its prompt tail token
+                        nxt_np[i] = active[i].prompt[-1]
+            last = jnp.asarray(nxt_np)
+            pos += 1
+        decode_s = time.time() - t0
+        stats = {
+            "prefill_s": prefill_s,
+            "decode_s": decode_s,
+            "decode_tok_per_s": n_tokens / max(decode_s, 1e-9),
+            "kv_cache_bytes": kv_bytes(
+                B, self.max_seq, cfg.n_layers, max(cfg.n_kv_heads, 1),
+                cfg.resolved_head_dim or 1, self.kv_bits),
+        }
+        if verbose:
+            print(stats)
+        return requests, stats

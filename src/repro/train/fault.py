@@ -1,0 +1,74 @@
+"""Fault tolerance + straggler mitigation for the training loop.
+
+``FaultTolerantLoop`` wraps the per-step call: on any exception (device loss,
+preemption signal, injected fault) it restores the latest checkpoint and
+resumes — the trainer's state is always reconstructible from (ckpt, data
+seed, step).  ``StragglerMonitor`` keeps an EMA of step times and flags
+outliers; at scale the hook triggers re-slicing / hot-spare swap — here it
+records and (optionally) skips the slow step's non-critical work.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+
+@dataclass
+class StragglerMonitor:
+    threshold: float = 3.0        # x EMA counts as straggler
+    ema: float = 0.0
+    beta: float = 0.9
+    events: List[dict] = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        is_straggler = self.ema > 0 and dt > self.threshold * self.ema
+        if is_straggler:
+            self.events.append({"step": step, "dt": dt, "ema": self.ema})
+        # slow steps don't poison the EMA
+        self.ema = (self.beta * self.ema + (1 - self.beta) * dt
+                    if self.ema > 0 else dt) if not is_straggler else self.ema
+        return is_straggler
+
+
+class FaultTolerantLoop:
+    """Run steps with restore-on-failure semantics.
+
+    fn(state, batch) -> state  may raise; restore_fn() -> state reloads the
+    last durable checkpoint.  ``max_retries`` bounds consecutive failures
+    (a real cluster would also re-admit replacement hosts here).
+    """
+
+    def __init__(self, step_fn: Callable, restore_fn: Callable,
+                 max_retries: int = 3,
+                 monitor: Optional[StragglerMonitor] = None,
+                 on_fault: Optional[Callable] = None):
+        self.step_fn = step_fn
+        self.restore_fn = restore_fn
+        self.max_retries = max_retries
+        self.monitor = monitor or StragglerMonitor()
+        self.on_fault = on_fault
+        self.faults: List[dict] = []
+
+    def run(self, state, batches, n_steps: int, start_step: int = 0):
+        step = start_step
+        it = iter(batches)
+        retries = 0
+        while step < n_steps:
+            batch = next(it)
+            t0 = time.time()
+            try:
+                state = self.step_fn(state, batch)
+                retries = 0
+            except Exception as e:       # noqa: BLE001 — fault boundary
+                self.faults.append({"step": step, "error": repr(e)})
+                if self.on_fault is not None:
+                    self.on_fault(step, e)
+                retries += 1
+                if retries > self.max_retries:
+                    raise
+                state = self.restore_fn()
+                continue                 # retry the step from restored state
+            self.monitor.observe(step, time.time() - t0)
+            step += 1
+        return state, step

@@ -1,0 +1,75 @@
+"""AdamW + schedules, pure JAX (no optax in this environment).
+
+Optimizer state inherits parameter sharding (ZeRO: m/v shard exactly like the
+FSDP-sharded params).  ``opt_state_dtype`` from the config controls m/v
+precision (bf16 for the 671B config to fit HBM).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def init_opt_state(cfg: ModelConfig, params) -> OptState:
+    dt = jnp.dtype(cfg.opt_state_dtype)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+    return OptState(jnp.zeros((), jnp.int32), zeros,
+                    jax.tree.map(lambda z: z, zeros))
+
+
+def cosine_schedule(step, base_lr=3e-4, warmup=100, total=10000,
+                    min_ratio=0.1):
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / warmup
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+             for l in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_update(cfg: ModelConfig, params, grads, state: OptState,
+                 base_lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, wd=0.1,
+                 warmup=100, total=10000) -> Tuple[dict, OptState]:
+    step = state.step + 1
+    lr = cosine_schedule(step, base_lr, warmup, total)
+    t = step.astype(jnp.float32)
+    c1 = 1 - b1 ** t
+    c2 = 1 - b2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        u = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        pf = p.astype(jnp.float32)
+        p_new = pf - lr * (u + wd * pf)
+        return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                v_new.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, OptState(step, new_m, new_v)

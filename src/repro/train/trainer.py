@@ -1,0 +1,94 @@
+"""Trainer: jit'd step + data prefetch + async checkpoints + fault tolerance.
+
+Runs anywhere from 1 CPU device (tests, examples) to the production mesh
+(launch/train.py): the mesh/sharding objects are injected, the loop logic is
+identical.
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import Prefetcher, batches
+from repro.models import model as M
+from repro.models.common import NO_SHARD
+from repro.train import steps as S
+from repro.train.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.train.fault import FaultTolerantLoop, StragglerMonitor
+from repro.train.optimizer import init_opt_state
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, batch_size: int = 8,
+                 seq_len: int = 64, lr: float = 3e-3, mesh=None, shd=NO_SHARD,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+                 grad_accum: int = 1, seed: int = 0):
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.mesh = mesh
+        self.ckpt_dir = Path(ckpt_dir) if ckpt_dir else None
+        self.ckpt_every = ckpt_every
+        key = jax.random.PRNGKey(seed)
+        self.params = M.init_params(cfg, key)
+        self.opt_state = init_opt_state(cfg, self.params)
+        self.step_fn = jax.jit(S.build_train_step(
+            cfg, mesh=mesh, shd=shd, grad_accum=grad_accum, lr=lr))
+        self.data = batches(cfg, batch_size, seq_len, seed=seed)
+        self.ckpt = (AsyncCheckpointer(self.ckpt_dir)
+                     if self.ckpt_dir else None)
+        self.monitor = StragglerMonitor()
+        self.step = 0
+        self.history: list = []
+
+    # ------------------------------------------------------------------ core
+    def _one_step(self, state, batch):
+        params, opt_state = state
+        batch = jax.tree.map(jnp.asarray, batch)
+        params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+        self._last_metrics = jax.tree.map(float, metrics)
+        return params, opt_state
+
+    def _restore_latest(self):
+        step = latest_step(self.ckpt_dir)
+        assert step is not None, "fault before first checkpoint"
+        params = restore(self.ckpt_dir, step, self.params)
+        opt = restore(self.ckpt_dir / "opt", step, self.opt_state)
+        self.step = step
+        return params, opt
+
+    def train(self, n_steps: int, log_every: int = 10,
+              fault_hook=None, verbose: bool = True):
+        state = (self.params, self.opt_state)
+        loop = FaultTolerantLoop(
+            step_fn=(fault_hook or (lambda s, b: self._one_step(s, b))),
+            restore_fn=self._restore_latest, monitor=self.monitor)
+
+        it = iter(self.data)
+        t0 = time.time()
+        while self.step < n_steps:
+            n_chunk = min(self.ckpt_every if self.ckpt else log_every,
+                          n_steps - self.step)
+            state, self.step = loop.run(state, it, self.step + n_chunk,
+                                        start_step=self.step)
+            self.params, self.opt_state = state
+            m = dict(self._last_metrics)
+            m["step"] = self.step
+            self.history.append(m)
+            if verbose and (self.step % log_every == 0
+                            or self.step >= n_steps):
+                dt = time.time() - t0
+                print(f"step {self.step:5d} loss {m['loss']:.4f} "
+                      f"({dt:.1f}s)", flush=True)
+            if self.ckpt:
+                self.ckpt.save(self.step, self.params)     # async
+                from repro.train.checkpoint import save as _save
+                _save(self.ckpt_dir / "opt", self.step, self.opt_state)
+                self.ckpt.wait()
+        return self.history

@@ -1,0 +1,43 @@
+"""Calibration + fusion end-to-end for non-dense families: the whole
+capture -> QR-Orth/Whip -> fuse pipeline must preserve model outputs for
+SSM (R1 only), hybrid (R1 + shared R2) and enc-dec (dual R1 + R2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import calibrate_model, fuse_rotations
+from repro.core.rotations import _centering, online_hadamard
+from repro.data.pipeline import calibration_batch
+from repro.models import model as M
+
+
+@pytest.mark.parametrize("arch", ["mamba2-370m", "zamba2-7b",
+                                  "whisper-medium", "deepseek-v3-671b"])
+def test_calibrate_fuse_preserves_outputs(arch, key):
+    cfg = get_config(arch).reduced().replace(n_layers=2)
+    if cfg.shared_attn_every:
+        cfg = cfg.replace(n_layers=4)
+    params = M.init_params(cfg, key)
+    calib = jnp.asarray(calibration_batch(cfg, 2, 32))
+    kw = {}
+    if cfg.is_encoder_decoder:
+        kw["frames"] = jax.random.normal(key, (2, cfg.encoder_seq,
+                                               cfg.d_model))
+    pack = calibrate_model(cfg, params, calib, frames=kw.get("frames"),
+                           key=key, steps=10, lr_r1=0.05, lr_r2=0.05)
+    base, _ = M.forward(cfg, params, calib, **kw)
+    fcfg, fused = fuse_rotations(cfg, params, pack)
+    if cfg.is_encoder_decoder:
+        kw["frames"] = kw["frames"] @ _centering(cfg.d_model)
+        if "r1_enc" in pack:
+            kw["frames"] = kw["frames"] @ pack["r1_enc"]
+    out, _ = M.forward(fcfg, fused, calib, rot={"r4": online_hadamard}, **kw)
+    rel = float(jnp.max(jnp.abs(out - base))) / (float(jnp.std(base)) + 1e-9)
+    assert rel < 2e-2, f"{arch}: calibrated-fusion drift {rel}"
+    # the calibrated rotations are genuinely orthogonal
+    if "r1" in pack:
+        r = pack["r1"]
+        np.testing.assert_allclose(np.asarray(r @ r.T),
+                                   np.eye(r.shape[0]), atol=1e-4)

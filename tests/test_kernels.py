@@ -1,0 +1,82 @@
+"""Per-kernel allclose vs pure-jnp oracles: shape x dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.act_quant.ops import act_quant
+from repro.kernels.act_quant.ref import act_quant_ref
+from repro.kernels.hadamard.ops import online_hadamard as wht_op
+from repro.kernels.hadamard.ref import wht_ref
+from repro.kernels.quant_matmul.ops import w4_matmul
+from repro.kernels.quant_matmul.ref import w4_matmul_ref
+from repro.kernels.whip_rotate.ops import whip_rotate
+from repro.kernels.whip_rotate.ref import whip_rotate_grad_ref, whip_rotate_ref
+from repro.quant.quantizers import QTensor, pack_int4, quant_weight
+
+
+@pytest.mark.parametrize("n", [64, 128, 256, 112, 448, 2304])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wht_kernel_matches_ref(n, dtype, key):
+    x = jax.random.normal(key, (32, n), dtype)
+    out = wht_op(x)
+    ref = wht_ref(x)
+    tol = 5e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("shape", [(16, 64), (128, 96), (64, 512), (3, 33)])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_act_quant_kernel_matches_ref(shape, bits, key):
+    x = jax.random.normal(key, shape) * 3
+    q, s, z = act_quant(x, bits=bits)
+    qr, sr, zr = act_quant_ref(x, bits)
+    assert (np.asarray(q) == np.asarray(qr)).mean() > 0.999  # rounding ties
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("mkn", [(16, 64, 32), (64, 128, 96), (128, 256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_w4_matmul_kernel_matches_ref(mkn, dtype, key):
+    m, k, n = mkn
+    x = jax.random.normal(key, (m, k), dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (n, k))
+    qt = quant_weight(w, bits=4)
+    packed = QTensor(pack_int4(qt.q), qt.scale, None)
+    out = w4_matmul(x, packed)
+    ref = w4_matmul_ref(x, packed.q, packed.scale)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               rtol=1e-2)
+
+
+@pytest.mark.parametrize("mn", [(256, 32), (1024, 64), (512, 96)])
+def test_whip_rotate_value_and_grad(mn, key):
+    m, n = mn
+    x = jax.random.laplace(key, (m, n))
+    r = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 1), (n, n)))[0]
+    np.testing.assert_allclose(float(whip_rotate(x, r)),
+                               float(whip_rotate_ref(x, r)), rtol=1e-5)
+    g = jax.grad(lambda rr: whip_rotate(x, rr))(r)
+    g_ref = whip_rotate_grad_ref(x, r)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), atol=1e-5)
+
+
+def test_whip_rotate_kernel_drives_calibration(key):
+    """The fused Pallas whip_rotate is a drop-in objective for QR-Orth."""
+    from repro.core.qr_orth import qr_rotation, sgd_update
+    from repro.core.rotations import random_hadamard
+    x = jax.random.laplace(key, (512, 64))
+    z = random_hadamard(64, key)
+    m = jnp.zeros_like(z)
+    loss_fn = jax.jit(jax.value_and_grad(
+        lambda zz: whip_rotate(x, qr_rotation(zz))))
+    losses = []
+    for _ in range(6):
+        l, g = loss_fn(z)
+        losses.append(float(l))
+        z, m = sgd_update(z, m, g, 0.1)
+    assert losses[-1] < losses[0]

@@ -1,0 +1,67 @@
+"""Quantizer properties (hypothesis) + GPTQ behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (dequant_act, fake_quant_act, fake_quant_kv,
+                         fake_quant_weight, gptq_quantize, hessian, pack_int4,
+                         quant_act, recon_error, rtn_quantize, unpack_int4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8]),
+       st.integers(2, 16), st.integers(4, 64))
+def test_act_quant_roundtrip_bound(seed, bits, rows, cols):
+    """|x - QDQ(x)| <= scale/2 per element (asymmetric per-token affine)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols)) * 5
+    qt = quant_act(x, bits)
+    deq = dequant_act(qt)
+    err = jnp.abs(deq - x)
+    assert bool(jnp.all(err <= qt.scale * 0.5 + 1e-5))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_pack_unpack_int4_roundtrip(seed):
+    q = jax.random.randint(jax.random.PRNGKey(seed), (6, 32), -8, 8,
+                           dtype=jnp.int8)
+    assert bool((unpack_int4(pack_int4(q)) == q).all())
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([3, 4, 8]))
+def test_weight_quant_symmetric_bound(seed, bits):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (8, 32))
+    dq = fake_quant_weight(w, bits=bits)
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.max(jnp.abs(w), axis=-1, keepdims=True) / qmax
+    assert bool(jnp.all(jnp.abs(dq - w) <= scale * 0.5 + 1e-6))
+
+
+def test_quant_monotone_in_bits(key):
+    x = jax.random.laplace(key, (64, 128))
+    errs = [float(jnp.mean((fake_quant_act(x, b) - x) ** 2))
+            for b in (2, 4, 8)]
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_gptq_beats_rtn(key):
+    w = jax.random.normal(key, (32, 64))
+    # anisotropic inputs: GPTQ's advantage comes from the Hessian
+    scale = 1 + 9 * jax.random.uniform(jax.random.fold_in(key, 1), (1, 64))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (512, 64)) * scale
+    h = hessian(x)
+    wq, codes = gptq_quantize(w, h, bits=4)
+    e_gptq = float(recon_error(w, wq, x))
+    e_rtn = float(recon_error(w, rtn_quantize(w, 4), x))
+    assert e_gptq < e_rtn
+    assert codes.dtype == jnp.int8
+
+
+def test_kv_quant_error_small(key):
+    kv = jax.random.normal(key, (2, 8, 4, 32))
+    for bits, tol in [(4, 0.2), (8, 0.02)]:
+        d = fake_quant_kv(kv, bits)
+        assert float(jnp.max(jnp.abs(d - kv))) < tol * float(jnp.max(jnp.abs(kv)))

@@ -1,0 +1,69 @@
+"""Computational-invariance tests: fused rotations preserve outputs exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCH_IDS, get_config
+from repro.core import fuse_rotations, hadamard_matrix, random_hadamard
+from repro.core.qr_orth import qr_rotation
+from repro.core.rotations import _centering, online_hadamard
+from repro.models import model as M
+
+
+def _build_pack(cfg, key):
+    D = cfg.d_model
+    hd = cfg.v_head_dim if cfg.attn_type == "mla" else cfg.resolved_head_dim
+    k1, k2, k3 = jax.random.split(key, 3)
+    pack = {"r4": True}
+    if not cfg.sandwich_norm:
+        pack["r1"] = qr_rotation(jax.random.normal(k1, (D, D)))
+        if cfg.is_encoder_decoder:
+            pack["r1_enc"] = qr_rotation(jax.random.normal(k3, (D, D)))
+    if cfg.attn_type != "none" and cfg.family != "hybrid":
+        pack["r2"] = jax.vmap(qr_rotation)(
+            jax.random.normal(k2, (cfg.n_layers, hd, hd)))
+    if cfg.family == "hybrid":
+        pack["r2_shared"] = qr_rotation(jax.random.normal(k2, (hd, hd)))
+    return pack
+
+
+@pytest.mark.parametrize("arch", ALL_ARCH_IDS)
+def test_fusion_invariance(arch, key):
+    cfg = get_config(arch).reduced()
+    p = M.init_params(cfg, key)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.is_encoder_decoder:
+        kw["frames"] = jax.random.normal(key, (2, cfg.encoder_seq, cfg.d_model))
+    base, _ = M.forward(cfg, p, toks, **kw)
+    pack = _build_pack(cfg, key)
+    fcfg, fused = fuse_rotations(cfg, p, pack)
+    if cfg.is_encoder_decoder:
+        kw["frames"] = kw["frames"] @ _centering(cfg.d_model)
+        if "r1_enc" in pack:
+            kw["frames"] = kw["frames"] @ pack["r1_enc"]
+    out, _ = M.forward(fcfg, fused, toks, rot={"r4": online_hadamard}, **kw)
+    rel = float(jnp.max(jnp.abs(out - base))) / (float(jnp.std(base)) + 1e-9)
+    assert rel < 2e-2, f"{arch}: invariance broken rel={rel}"
+    assert not bool(jnp.any(jnp.isnan(out)))
+
+
+def test_hadamard_orthogonal():
+    for n in (2, 4, 12, 16, 20, 28, 112, 448, 2304):
+        h = hadamard_matrix(n)
+        np.testing.assert_allclose(h @ h.T, n * np.eye(n), atol=1e-6)
+
+
+def test_random_hadamard_is_rotation(key):
+    for n in (64, 112, 96):
+        r = random_hadamard(n, key)
+        np.testing.assert_allclose(np.asarray(r @ r.T), np.eye(n), atol=1e-5)
+
+
+def test_online_hadamard_preserves_norm(key):
+    x = jax.random.normal(key, (8, 256))
+    y = online_hadamard(x)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)

@@ -1,0 +1,85 @@
+"""Whip loss + QR-Orth properties (hypothesis where it matters)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (calibrate_rotation, outlier_count, quant_error,
+                        random_hadamard, whip)
+from repro.core.qr_orth import (calibrate_cayley, cayley_sgd_step,
+                                orthogonality_error, qr_rotation)
+from repro.core.whip import OBJECTIVES, kurtosis, variance
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 24), st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_qr_rotation_orthogonal(n, _m, seed):
+    z = jax.random.normal(jax.random.PRNGKey(seed), (n, n))
+    r = qr_rotation(z)
+    assert float(orthogonality_error(r)) < 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_whip_invariance_properties(seed):
+    """Whip is permutation-invariant and decreases as values move from 0."""
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (16, 32))
+    perm = jax.random.permutation(k, 32)
+    assert np.isclose(float(whip(x)), float(whip(x[:, perm])), rtol=1e-5)
+    assert float(whip(x * 2.0)) < float(whip(x))       # pushing away from zero
+    assert float(whip(jnp.zeros_like(x))) == pytest.approx(32.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_variance_rotation_invariant_for_centered(seed):
+    """Paper §4.1: per-token variance ~ invariant under rotation (norm
+    preservation) for zero-mean tokens — the reason variance is a bad
+    objective."""
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (32, 64))
+    x = x - x.mean(axis=-1, keepdims=True)
+    r = qr_rotation(jax.random.normal(jax.random.fold_in(k, 1), (64, 64)))
+    xr = x @ r
+    xr = xr - xr.mean(axis=-1, keepdims=True)
+    v0, v1 = float(variance(x)), float(variance(xr))
+    assert np.isclose(v0, v1, rtol=0.05)
+
+
+def test_cayley_step_stays_orthogonal(key):
+    r = qr_rotation(jax.random.normal(key, (32, 32)))
+    m = jnp.zeros_like(r)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (32, 32)) * 0.01
+    for _ in range(5):
+        r, m = cayley_sgd_step(r, m, g, lr=0.01)
+    assert float(orthogonality_error(r)) < 1e-2
+
+
+def _toy_data(key, n=64, N=1024):
+    x = jax.random.laplace(key, (N, n)) * 0.5
+    oc = jax.random.choice(jax.random.fold_in(key, 1), n, (4,), replace=False)
+    x = x.at[:, oc].multiply(10.0)
+    return x / jnp.std(x)
+
+
+def test_whip_calibration_improves_quant_error(key):
+    x = _toy_data(key)
+    base = float(quant_error(x))
+    had = float(quant_error(x @ random_hadamard(64, key)))
+    r = calibrate_rotation(x, 64, key, objective="whip", steps=60, lr=0.2)
+    calib = float(quant_error(x @ r))
+    assert had < base          # rotation beats identity (Fig. 3)
+    assert calib <= had * 1.02  # calibration >= Hadamard (Fig. 6)
+    assert float(orthogonality_error(r)) < 1e-4
+
+
+def test_qr_orth_matches_cayley_objective(key):
+    """Same Whip objective: QR-Orth reaches a loss <= Cayley's (Fig. 7b)."""
+    x = _toy_data(key)
+    r_qr = calibrate_rotation(x, 64, key, objective="whip", method="qr",
+                              steps=40, lr=0.2)
+    r_cy = calibrate_rotation(x, 64, key, objective="whip", method="cayley",
+                              steps=40, lr=0.2)
+    assert float(whip(x @ r_qr)) <= float(whip(x @ r_cy)) * 1.05
