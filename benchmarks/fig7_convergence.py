@@ -1,34 +1,42 @@
 """Paper Fig. 7a + Table 22: quant-error trajectories per objective.
 
 On REAL captured activations of the trained tiny LM (not synthetic): optimize
-R with each objective and measure activation quant error along the way.
+R with each objective and measure activation quant error along the way.  The
+per-step quant-error trace is recorded INSIDE the scanned engine
+(``metrics=``), so the whole trajectory costs one compiled call per objective
+instead of a host callback round-trip every step.
+
+``run(smoke=True)`` (CI) swaps the trained model for tiny synthetic
+activations and shortens the trajectory.
 """
 from __future__ import annotations
 
 import jax
 
-from benchmarks.common import captured_acts
 from repro.core import quant_error, random_hadamard
-from repro.core.qr_orth import calibrate_qr, qr_rotation
+from repro.core.qr_orth import calibrate_scan
 from repro.core.whip import OBJECTIVES
 
 
-def run() -> list:
-    acts = captured_acts()
-    x = acts["r1"]
+def run(smoke: bool = False) -> list:
+    if smoke:
+        from benchmarks.common import synthetic_acts
+        x = synthetic_acts(n=32, N=256)
+        steps = 10
+    else:
+        from benchmarks.common import captured_acts
+        x = captured_acts()["r1"]
+        steps = 80
     n = x.shape[-1]
     key = jax.random.PRNGKey(0)
     z0 = random_hadamard(n, key)
     rows = [("fig7,start_quant_err", float(quant_error(x @ z0)), "mse")]
     for obj in ("whip", "variance", "kurtosis", "quant"):
-        errs = []
-
-        def cb(k, l, z):
-            if k % 20 == 0 or k == 79:
-                errs.append(float(quant_error(x @ qr_rotation(z))))
-
-        calibrate_qr(x, z0, OBJECTIVES[obj], steps=80, lr=0.1, callback=cb)
-        rows.append((f"fig7,{obj},final_quant_err", errs[-1], "mse"))
+        res = calibrate_scan(x, z0, OBJECTIVES[obj], steps=steps, lr=0.1,
+                             metrics=(("quant_err", quant_error),))
+        errs = res.aux["quant_err"]        # [steps], pre-update trace
+        final = float(quant_error(x @ res.rotation))
+        rows.append((f"fig7,{obj},final_quant_err", final, "mse"))
         rows.append((f"fig7,{obj},delta_pct",
-                     100 * (errs[-1] - errs[0]) / errs[0], "%"))
+                     100 * (final - float(errs[0])) / float(errs[0]), "%"))
     return rows

@@ -1,9 +1,12 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,value,unit`` CSV.  PYTHONPATH=src python -m benchmarks.run
+[filter] [--smoke]; ``--smoke`` runs tiny-dimension variants (CI) for the
+modules that support it.
 """
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 import traceback
@@ -21,7 +24,9 @@ MODULES = [
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = [a for a in sys.argv[1:] if a != "--smoke"]
+    smoke = "--smoke" in sys.argv[1:]
+    only = args[0] if args else None
     print("name,value,unit")
     ok = True
     for modname in MODULES:
@@ -30,7 +35,10 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(modname, fromlist=["run"])
-            for name, value, unit in mod.run():
+            kwargs = {}
+            if smoke and "smoke" in inspect.signature(mod.run).parameters:
+                kwargs["smoke"] = True
+            for name, value, unit in mod.run(**kwargs):
                 if isinstance(value, float):
                     print(f"{name},{value:.6g},{unit}", flush=True)
                 else:

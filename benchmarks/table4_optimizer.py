@@ -14,8 +14,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import synthetic_acts
 from repro.core import random_hadamard, whip
-from repro.core.qr_orth import (calibrate_cayley, calibrate_qr,
-                                cayley_sgd_step, qr_rotation, sgd_update)
+from repro.core.qr_orth import (calibrate_scan, cayley_sgd_step, qr_rotation,
+                                sgd_update)
 
 
 def _time_loop(fn, steps=20):
@@ -79,20 +79,26 @@ def run() -> list:
     rows.append(("table4,analytic_cayley_extra_flops", 6 * n ** 3, "flops"))
 
     # --- XLA FLOPs of the orthogonality machinery alone ----------------------
+    def _flops(compiled):
+        ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):       # older jax: list per device
+            ca = ca[0] if ca else {}
+        return float(ca.get("flops", -1))
+
     fq = jax.jit(qr_rotation).lower(jnp.zeros((n, n))).compile()
     fc = jax.jit(lambda r, m, g: cayley_sgd_step(r, m, g, 0.05)).lower(
         jnp.zeros((n, n)), jnp.zeros((n, n)), jnp.zeros((n, n))).compile()
-    flops_q = float((fq.cost_analysis() or {}).get("flops", -1))
-    flops_c = float((fc.cost_analysis() or {}).get("flops", -1))
+    flops_q = _flops(fq)
+    flops_c = _flops(fc)
     rows.append(("table4,qr_orth_flops", flops_q, "flops"))
     rows.append(("table4,cayley_flops", flops_c, "flops"))
 
     # --- convergence: steps for QR to match Cayley@60 -------------------------
-    cy_losses, qr_losses = [], []
-    calibrate_cayley(x, z0, whip, steps=60, lr=0.1,
-                     callback=lambda k, l, r: cy_losses.append(l))
-    calibrate_qr(x, z0, whip, steps=60, lr=0.1,
-                 callback=lambda k, l, z: qr_losses.append(l))
+    # loss histories come straight off the scanned engine (no callbacks)
+    cy_losses = calibrate_scan(x, z0, whip, method="cayley", steps=60,
+                               lr=0.1).loss_history.tolist()
+    qr_losses = calibrate_scan(x, z0, whip, method="qr", steps=60,
+                               lr=0.1).loss_history.tolist()
     target = cy_losses[-1]
     steps_needed = next((i + 1 for i, l in enumerate(qr_losses)
                          if l <= target), 60)

@@ -1,10 +1,13 @@
 """DartQuant core: rotational distribution calibration (the paper's contribution)."""
 from repro.core.calibrate import (calibrate_model, calibrate_rotation,
-                                  identity_pack, random_pack)
+                                  calibrate_rotations, identity_pack,
+                                  random_pack)
 from repro.core.capture import capture_activations, token_sample
-from repro.core.qr_orth import (calibrate_cayley, calibrate_qr,
-                                cayley_sgd_step, orthogonality_error,
-                                qr_rotation)
+from repro.core.qr_orth import (CalibResult, calibrate_cayley,
+                                calibrate_cayley_legacy, calibrate_qr,
+                                calibrate_qr_legacy, calibrate_scan,
+                                cayley_sgd_step, cholqr_rotation,
+                                orthogonality_error, qr_rotation)
 from repro.core.rotations import (fuse_rotations, hadamard_matrix,
                                   online_hadamard, random_hadamard)
 from repro.core.whip import (OBJECTIVES, kurtosis, outlier_count, quant_error,

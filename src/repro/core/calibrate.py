@@ -3,6 +3,15 @@
 ``calibrate_model`` = capture -> token-sample -> per-site QR-Orth/Whip
 optimization -> rotation pack ready for ``fuse_rotations``.
 
+Per-layer R2 sites are optimized by the scanned+vmapped engine
+(``qr_orth.calibrate_rotations_batched``): all ``n_layers`` trajectories run
+inside ONE compiled call instead of a serial Python loop — pass
+``r2_batched=False`` to fall back to the serial path (same per-layer keys, so
+batched and serial produce the same rotations up to float-noise
+amplification).  Loss histories follow the contract documented in
+``repro.core.qr_orth``: ``history[k]`` is the pre-update objective value of
+step ``k``.
+
 Also provides the QuaRot baseline (``random_pack``: random Hadamard R1/R2) and
 identity pack, used by benchmarks to reproduce the paper's comparisons.
 """
@@ -15,24 +24,59 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import qr_orth
 from repro.core import whip as objectives
 from repro.core.capture import capture_activations
-from repro.core.qr_orth import calibrate_cayley, calibrate_qr, qr_rotation
+from repro.core.qr_orth import calibrate_scan
 from repro.core.rotations import random_hadamard
 
 
 def calibrate_rotation(x: jax.Array, n: int, key, objective: str = "whip",
                        method: str = "qr", optimizer: str = "sgd",
                        steps: int = 100, lr: float = 5e-2,
-                       callback: Optional[Callable] = None) -> jax.Array:
-    """Optimize one rotation on captured activations x [N, n]."""
+                       callback: Optional[Callable] = None,
+                       orth: str = "cholqr",
+                       return_history: bool = False):
+    """Optimize one rotation on captured activations x [N, n].
+
+    Returns the rotation, or ``(rotation, loss_history)`` when
+    ``return_history`` — the history never leaves the device until read.
+    """
     obj = objectives.OBJECTIVES[objective]
     z0 = random_hadamard(n, key)           # paper App. K: Hadamard init
     if method == "cayley":
-        return calibrate_cayley(x, z0, obj, steps=steps, lr=lr,
-                                callback=callback)
-    return calibrate_qr(x, z0, obj, steps=steps, lr=lr, optimizer=optimizer,
-                        callback=callback)
+        res = calibrate_scan(x, z0, obj, method="cayley", steps=steps, lr=lr)
+    else:
+        res = calibrate_scan(x, z0, obj, method="qr", optimizer=optimizer,
+                             steps=steps, lr=lr, orth=orth)
+    if callback is not None:
+        qr_orth._replay(callback, res, res.rotation)
+    if return_history:
+        return res.rotation, res.loss_history
+    return res.rotation
+
+
+def calibrate_rotations(xs: jax.Array, n: int, key,
+                        objective: str = "whip", method: str = "qr",
+                        optimizer: str = "sgd", steps: int = 100,
+                        lr: float = 5e-2, orth: str = "cholqr",
+                        return_history: bool = False):
+    """Optimize all L sites of xs [L, N, n] in one compiled vmapped scan.
+
+    Per-site inits use ``jax.random.split(key, L)`` — identical to the serial
+    path in ``calibrate_model(r2_batched=False)``, so the two are
+    interchangeable.  Returns [L, n, n] rotations (plus [L, steps] histories
+    when ``return_history``).
+    """
+    obj = objectives.OBJECTIVES[objective]
+    layer_keys = jax.random.split(key, xs.shape[0])
+    z0s = jnp.stack([random_hadamard(n, k) for k in layer_keys])
+    res = qr_orth.calibrate_rotations_batched(
+        xs, z0s, obj, method=method, optimizer=optimizer, steps=steps, lr=lr,
+        orth=orth)
+    if return_history:
+        return res.rotation, res.loss_history
+    return res.rotation
 
 
 def _r2_dim(cfg: ModelConfig) -> int:
@@ -44,8 +88,15 @@ def calibrate_model(cfg: ModelConfig, params: dict, tokens: jax.Array,
                     method: str = "qr", optimizer: str = "sgd",
                     steps: int = 100, lr_r1: float = 2e-3,
                     lr_r2: float = 1e-3, sample_frac: float = 0.1,
-                    use_r2: bool = True, verbose: bool = False) -> Dict:
-    """Full DartQuant calibration: returns a rotation pack for fuse_rotations."""
+                    use_r2: bool = True, r2_batched: bool = True,
+                    verbose: bool = False,
+                    history_out: Optional[dict] = None) -> Dict:
+    """Full DartQuant calibration: returns a rotation pack for fuse_rotations.
+
+    All per-layer R2 sites are optimized in one compiled call (vmapped scan)
+    unless ``r2_batched=False``; pass a dict as ``history_out`` to receive
+    per-site loss histories keyed by site name.
+    """
     if key is None:
         key = jax.random.PRNGKey(0)
     t0 = time.time()
@@ -54,34 +105,52 @@ def calibrate_model(cfg: ModelConfig, params: dict, tokens: jax.Array,
     ks = iter(jax.random.split(key, 64))
     pack: Dict = {}
 
+    def record(name, history):
+        if history_out is not None:
+            history_out[name] = history
+
     if not cfg.sandwich_norm:   # gemma2: R1 fusion blocked by post-norms
-        pack["r1"] = calibrate_rotation(acts["r1"], cfg.d_model, next(ks),
-                                        objective=objective, method=method,
-                                        optimizer=optimizer, steps=steps,
-                                        lr=lr_r1)
+        pack["r1"], h = calibrate_rotation(
+            acts["r1"], cfg.d_model, next(ks), objective=objective,
+            method=method, optimizer=optimizer, steps=steps, lr=lr_r1,
+            return_history=True)
+        record("r1", h)
         if "r1_enc" in acts:
-            pack["r1_enc"] = calibrate_rotation(acts["r1_enc"], cfg.d_model,
-                                                next(ks), objective=objective,
-                                                method=method,
-                                                optimizer=optimizer,
-                                                steps=steps, lr=lr_r1)
+            pack["r1_enc"], h = calibrate_rotation(
+                acts["r1_enc"], cfg.d_model, next(ks), objective=objective,
+                method=method, optimizer=optimizer, steps=steps, lr=lr_r1,
+                return_history=True)
+            record("r1_enc", h)
     if use_r2 and "r2" in acts:
         hd = _r2_dim(cfg)
-        r2_list = []
-        for i in range(acts["r2"].shape[0]):
-            r2_list.append(calibrate_rotation(
-                acts["r2"][i], hd, next(ks), objective=objective,
-                method=method, optimizer=optimizer, steps=steps, lr=lr_r2))
-        r2 = jnp.stack(r2_list, axis=0)
         if cfg.family == "hybrid":
-            pack["r2_shared"] = jnp.mean(r2, axis=0) if r2.shape[0] == 1 else r2[0]
-            # shared block: calibrate on pooled V activations of all applications
+            # shared block: calibrate on pooled V activations of all uses
             pooled = acts["r2"].reshape(-1, hd)
-            pack["r2_shared"] = calibrate_rotation(
+            pack["r2_shared"], h = calibrate_rotation(
                 pooled, hd, next(ks), objective=objective, method=method,
-                optimizer=optimizer, steps=steps, lr=lr_r2)
+                optimizer=optimizer, steps=steps, lr=lr_r2,
+                return_history=True)
+            record("r2_shared", h)
         else:
-            pack["r2"] = r2
+            k_r2 = next(ks)
+            if r2_batched:
+                pack["r2"], h = calibrate_rotations(
+                    acts["r2"], hd, k_r2, objective=objective, method=method,
+                    optimizer=optimizer, steps=steps, lr=lr_r2,
+                    return_history=True)
+                record("r2", h)
+            else:
+                layer_keys = jax.random.split(k_r2, acts["r2"].shape[0])
+                r2_list, h_list = [], []
+                for i in range(acts["r2"].shape[0]):
+                    r, h = calibrate_rotation(
+                        acts["r2"][i], hd, layer_keys[i], objective=objective,
+                        method=method, optimizer=optimizer, steps=steps,
+                        lr=lr_r2, return_history=True)
+                    r2_list.append(r)
+                    h_list.append(h)
+                pack["r2"] = jnp.stack(r2_list, axis=0)
+                record("r2", jnp.stack(h_list, axis=0))
     pack["r4"] = True
     if verbose:
         print(f"calibration done in {time.time() - t0:.1f}s "

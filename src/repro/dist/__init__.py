@@ -1,0 +1,8 @@
+"""Distribution utilities: sharding specs + compressed collectives.
+
+Single-host safe: importing this package never touches jax device state; the
+``Sharding`` helper only binds to a mesh the caller constructed.
+"""
+from repro.dist.collectives import (all_reduce_compressed_tree, compress_grad,
+                                    init_error_feedback)
+from repro.dist.sharding import Sharding

@@ -1,0 +1,109 @@
+"""Mesh-aware sharding helper consumed by the model code and launchers.
+
+Models call ``shd(x, name)`` at annotation points (see
+``repro.models.common.NO_SHARD`` for the single-device no-op); ``Sharding``
+resolves the name to a ``PartitionSpec`` over the bound mesh and applies a
+``with_sharding_constraint``.  It also derives parameter / batch / cache
+specs for jit ``in_shardings`` from pytree structure alone, so the same rules
+cover every architecture in ``repro.configs`` without per-model tables:
+
+  * params — the largest axis divisible by the 'model' axis size is
+    tensor-parallel sharded; vectors and small leaves replicate.  Leading
+    layer-stack axes are never sharded (they are scanned over).
+  * batch  — leading (batch) axis over all non-'model' axes (data ± pod).
+  * cache  — axis 1 (batch; caches are stacked [L, B, ...]) over data axes.
+
+Any mesh with a 'model' axis and one or more data-like axes works; the 'pod'
+axis of the multi-pod production mesh composes into the data group
+automatically.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+class Sharding:
+    def __init__(self, cfg: ModelConfig, mesh):
+        self.cfg = cfg
+        self.mesh = mesh
+        axes = tuple(mesh.axis_names)
+        self.model_axis = "model" if "model" in axes else None
+        dp = tuple(a for a in axes if a != "model")
+        # one PartitionSpec entry covering the whole data group
+        self.dp: object = dp[0] if len(dp) == 1 else dp
+        self.model_size = int(mesh.shape["model"]) if self.model_axis else 1
+        m, d = self.model_axis, self.dp
+        self._act_specs: Dict[str, P] = {
+            # [B, S, D] residual stream / [B, S, F] ffn hidden
+            "act_bsd": P(d, None, None),
+            "act_bsf": P(d, None, None),
+            # [B, S, V] logits: vocab tensor-parallel (see cross_entropy)
+            "logits": P(d, None, m),
+            # [B, S, H, hd] attention tensors
+            "act_bshd_heads": P(d, None, m, None),
+            "act_bskd_heads": P(d, None, m, None),
+            "act_bshd_seq": P(d, m, None, None),
+            "act_bshd_rep": P(d, None, None, None),
+            # [B, S, H, P] ssm heads
+            "ssm_bshp": P(d, None, m, None),
+            # [G, g, D] grouped tokens / [G, E, cap, D] dispatched experts
+            "moe_gtd": P(d, None, None),
+            "moe_gecd": P(d, m, None, None),
+        }
+
+    # -- activation constraints (models call shd(x, name)) ------------------ #
+    def spec(self, name: str) -> P:
+        return self._act_specs[name]
+
+    def __call__(self, x, name: str):
+        s = self._act_specs.get(name)
+        if s is None or x.ndim != len(s):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, s))
+
+    # -- pytree spec derivation --------------------------------------------- #
+    def named(self, spec_tree):
+        """PartitionSpec tree -> NamedSharding tree on the bound mesh."""
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), spec_tree,
+            is_leaf=lambda s: isinstance(s, P))
+
+    def _leaf_param_spec(self, leaf) -> P:
+        shape = tuple(leaf.shape)
+        ms = self.model_size
+        if self.model_axis is None or len(shape) < 2 or ms <= 1:
+            return P(*([None] * len(shape)))
+        # candidate tensor-parallel axes: divisible by the model axis and big
+        # enough that splitting pays; never the leading layer-stack axis when
+        # the leaf is stacked (ndim >= 3).
+        first = 1 if len(shape) >= 3 else 0
+        best, best_size = None, 0
+        for i in range(first, len(shape)):
+            if shape[i] % ms == 0 and shape[i] >= 2 * ms and shape[i] > best_size:
+                best, best_size = i, shape[i]
+        spec = [None] * len(shape)
+        if best is not None:
+            spec[best] = self.model_axis
+        return P(*spec)
+
+    def param_specs(self, params):
+        """Tensor-parallel specs for a params pytree (arrays or SDS)."""
+        return jax.tree.map(self._leaf_param_spec, params)
+
+    def batch_specs(self, batch):
+        """Data-parallel specs: leading axis over the data group."""
+        return jax.tree.map(
+            lambda x: P(*((self.dp,) + (None,) * (x.ndim - 1)))
+            if x.ndim >= 1 else P(), batch)
+
+    def cache_specs(self, cache):
+        """Decode caches are stacked [L, B, ...]: shard B over data."""
+        return jax.tree.map(
+            lambda x: P(*((None, self.dp) + (None,) * (x.ndim - 2)))
+            if x.ndim >= 2 else P(), cache)

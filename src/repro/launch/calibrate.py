@@ -45,6 +45,8 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--w-bits", type=int, default=4)
     ap.add_argument("--a-bits", type=int, default=4)
+    ap.add_argument("--serial-r2", action="store_true",
+                    help="legacy serial per-layer R2 loop (debug/compare)")
     ap.add_argument("--ckpt", default=None, help="params checkpoint to load")
     args = ap.parse_args(argv)
 
@@ -62,15 +64,22 @@ def main(argv=None):
     toks, labels = jnp.asarray(test["tokens"]), jnp.asarray(test["labels"])
 
     ppl_fp = eval_ppl(cfg, params, toks, labels)
-    pq_rtn = quantize_params(cfg, quantize_params(cfg, params))
     ppl_rtn = eval_ppl(cfg, quantize_params(cfg, params), toks, labels,
                        a_bits=args.a_bits)
 
     t0 = time.time()
+    histories = {}
     pack = calibrate_model(cfg, params, calib, key=key,
                            objective=args.objective, method=args.method,
                            optimizer=args.optimizer, steps=args.steps,
-                           verbose=True)
+                           r2_batched=not args.serial_r2,
+                           history_out=histories, verbose=True)
+    for site, h in histories.items():
+        h = jnp.asarray(h)
+        first, last = h[..., 0], h[..., -1]
+        print(f"  site {site:10s}: loss {float(first.mean()):.4f} -> "
+              f"{float(last.mean()):.4f} over {h.shape[-1]} steps"
+              + (f" (x{h.shape[0]} layers)" if h.ndim == 2 else ""))
     fcfg, fused = fuse_rotations(cfg, params, pack)
     from repro.core.rotations import online_hadamard
     rot = {"r4": online_hadamard}

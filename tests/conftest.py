@@ -1,5 +1,11 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device;
 only launch/dryrun.py forces 512 placeholder devices."""
+import os
+
+# the suite is a CPU suite (ROADMAP tier-1); without this, images that ship
+# libtpu stall probing for TPU hardware.  setdefault keeps explicit overrides.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
 import jax
 import pytest
 
@@ -7,3 +13,16 @@ import pytest
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)
+
+
+# Architectures exercised in the fast (tier-1) selection; the rest run with
+# `-m slow`.  One representative per family keeps the fast suite meaningful:
+# dense GQA, SSM, sandwich-norm; MLA/MoE and enc-dec get their fast coverage
+# through tests/test_calibrate_families.py and tests/test_rotations.py.
+FAST_ARCHS = ("llama2-7b", "mamba2-370m", "gemma2-2b")
+
+
+def arch_params(arch_ids, fast=FAST_ARCHS):
+    """Wrap an arch-id list for parametrize, marking non-fast archs slow."""
+    return [a if a in fast else pytest.param(a, marks=pytest.mark.slow)
+            for a in arch_ids]

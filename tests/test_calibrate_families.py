@@ -13,8 +13,10 @@ from repro.data.pipeline import calibration_batch
 from repro.models import model as M
 
 
-@pytest.mark.parametrize("arch", ["mamba2-370m", "zamba2-7b",
-                                  "whisper-medium", "deepseek-v3-671b"])
+@pytest.mark.parametrize("arch", [
+    pytest.param("mamba2-370m", marks=pytest.mark.slow),
+    pytest.param("zamba2-7b", marks=pytest.mark.slow),
+    "whisper-medium", "deepseek-v3-671b"])
 def test_calibrate_fuse_preserves_outputs(arch, key):
     cfg = get_config(arch).reduced().replace(n_layers=2)
     if cfg.shared_attn_every:

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import arch_params
 from repro.configs import ALL_ARCH_IDS, get_config
 from repro.models import model as M
 from repro.models.attention import chunked_attention
@@ -24,7 +25,7 @@ def _batch(cfg, key, B=2, S_=32):
     return b
 
 
-@pytest.mark.parametrize("arch", ALL_ARCH_IDS)
+@pytest.mark.parametrize("arch", arch_params(ALL_ARCH_IDS))
 def test_smoke_forward_and_train_step(arch, key):
     cfg = get_config(arch).reduced()
     params = M.init_params(cfg, key)
@@ -47,7 +48,7 @@ def test_smoke_forward_and_train_step(arch, key):
     assert delta > 0
 
 
-@pytest.mark.parametrize("arch", ALL_ARCH_IDS)
+@pytest.mark.parametrize("arch", arch_params(ALL_ARCH_IDS))
 def test_smoke_prefill_decode_consistency(arch, key):
     cfg = get_config(arch).reduced()
     params = M.init_params(cfg, key)

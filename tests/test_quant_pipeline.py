@@ -51,6 +51,7 @@ def _ce(cfg, params, a_bits=16, rot=None, seed=9, n_batches=3):
     return all_batches()
 
 
+@pytest.mark.slow
 def test_w4a4_quant_quality_ordering(trained, key):
     """fp <= dart(W4A4) <= hadamard(W4A4) (tol) << rtn(W4A4)  — Tab. 2 shape."""
     params = trained

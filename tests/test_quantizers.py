@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # no network deps: seeded deterministic fallback
+    from _hyp_compat import given, settings, st
 
 from repro.quant import (dequant_act, fake_quant_act, fake_quant_kv,
                          fake_quant_weight, gptq_quantize, hessian, pack_int4,

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import arch_params
 from repro.configs import ALL_ARCH_IDS, get_config
 from repro.core import fuse_rotations, hadamard_matrix, random_hadamard
 from repro.core.qr_orth import qr_rotation
@@ -28,7 +29,9 @@ def _build_pack(cfg, key):
     return pack
 
 
-@pytest.mark.parametrize("arch", ALL_ARCH_IDS)
+@pytest.mark.parametrize("arch", arch_params(
+    ALL_ARCH_IDS, fast=("llama2-7b", "whisper-medium",
+                        "deepseek-v3-671b")))
 def test_fusion_invariance(arch, key):
     cfg = get_config(arch).reduced()
     p = M.init_params(cfg, key)

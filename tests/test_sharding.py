@@ -1,5 +1,6 @@
 """Distribution tests — run in a subprocess with 8 placeholder devices so the
 main test process keeps a single CPU device."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -11,11 +12,14 @@ ROOT = Path(__file__).resolve().parents[1]
 
 
 def _run(code: str):
+    # JAX_PLATFORMS must survive into the subprocess: images that ship libtpu
+    # hang for minutes probing for TPU hardware otherwise.
     return subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True,
         env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
              "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
-             "HOME": "/root"},
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+             "HOME": os.environ.get("HOME", "/root")},
         timeout=560)
 
 
@@ -68,6 +72,7 @@ def test_sharded_train_step_matches_single_device():
     assert "OK sharded==single" in r.stdout, r.stdout + r.stderr
 
 
+@pytest.mark.slow
 def test_moe_ep_shard_map_matches_local():
     code = PRELUDE + textwrap.dedent("""
         from repro.configs import get_config
