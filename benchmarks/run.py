@@ -19,6 +19,7 @@ MODULES = [
     "benchmarks.fig3_outliers",       # Figs. 3/6: outliers + quant error
     "benchmarks.table16_samples",     # Tabs. 16/5: sample/dataset robustness
     "benchmarks.gptq_table",          # GPTQ vs RTN reconstruction
+    "benchmarks.serve_bench",         # serve runtime: paged vs legacy engine
     "benchmarks.roofline_report",     # §Roofline: dry-run derived terms
 ]
 

@@ -1,11 +1,12 @@
 """End-to-end serving driver: batched requests against a DartQuant W4A8KV4
-model with continuous batching (the repo's 'serve a small model with batched
-requests' deliverable).
+model on the paged int4-KV runtime — page-pool cache, token-level continuous
+batching with chunked prefill, Pallas paged attention, and the Pallas WHT
+kernel as the online R3/R4 rotation.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
 from repro.launch.serve import main
 
-main(["--arch", "llama2-7b", "--requests", "8", "--slots", "4",
-      "--prompt-len", "12", "--max-new", "12", "--a-bits", "8",
-      "--kv-bits", "4"])
+main(["--arch", "llama2-7b", "--engine", "paged", "--requests", "8",
+      "--slots", "4", "--prompt-len", "12", "--max-new", "12",
+      "--page-size", "8", "--a-bits", "8", "--kv-bits", "4"])

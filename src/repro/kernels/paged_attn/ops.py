@@ -1,0 +1,47 @@
+"""Public wrapper: paged decode attention over an int4 page-pool layer slice.
+
+Dispatches to the Pallas kernel (interpret mode off-TPU, like the other
+kernels); ``paged_attention_ref`` stays the parity oracle and is selectable
+via ``impl="ref"`` for A/B testing.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.paged_attn.paged_attn import paged_attn_pallas
+from repro.kernels.paged_attn.ref import paged_attention_ref
+
+
+def paged_attention(q: jax.Array, pool_l: Dict[str, jax.Array],
+                    block_tables: jax.Array, lengths: jax.Array, *,
+                    bits: int = 4, window=0, logit_cap: float = 0.0,
+                    scale: Optional[float] = None,
+                    impl: str = "pallas") -> jax.Array:
+    """q [B,Hq,hd]; pool_l {kq,ks,kz,vq,vs,vz} [P,T,H,...]; lengths [B].
+
+    ``window`` may be a traced int32 scalar (per-layer local/global patterns);
+    it is folded into a per-sequence start offset so the kernel only ever
+    masks on [start, length).
+    """
+    B, Hq, hd = q.shape
+    H = pool_l["ks"].shape[2]
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    if impl == "ref":
+        return paged_attention_ref(q, pool_l, block_tables, lengths,
+                                   bits=bits, window=window,
+                                   logit_cap=logit_cap, scale=scale)
+    win = jnp.asarray(window, jnp.int32)
+    starts = jnp.where(win > 0, jnp.maximum(lengths - win, 0), 0) \
+        .astype(jnp.int32)
+    return paged_attn_pallas(
+        q, pool_l["kq"], pool_l["ks"], pool_l["kz"],
+        pool_l["vq"], pool_l["vs"], pool_l["vz"],
+        block_tables.astype(jnp.int32), starts, lengths.astype(jnp.int32),
+        bits=bits, hd=hd, groups=Hq // H, scale=float(scale),
+        logit_cap=float(logit_cap), interpret=use_interpret())

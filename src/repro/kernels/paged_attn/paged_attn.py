@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: paged decode attention with fused int4 dequant.
+
+One query token per sequence attends over its KV pages.  The grid is
+(B, Pmax): the sequential minor dim walks a sequence's *logical* pages while
+scalar-prefetched block tables steer each page's BlockSpec to the right
+*physical* page of the pool — the pool itself never materializes densely.
+Packed int4 codes are unpacked + dequantized in VMEM (vs HBM traffic at 4
+bits/value, the decode bottleneck) and fed straight to the MXU; pages are
+combined with an online-softmax accumulator in scratch, exactly the
+flash-decode recurrence of ``models.attention.chunked_attention``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dequant_block(q_codes, s, z, *, bits: int, hd: int):
+    """[T,H,pd] uint8 + [T,H] scales -> [T,H,hd] f32."""
+    if bits == 4:
+        lo = (q_codes & 0xF).astype(jnp.float32)
+        hi = ((q_codes >> 4) & 0xF).astype(jnp.float32)
+        vals = jnp.stack([lo, hi], axis=-1)
+        vals = vals.reshape(q_codes.shape[:-1] + (q_codes.shape[-1] * 2,))
+        vals = vals[..., :hd]
+    else:
+        vals = q_codes.astype(jnp.float32)
+    return vals * s[..., None].astype(jnp.float32) \
+        + z[..., None].astype(jnp.float32)
+
+
+def _paged_attn_kernel(bt_ref, starts_ref, lens_ref,        # scalar prefetch
+                       q_ref, kq_ref, ks_ref, kz_ref,
+                       vq_ref, vs_ref, vz_ref, o_ref,
+                       m_s, l_s, acc_s, *,
+                       bits: int, hd: int, groups: int,
+                       scale: float, logit_cap: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        m_s[...] = jnp.full_like(m_s, -jnp.inf)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    T, H = ks_ref.shape[1], ks_ref.shape[2]
+    G = groups
+    k = _dequant_block(kq_ref[0], ks_ref[0], kz_ref[0], bits=bits, hd=hd)
+    v = _dequant_block(vq_ref[0], vs_ref[0], vz_ref[0], bits=bits, hd=hd)
+    q = (q_ref[0].astype(jnp.float32) * scale).reshape(H, G, hd)
+
+    # scores [H,G,T]: batch over the kv head, contract head_dim on the MXU
+    s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (1,))),
+                            preferred_element_type=jnp.float32)
+    if logit_cap:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    idx = j * T + jax.lax.broadcasted_iota(jnp.int32, (1, 1, T), 2)
+    mask = (idx >= starts_ref[b]) & (idx < lens_ref[b])
+    s = jnp.where(mask, s, -jnp.inf)
+
+    m_prev, l_prev = m_s[...], l_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    m_s[...] = m_new
+    l_s[...] = l_prev * corr + jnp.sum(p, axis=-1)
+    # o update [H,G,hd]: contract the page dim, batch over the kv head
+    pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((0,), (1,))),
+                             preferred_element_type=jnp.float32)
+    acc_s[...] = acc_s[...] * corr[..., None] + pv
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        o = acc_s[...] / jnp.maximum(l_s[...], 1e-30)[..., None]
+        o_ref[...] = o.reshape(1, H * G, hd).astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("bits", "hd", "groups", "scale",
+                                   "logit_cap", "interpret"))
+def paged_attn_pallas(q: jax.Array, kq, ks, kz, vq, vs, vz,
+                      block_tables: jax.Array, starts: jax.Array,
+                      lengths: jax.Array, *, bits: int, hd: int, groups: int,
+                      scale: float, logit_cap: float = 0.0,
+                      interpret: bool = True) -> jax.Array:
+    """q [B,Hq,hd]; pools [P,T,H,(pd)]; block_tables [B,Pmax];
+    starts/lengths [B] -> o [B,Hq,hd]."""
+    B, Hq, _ = q.shape
+    P, T, H = kq.shape[0], kq.shape[1], kq.shape[2]
+    Pmax = block_tables.shape[1]
+    G = groups
+
+    def page(b, j, bt, st, ln):          # noqa: ARG001 — index map signature
+        return (bt[b, j], 0, 0, 0)
+
+    def page3(b, j, bt, st, ln):         # noqa: ARG001
+        return (bt[b, j], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Pmax),
+        in_specs=[
+            pl.BlockSpec((1, Hq, hd), lambda b, j, bt, st, ln: (b, 0, 0)),
+            pl.BlockSpec((1, T, H, kq.shape[-1]), page),
+            pl.BlockSpec((1, T, H), page3),
+            pl.BlockSpec((1, T, H), page3),
+            pl.BlockSpec((1, T, H, vq.shape[-1]), page),
+            pl.BlockSpec((1, T, H), page3),
+            pl.BlockSpec((1, T, H), page3),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, hd), lambda b, j, bt, st, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, G), jnp.float32),
+            pltpu.VMEM((H, G), jnp.float32),
+            pltpu.VMEM((H, G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        partial(_paged_attn_kernel, bits=bits, hd=hd, groups=G, scale=scale,
+                logit_cap=logit_cap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, starts, lengths, q, kq, ks, kz, vq, vs, vz)

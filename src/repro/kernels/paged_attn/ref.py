@@ -1,0 +1,70 @@
+"""Pure-jnp oracle for paged decode attention over an int4 page pool.
+
+Gathers every logical page of each sequence through its block table,
+dequantizes to f32 and runs a masked single-query softmax — the dense
+reference the Pallas kernel is tested against, and the fallback path on
+backends without the kernel.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import softcap
+from repro.quant.kv_cache import QuantKV, dequantize_kv
+
+
+def dequant_codes(q: jax.Array, s: jax.Array, z: jax.Array, *, bits: int,
+                  head_dim: int, dtype=jnp.float32) -> jax.Array:
+    """Packed codes [..., pd] + scale/zero [...] -> values [..., head_dim]."""
+    return dequantize_kv(QuantKV(q, s[..., None], z[..., None]), bits,
+                         dtype, head_dim=head_dim)
+
+
+def gather_pages(pool_l: Dict[str, jax.Array], block_tables: jax.Array, *,
+                 bits: int, head_dim: int, dtype=jnp.float32):
+    """pool_l [P,T,H,*]; block_tables [B,Pmax] -> k, v [B,Pmax*T,H,hd]."""
+    B, Pmax = block_tables.shape
+    T, H = pool_l["kq"].shape[1], pool_l["kq"].shape[2]
+
+    def flat(codes, s, z):
+        g = dequant_codes(codes[block_tables], s[block_tables],
+                          z[block_tables], bits=bits, head_dim=head_dim,
+                          dtype=dtype)
+        return g.reshape(B, Pmax * T, H, head_dim)
+
+    k = flat(pool_l["kq"], pool_l["ks"], pool_l["kz"])
+    v = flat(pool_l["vq"], pool_l["vs"], pool_l["vz"])
+    return k, v
+
+
+def paged_attention_ref(q: jax.Array, pool_l: Dict[str, jax.Array],
+                        block_tables: jax.Array, lengths: jax.Array, *,
+                        bits: int = 4, window=0, logit_cap: float = 0.0,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q [B,Hq,hd]; lengths [B] (valid tokens per seq) -> o [B,Hq,hd]."""
+    B, Hq, hd = q.shape
+    k, v = gather_pages(pool_l, block_tables, bits=bits, head_dim=hd)
+    H = k.shape[2]
+    G = Hq // H
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, H, G, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k)
+    if logit_cap:
+        s = softcap(s, logit_cap)
+    idx = jnp.arange(k.shape[1], dtype=jnp.int32)
+    win = jnp.asarray(window, jnp.int32)
+    starts = jnp.where(win > 0, jnp.maximum(lengths - win, 0), 0)
+    valid = (idx[None, :] >= starts[:, None]) & (idx[None, :] < lengths[:, None])
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    # fully-masked rows (empty slots): uniform p over nothing -> zero output
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - jnp.where(jnp.isfinite(m), m, 0.0))
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p / denom, v)
+    return o.reshape(B, Hq, hd).astype(q.dtype)

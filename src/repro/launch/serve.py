@@ -1,6 +1,10 @@
 """Serving driver: batched generation over a DartQuant-quantized model.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --requests 8
+
+Default engine is the paged int4-KV runtime (page-pool cache + token-level
+continuous batching + Pallas paged attention); ``--engine legacy`` selects the
+lockstep dense-cache engine (required for MLA/SSM/hybrid/enc-dec families).
 """
 from __future__ import annotations
 
@@ -15,16 +19,19 @@ from repro.core import calibrate_model, fuse_rotations
 from repro.data.pipeline import calibration_batch
 from repro.models import model as M
 from repro.quant import quantize_params
-from repro.serve.engine import Request, ServeEngine
+from repro.serve import PagedServeEngine, Request, ServeEngine
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--engine", choices=["paged", "legacy", "auto"],
+                    default="auto")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--a-bits", type=int, default=8)
     ap.add_argument("--kv-bits", type=int, default=4)
     ap.add_argument("--no-quant", action="store_true")
@@ -40,20 +47,32 @@ def main(argv=None):
         pack = calibrate_model(cfg, params, calib, key=key, steps=30)
         cfg, params = fuse_rotations(cfg, params, pack)
         params = quantize_params(cfg, params)
-        from repro.core.rotations import online_hadamard
-        rot = {"r4": online_hadamard}
+        # online R3/R4 Hadamards via the Pallas WHT kernel (TPU fast path),
+        # not the dense-matmul reference in core.rotations
+        from repro.kernels.hadamard.ops import online_hadamard
+        rot = {"r3": online_hadamard, "r4": online_hadamard}
         print("calibrated + quantized (W4, rotations fused)")
 
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, args.prompt_len),
                     max_new=args.max_new) for _ in range(args.requests)]
-    eng = ServeEngine(cfg, params, rot=rot, batch_slots=args.slots,
-                      max_seq=args.prompt_len + args.max_new * 4,
-                      a_bits=args.a_bits, kv_bits=args.kv_bits)
+    max_seq = args.prompt_len + args.max_new * 4
+    use_paged = args.engine == "paged" or (
+        args.engine == "auto" and M.supports_paged(cfg)
+        and args.kv_bits in (4, 8))
+    if use_paged:
+        eng = PagedServeEngine(cfg, params, rot=rot, batch_slots=args.slots,
+                               max_seq=max_seq, page_size=args.page_size,
+                               a_bits=args.a_bits, kv_bits=args.kv_bits)
+    else:
+        eng = ServeEngine(cfg, params, rot=rot, batch_slots=args.slots,
+                          max_seq=max_seq, a_bits=args.a_bits,
+                          kv_bits=args.kv_bits)
     reqs, stats = eng.generate(reqs, verbose=True)
     done = sum(r.done for r in reqs)
-    print(f"served {done}/{len(reqs)} requests; "
-          f"{stats['decode_tok_per_s']:.1f} tok/s decode")
+    print(f"[{type(eng).__name__}] served {done}/{len(reqs)} requests; "
+          f"{stats['decode_tok_per_s']:.1f} tok/s decode; "
+          f"kv cache {stats['kv_cache_bytes']} B")
 
 
 if __name__ == "__main__":

@@ -336,6 +336,99 @@ def mla_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
     return out, {"ckv": ckv_cache, "krope": krope_cache}
 
 
+# --------------------------------------------------------------------------- #
+# Paged decode / chunked prefill (int4 page-pool cache, serve runtime)
+# --------------------------------------------------------------------------- #
+def _strip_kv_quant(rot):
+    """The paged path quantizes K/V for real at page-write time; drop the
+    dense-cache QDQ hook so values aren't quantized twice."""
+    if rot and rot.get("kv_quant") is not None:
+        rot = {k: v for k, v in rot.items() if k != "kv_quant"}
+    return rot or None
+
+
+def _write_kv_pages(pool_l: dict, k: jax.Array, v: jax.Array,
+                    pages: jax.Array, offs: jax.Array, kv_bits: int) -> dict:
+    """Quantize k,v [N,H,hd] to QuantKV and scatter into pages[N]/offs[N]."""
+    from repro.quant.kv_cache import quantize_kv
+    qk = quantize_kv(k, kv_bits)
+    qv = quantize_kv(v, kv_bits)
+    return {
+        "kq": pool_l["kq"].at[pages, offs].set(qk.q),
+        "ks": pool_l["ks"].at[pages, offs].set(qk.scale[..., 0]),
+        "kz": pool_l["kz"].at[pages, offs].set(qk.zero[..., 0]),
+        "vq": pool_l["vq"].at[pages, offs].set(qv.q),
+        "vs": pool_l["vs"].at[pages, offs].set(qv.scale[..., 0]),
+        "vz": pool_l["vz"].at[pages, offs].set(qv.zero[..., 0]),
+    }
+
+
+def paged_gqa_decode(cfg: ModelConfig, p: dict, x: jax.Array, pool_l: dict,
+                     block_tables: jax.Array, positions: jax.Array,
+                     lengths: jax.Array, window=0, shd=NO_SHARD, rot=None,
+                     kv_bits: int = 4) -> Tuple[jax.Array, dict]:
+    """One decode token per slot against the paged int4 KV cache.
+
+    x [B,1,D]; pool_l {kq,ks,kz,vq,vs,vz} [P,T,H,...] (one layer's slice);
+    block_tables [B,Pmax]; positions [B] per-slot write position (sequences
+    advance independently — no lockstep pos); lengths [B] valid tokens after
+    the write (0 for an idle slot, whose write lands on the null page).
+    """
+    from repro.kernels.paged_attn.ops import paged_attention
+    B = x.shape[0]
+    T = pool_l["ks"].shape[1]
+    q, k, v = gqa_project(cfg, p, x, positions[:, None],
+                          rot=_strip_kv_quant(rot))
+    pages = jnp.take_along_axis(block_tables, (positions // T)[:, None],
+                                axis=1)[:, 0]
+    new_pool = _write_kv_pages(pool_l, k[:, 0], v[:, 0], pages, positions % T,
+                               kv_bits)
+    o = paged_attention(q[:, 0], new_pool, block_tables, lengths,
+                        bits=kv_bits, window=window,
+                        logit_cap=cfg.attn_softcap)
+    out = linear(o.reshape(B, 1, -1), p["wo"], p.get("bo"))
+    return out, new_pool
+
+
+def paged_gqa_prefill_chunk(cfg: ModelConfig, p: dict, x: jax.Array,
+                            pool_l: dict, block_table: jax.Array,
+                            start, window=0, shd=NO_SHARD, rot=None,
+                            kv_bits: int = 4,
+                            n_pages: Optional[int] = None) -> Tuple[jax.Array, dict]:
+    """One prompt chunk of a single sequence: write K/V into its pages, then
+    attend over the pages (prior chunks + causal self) — queries past the
+    prompt tail write garbage that decode overwrites before it is ever read.
+
+    x [1,C,D]; block_table [1,Pmax]; start: scalar int32 chunk offset.
+    n_pages: static count of logical pages covering [0, start+C) — only that
+    prefix is gathered/dequantized, so prefill cost tracks progress instead of
+    re-densifying the whole reserved table every chunk.
+    """
+    from repro.kernels.paged_attn.ref import gather_pages
+    B, C, _ = x.shape
+    hd = cfg.resolved_head_dim
+    T = pool_l["ks"].shape[1]
+    positions = start + jnp.arange(C, dtype=jnp.int32)
+    q, k, v = gqa_project(cfg, p, x, positions, rot=_strip_kv_quant(rot))
+    # chunk overhang past the table (chunk > reserved coverage) must land on
+    # the null page — a plain gather would *clamp* to the seq's last real page
+    # and let padded-query garbage overwrite prompt KV
+    logical = positions // T
+    Pmax = block_table.shape[1]
+    pages = jnp.where(logical < Pmax,
+                      block_table[0, jnp.minimum(logical, Pmax - 1)], 0)
+    new_pool = _write_kv_pages(pool_l, k[0], v[0], pages, positions % T,
+                               kv_bits)
+    gather_table = block_table if n_pages is None else block_table[:, :n_pages]
+    kd, vd = gather_pages(new_pool, gather_table, bits=kv_bits, head_dim=hd)
+    k_pos = jnp.arange(kd.shape[1], dtype=jnp.int32)
+    o = chunked_attention(q, kd, vd, positions, k_pos, causal=True,
+                          window=window, logit_cap=cfg.attn_softcap,
+                          chunk=min(512, kd.shape[1]))
+    out = linear(o.reshape(B, C, -1), p["wo"], p.get("bo"))
+    return out, new_pool
+
+
 def attn_decode(cfg: ModelConfig, p: dict, x, cache, pos, window=0,
                 shd=NO_SHARD, rot=None, cp_fn=None):
     if cfg.attn_type == "mla":

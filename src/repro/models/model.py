@@ -429,6 +429,81 @@ def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, cache: dict,
 
 
 # --------------------------------------------------------------------------- #
+# Paged serve path (int4 page-pool cache; see repro.serve)
+# --------------------------------------------------------------------------- #
+def supports_paged(cfg: ModelConfig) -> bool:
+    """The paged runtime covers single-stack dense/MoE GQA decoders."""
+    return (cfg.attn_type == "gqa" and cfg.family in ("dense", "moe")
+            and not cfg.is_encoder_decoder and cfg.pos_embed == "rope"
+            and not (cfg.n_experts and cfg.n_dense_layers))
+
+
+def _paged_block_tail(cfg, lp, x, h, shd, mesh, rot):
+    """Post-attention residual + FFN shared by paged decode/prefill bodies."""
+    if cfg.sandwich_norm:
+        h = apply_norm(cfg, lp["post_ln1"], h)
+    x = x + h
+    h = apply_norm(cfg, lp["ln2"], x)
+    if "moe" in lp:
+        h, _ = ffn_mod.moe_forward(cfg, lp["moe"], h, shd=shd, mesh=mesh,
+                                   rot=rot)
+    else:
+        h = ffn_mod.mlp_forward(cfg, lp["mlp"], h, shd=shd, rot=rot)
+    if cfg.sandwich_norm:
+        h = apply_norm(cfg, lp["post_ln2"], h)
+    return x + h
+
+
+def paged_decode_step(cfg: ModelConfig, params: dict, token: jax.Array,
+                      pool: dict, block_tables: jax.Array,
+                      positions: jax.Array, lengths: jax.Array,
+                      shd=NO_SHARD, mesh=None, rot=None, kv_bits: int = 4):
+    """token [B,1]; pool leaves [L,P,T,H,...]; positions/lengths [B] — each
+    slot advances at its own position.  Returns (logits [B,1,V], new pool)."""
+    if not supports_paged(cfg):
+        raise NotImplementedError(f"no paged decode for {cfg.arch_id}")
+    x = _embed(cfg, params, token)
+
+    def body(x, xs):
+        lp, pool_l, win = xs
+        h = apply_norm(cfg, lp["ln1"], x)
+        h, new_pool_l = attn_mod.paged_gqa_decode(
+            cfg, lp["attn"], h, pool_l, block_tables, positions, lengths,
+            window=win, shd=shd, rot=rot, kv_bits=kv_bits)
+        return _paged_block_tail(cfg, lp, x, h, shd, mesh, rot), new_pool_l
+
+    x, new_pool = jax.lax.scan(
+        body, x, (params["layers"], pool, _windows(cfg, cfg.n_layers)))
+    x = apply_norm(cfg, params["final_norm"], x)
+    return _head(cfg, params, x, shd=shd), new_pool
+
+
+def paged_prefill_chunk(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                        pool: dict, block_table: jax.Array, start,
+                        shd=NO_SHARD, mesh=None, rot=None, kv_bits: int = 4,
+                        n_pages: Optional[int] = None):
+    """tokens [1,C] (one chunk of one prompt); start: scalar chunk offset;
+    n_pages: static page prefix covering the chunk (see attention module).
+    Returns (logits [1,C,V], new pool)."""
+    if not supports_paged(cfg):
+        raise NotImplementedError(f"no paged prefill for {cfg.arch_id}")
+    x = _embed(cfg, params, tokens)
+
+    def body(x, xs):
+        lp, pool_l, win = xs
+        h = apply_norm(cfg, lp["ln1"], x)
+        h, new_pool_l = attn_mod.paged_gqa_prefill_chunk(
+            cfg, lp["attn"], h, pool_l, block_table, start, window=win,
+            shd=shd, rot=rot, kv_bits=kv_bits, n_pages=n_pages)
+        return _paged_block_tail(cfg, lp, x, h, shd, mesh, rot), new_pool_l
+
+    x, new_pool = jax.lax.scan(
+        body, x, (params["layers"], pool, _windows(cfg, cfg.n_layers)))
+    x = apply_norm(cfg, params["final_norm"], x)
+    return _head(cfg, params, x, shd=shd), new_pool
+
+
+# --------------------------------------------------------------------------- #
 # Empty cache factories (decode-shape dry-run: cache of seq_len, one new token)
 # --------------------------------------------------------------------------- #
 def make_cache(cfg: ModelConfig, batch: int, max_seq: int,

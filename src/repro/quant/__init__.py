@@ -2,7 +2,8 @@
 from repro.quant.context import act_quant, get_act_quant, set_act_quant
 from repro.quant.gptq import gptq_quantize, hessian, recon_error, rtn_quantize
 from repro.quant.kv_cache import (QuantKV, dequantize_kv, kv_bytes,
-                                  make_kv_quant, quantize_kv)
+                                  make_kv_quant, packed_dim, paged_kv_bytes,
+                                  quantize_kv, quantkv_bytes)
 from repro.quant.qlinear import (memory_bytes, pack_params, qlinear_matmul,
                                  quantize_params)
 from repro.quant.quantizers import (QTensor, dequant_act, dequant_weight,

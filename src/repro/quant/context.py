@@ -2,30 +2,34 @@
 
 ``models.common.linear`` consults this before every matmul, so enabling W?A?
 simulation requires zero plumbing through model code.  The hook is a
-trace-time constant: set it before tracing/jit, clear after.
+trace-time constant held in a ``ContextVar`` — per-thread/per-context, so
+concurrent engine construction (each tracing under its own hook) cannot race.
+Prefer the ``act_quant`` context manager (or the explicit ``act_quant=``
+argument on the step builders in ``repro.train.steps``) over the raw setter.
 """
 from __future__ import annotations
 
 import contextlib
+import contextvars
 from typing import Callable, Optional
 
-_STATE = {"act_quant": None}
+_ACT_QUANT: contextvars.ContextVar[Optional[Callable]] = \
+    contextvars.ContextVar("act_quant", default=None)
 
 
 def set_act_quant(fn: Optional[Callable]) -> None:
-    _STATE["act_quant"] = fn
+    _ACT_QUANT.set(fn)
 
 
 def get_act_quant() -> Optional[Callable]:
-    return _STATE["act_quant"]
+    return _ACT_QUANT.get()
 
 
 @contextlib.contextmanager
-def act_quant(fn: Callable):
+def act_quant(fn: Optional[Callable]):
     """with act_quant(lambda x: fake_quant_act(x, 4)): ... trace model ..."""
-    prev = _STATE["act_quant"]
-    _STATE["act_quant"] = fn
+    token = _ACT_QUANT.set(fn)
     try:
         yield
     finally:
-        _STATE["act_quant"] = prev
+        _ACT_QUANT.reset(token)

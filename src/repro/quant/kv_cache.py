@@ -2,11 +2,11 @@
 
 Two layers of support:
   * QDQ hook (``make_kv_quant``) plugged into the model's rot context — the
-    cache stores fake-quantized values, so decode quality matches the real
-    integer cache bit-for-bit.
+    hook round-trips through the *integer* ``QuantKV`` format (fp16 scale/zero
+    included), so decode quality matches the real integer cache bit-for-bit.
   * Integer storage (``QuantKV``) — int8-packed int4 codes + fp16 scales, the
-    serving memory format; ``kv_bytes`` reports the real footprint used by the
-    serve engine for capacity planning.
+    serving memory format; ``kv_bytes`` / ``paged_kv_bytes`` report the real
+    footprint used by the serve engine for capacity planning.
 """
 from __future__ import annotations
 
@@ -15,20 +15,28 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.quant.quantizers import fake_quant_kv, pack_int4, unpack_int4
-
 
 def make_kv_quant(bits: int):
-    """Rot-context hook: quantize K/V (or MLA latent) at cache-write time."""
+    """Rot-context hook: quantize K/V (or MLA latent) at cache-write time.
+
+    Round-trips through ``QuantKV`` (integer codes, fp16 scale/zero) so the
+    fake-quant decode path is bit-exact with the packed serving cache.
+    """
     if bits >= 16:
         return None
-    return lambda kv: fake_quant_kv(kv, bits)
+    return lambda kv: dequantize_kv(quantize_kv(kv, bits), bits, kv.dtype,
+                                    head_dim=kv.shape[-1])
 
 
 class QuantKV(NamedTuple):
-    q: jax.Array        # packed codes [B,S,H,hd/2] uint8 (4-bit) or int8 (8-bit)
+    q: jax.Array        # packed codes [B,S,H,ceil(hd/2)] uint8 (4-bit) or [...,hd] (8-bit)
     scale: jax.Array    # [B,S,H,1] fp16
     zero: jax.Array     # [B,S,H,1] fp16
+
+
+def packed_dim(hd: int, bits: int) -> int:
+    """Bytes per head row of codes (odd 4-bit dims pad one nibble)."""
+    return (hd * bits + 7) // 8
 
 
 def quantize_kv(kv: jax.Array, bits: int = 4) -> QuantKV:
@@ -38,11 +46,15 @@ def quantize_kv(kv: jax.Array, bits: int = 4) -> QuantKV:
     scale = jnp.maximum((hi - lo) / qmax, 1e-8)
     q = jnp.clip(jnp.round((kv - lo) / scale), 0, qmax).astype(jnp.uint8)
     if bits == 4:
+        if q.shape[-1] % 2:                      # pad odd head dims
+            q = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, 1)])
         q = q[..., 0::2] | (q[..., 1::2] << 4)   # two nibbles per byte
     return QuantKV(q, scale.astype(jnp.float16), lo.astype(jnp.float16))
 
 
-def dequantize_kv(qkv: QuantKV, bits: int = 4, dtype=jnp.bfloat16) -> jax.Array:
+def dequantize_kv(qkv: QuantKV, bits: int = 4, dtype=jnp.bfloat16,
+                  head_dim: int | None = None) -> jax.Array:
+    """Unpack codes back to values; ``head_dim`` trims odd-dim padding."""
     q = qkv.q
     if bits == 4:
         lo = (q & 0xF).astype(dtype)
@@ -50,12 +62,26 @@ def dequantize_kv(qkv: QuantKV, bits: int = 4, dtype=jnp.bfloat16) -> jax.Array:
         q = jnp.stack([lo, hi], axis=-1).reshape(q.shape[:-1] + (q.shape[-1] * 2,))
     else:
         q = q.astype(dtype)
+    if head_dim is not None:
+        q = q[..., :head_dim]
     return q * qkv.scale.astype(dtype) + qkv.zero.astype(dtype)
+
+
+def quantkv_bytes(qkv: QuantKV) -> int:
+    """Bytes actually held by one QuantKV (codes + scale + zero)."""
+    return sum(int(x.size) * x.dtype.itemsize for x in qkv)
 
 
 def kv_bytes(batch: int, seq: int, n_layers: int, n_kv: int, hd: int,
              bits: int) -> int:
-    """Cache footprint (codes + per-(token,head) fp16 scale/zero)."""
-    codes = batch * seq * n_layers * n_kv * hd * 2 * bits // 8
-    meta = batch * seq * n_layers * n_kv * 2 * 2 * 2   # scale+zero fp16, K and V
+    """Dense-cache footprint (codes + per-(token,head) fp16 scale/zero)."""
+    per_tok_head = 2 * packed_dim(hd, bits) if bits < 16 else 2 * hd * 2
+    codes = batch * seq * n_layers * n_kv * per_tok_head      # K and V
+    meta = batch * seq * n_layers * n_kv * 2 * 2 * 2 if bits < 16 else 0
     return codes + meta
+
+
+def paged_kv_bytes(n_pages: int, page_size: int, n_layers: int, n_kv: int,
+                   hd: int, bits: int) -> int:
+    """Actual footprint of a page pool: allocation is per page, not per seq."""
+    return kv_bytes(1, n_pages * page_size, n_layers, n_kv, hd, bits)

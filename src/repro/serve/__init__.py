@@ -1,0 +1,4 @@
+"""Serving runtime: paged int4 KV cache + token-level scheduler + engines."""
+from repro.serve.engine import PagedServeEngine, Request, ServeEngine
+from repro.serve.page_pool import PagePool
+from repro.serve.scheduler import SeqState, TokenScheduler

@@ -1,16 +1,22 @@
-"""Batched serving engine over a (quantized, rotated) model.
+"""Serving engines over a (quantized, rotated) model.
 
-Pipeline: quantize/fuse offline -> prefill the prompt batch -> lockstep decode
-with slot-based continuous batching (finished sequences are replaced by queued
-requests between decode steps).  The rot context carries the online R3/R4
-Hadamards + KV-quant hook, so the engine serves exactly the paper's Fig. 9
-data path (W4 weights, A-quant at linears, 4-bit KV).
+``PagedServeEngine`` is the real runtime: an int4 page-pool KV cache
+(``repro.serve.page_pool``), a token-level continuous-batching scheduler
+(``repro.serve.scheduler``) with chunked prefill, and the Pallas
+paged-attention kernel (``repro.kernels.paged_attn``).  All jitted shapes are
+fixed by the engine geometry (slots, page count, page size, chunk), so one
+engine compiles exactly two programs — the calibrate-on-deploy flow reuses
+them across repeat deployments.
+
+``ServeEngine`` is the legacy lockstep dense-cache engine, kept for model
+families the paged path doesn't cover (MLA/SSM/hybrid/enc-dec).  Its slot
+refill is request-granular and does NOT prefill the refilled prompt — a known
+correctness bug the paged engine fixes by construction.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,19 +25,134 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models.common import NO_SHARD
-from repro.quant import act_quant, fake_quant_act, kv_bytes, make_kv_quant
-from repro.quant.context import set_act_quant
+from repro.quant import fake_quant_act, kv_bytes, make_kv_quant
+from repro.serve.page_pool import PagePool
+from repro.serve.scheduler import Request, SeqState, TokenScheduler
+
+__all__ = ["Request", "ServeEngine", "PagedServeEngine"]
 
 
-@dataclass
-class Request:
-    prompt: np.ndarray
-    max_new: int = 16
-    out: List[int] = field(default_factory=list)
-    done: bool = False
+def _act_quant_hook(a_bits: int):
+    return (lambda x: fake_quant_act(x, a_bits)) if a_bits < 16 else None
+
+
+class PagedServeEngine:
+    """Paged int4-KV serving runtime (W4 weights via params, A-quant hook,
+    4/8-bit integer KV pages, online R3/R4 via the rot context)."""
+
+    def __init__(self, cfg: ModelConfig, params, rot=None, mesh=None,
+                 shd=NO_SHARD, batch_slots: int = 4, max_seq: int = 256,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 a_bits: int = 16, kv_bits: int = 4, greedy: bool = True):
+        if kv_bits not in (4, 8):
+            raise ValueError("paged cache stores integer KV: kv_bits in {4,8}")
+        if not M.supports_paged(cfg):
+            raise NotImplementedError(
+                f"{cfg.arch_id}: use the legacy ServeEngine")
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.kv_bits = kv_bits
+        self.prefill_chunk = prefill_chunk or page_size
+        self.rot = dict(rot or {})
+        if num_pages is None:
+            # every slot can hold a full-length sequence, + the null page
+            num_pages = batch_slots * -(-max_seq // page_size) + 1
+        self.pool = PagePool(cfg, num_pages=num_pages, page_size=page_size,
+                             max_seq=max_seq, kv_bits=kv_bits)
+
+        from repro.train import steps as S
+        aq = _act_quant_hook(a_bits)
+        # donate the pool state (arg 2): the step's output pool aliases the
+        # input buffers instead of copying the whole pool every token.  CPU
+        # XLA has no donation — skip it there to avoid per-call warnings.
+        donate = () if jax.default_backend() == "cpu" else (2,)
+        self._prefill = jax.jit(S.build_paged_prefill_chunk(
+            cfg, mesh=mesh, shd=shd, rot=self.rot, act_quant=aq,
+            kv_bits=kv_bits), donate_argnums=donate, static_argnums=(5,))
+        self._decode = jax.jit(S.build_paged_decode_step(
+            cfg, mesh=mesh, shd=shd, rot=self.rot, act_quant=aq,
+            kv_bits=kv_bits), donate_argnums=donate)
+
+    # ------------------------------------------------------------------ #
+    def _prefill_seq(self, seq: SeqState) -> int:
+        """Chunked prefill of one admitted prompt into its reserved pages;
+        returns the greedy first generated token (prompt-tail argmax)."""
+        cfg = self.cfg
+        prompt = np.asarray(seq.req.prompt, np.int32)
+        C = self.prefill_chunk
+        table = jnp.asarray(self.pool.block_table_row(seq.seq_id)[None])
+        first = 0
+        T = self.pool.page_size
+        for s0 in range(0, len(prompt), C):
+            chunk = prompt[s0:s0 + C]
+            toks = np.zeros((1, C), np.int32)
+            toks[0, :len(chunk)] = chunk
+            n_pages = min(-(-(s0 + C) // T), self.pool.max_pages_per_seq)
+            logits, state = self._prefill(self.params, jnp.asarray(toks),
+                                          self.pool.state, table,
+                                          jnp.int32(s0), n_pages)
+            self.pool.state = state
+            tail = len(prompt) - 1 - s0
+            if 0 <= tail < C:
+                first = int(jnp.argmax(logits[0, tail, :cfg.vocab_size]))
+        return first
+
+    def generate(self, requests: List[Request], verbose: bool = False):
+        """Serve a request list with token-level continuous batching."""
+        cfg = self.cfg
+        sched = TokenScheduler(self.pool, self.slots)
+        sched.add(list(requests))
+        prefill_s = decode_s = 0.0
+        n_prefill = n_decode = 0
+
+        while sched.has_work():
+            admitted = sched.admit()
+            for seq in admitted:
+                t0 = time.time()
+                first = self._prefill_seq(seq)
+                prefill_s += time.time() - t0
+                n_prefill += len(seq.req.prompt)
+                sched.record_prefill(seq, first)
+            if sched.n_running == 0:
+                if not admitted:
+                    sched.check_progress()   # stall: queued work can't fit
+                continue   # admitted requests all finished at prefill
+                           # (max_new=1) — their slots/pages are free again
+            tokens, tables, positions, lengths = sched.batch_inputs()
+            t0 = time.time()
+            logits, state = self._decode(
+                self.params, jnp.asarray(tokens), self.pool.state,
+                jnp.asarray(tables), jnp.asarray(positions),
+                jnp.asarray(lengths))
+            self.pool.state = state
+            nxt = np.asarray(jnp.argmax(logits[:, 0, :cfg.vocab_size], -1))
+            decode_s += time.time() - t0
+            n_decode += sched.n_running
+            sched.advance(nxt)
+
+        stats = {
+            "prefill_s": prefill_s,
+            "prefill_tok_per_s": n_prefill / max(prefill_s, 1e-9),
+            "decode_s": decode_s,
+            "decode_tok_per_s": n_decode / max(decode_s, 1e-9),
+            # actual paged footprint, not a dense-cache estimate
+            "kv_cache_bytes": self.pool.nbytes,
+            "kv_cache_bytes_dense": kv_bytes(
+                self.slots, self.max_seq, cfg.n_layers,
+                max(cfg.n_kv_heads, 1), cfg.resolved_head_dim or 1,
+                self.kv_bits),
+        }
+        if verbose:
+            print(stats)
+        return requests, stats
 
 
 class ServeEngine:
+    """Legacy lockstep dense-cache engine (request-granular slot refill)."""
+
     def __init__(self, cfg: ModelConfig, params, rot=None, mesh=None,
                  shd=NO_SHARD, batch_slots: int = 4, max_seq: int = 256,
                  a_bits: int = 16, kv_bits: int = 16, greedy: bool = True):
@@ -46,16 +167,16 @@ class ServeEngine:
         self.rot = rot
         self.kv_bits = kv_bits
 
-        aq = (lambda x: fake_quant_act(x, a_bits)) if a_bits < 16 else None
-        set_act_quant(aq)
-        try:
-            from repro.train import steps as S
-            self._prefill = jax.jit(S.build_prefill(cfg, mesh=mesh, shd=shd,
-                                                    rot=self.rot))
-            self._decode = jax.jit(S.build_decode_step(cfg, mesh=mesh,
-                                                       shd=shd, rot=self.rot))
-        finally:
-            set_act_quant(None)
+        # act-quant is threaded through the step builders so the hook is live
+        # while jit *traces* (a set/clear around jit construction is a no-op —
+        # tracing is lazy) and nothing global leaks across engines.
+        aq = _act_quant_hook(a_bits)
+        from repro.train import steps as S
+        self._prefill = jax.jit(S.build_prefill(cfg, mesh=mesh, shd=shd,
+                                                rot=self.rot, act_quant=aq))
+        self._decode = jax.jit(S.build_decode_step(cfg, mesh=mesh, shd=shd,
+                                                   rot=self.rot,
+                                                   act_quant=aq))
         self._aq = aq
 
     # ------------------------------------------------------------------ #
@@ -80,12 +201,19 @@ class ServeEngine:
                 toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
         t0 = time.time()
         logits, cache = self._prefill(self.params, jnp.asarray(toks))
-        # grow cache to max_seq
-        cache = jax.tree.map(
-            lambda x: (jnp.pad(x, [(0, 0)] * 2
+
+        # grow the KV caches (seq on axis 2) to max_seq.  Only "kv*" subtrees:
+        # SSM state [L,B,H,P,N] or cross-attention KV can collide with the
+        # shape[2] == plen heuristic and must not be padded.
+        def grow(x):
+            if x.ndim >= 3 and x.shape[2] == plen:
+                return jnp.pad(x, [(0, 0)] * 2
                                + [(0, self.max_seq - x.shape[2])]
                                + [(0, 0)] * (x.ndim - 3))
-                       if x.ndim >= 3 and x.shape[2] == plen else x), cache)
+            return x
+
+        cache = {k: (jax.tree.map(grow, v) if k.startswith("kv") else v)
+                 for k, v in cache.items()}
         prefill_s = time.time() - t0
 
         last = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
@@ -106,7 +234,9 @@ class ServeEngine:
                     r.done = True
                     active[i] = take()   # continuous batching: refill slot
                     if active[i] is not None:
-                        # new request decodes from its prompt tail token
+                        # KNOWN BUG (fixed in PagedServeEngine): the refilled
+                        # request decodes from its prompt tail without a
+                        # prefill — it inherits the previous occupant's KV.
                         nxt_np[i] = active[i].prompt[-1]
             last = jnp.asarray(nxt_np)
             pos += 1

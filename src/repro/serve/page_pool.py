@@ -1,0 +1,106 @@
+"""Paged int4 KV cache: a fixed pool of token pages + per-sequence block tables.
+
+Memory is allocated in fixed-size pages of ``page_size`` tokens (vLLM-style),
+stored in the ``QuantKV`` integer format (packed int4/int8 codes + fp16
+scale/zero per (token, head)).  The device state is a flat dict of arrays with
+a leading layer dim so the model's layer scan consumes it as scan xs:
+
+    kq, vq:  [L, num_pages, page_size, Hkv, packed_dim(hd, bits)]  uint8
+    ks, kz,
+    vs, vz:  [L, num_pages, page_size, Hkv]                        fp16
+
+Physical page 0 is a reserved *null page*: inactive decode slots and
+out-of-range block-table entries point at it, so their writes can never
+clobber a live sequence.  The host-side allocator hands out pages 1..P-1 and
+keeps per-sequence block tables (logical page order -> physical page id).
+
+``nbytes`` is the bytes actually held on device — the serve engine reports it
+instead of a dense-cache estimate.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.quant.kv_cache import packed_dim, paged_kv_bytes
+
+
+class PagePool:
+    def __init__(self, cfg: ModelConfig, *, num_pages: int, page_size: int,
+                 max_seq: int, kv_bits: int = 4):
+        if cfg.attn_type != "gqa" or cfg.family not in ("dense", "moe") \
+                or cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                f"paged KV cache supports dense GQA models, not {cfg.arch_id}")
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the null page)")
+        self.cfg = cfg
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.kv_bits = kv_bits
+        self.max_pages_per_seq = -(-max_seq // page_size)
+        L, H, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+        pd = packed_dim(hd, kv_bits)
+        codes = (L, num_pages, page_size, H, pd)
+        meta = (L, num_pages, page_size, H)
+        self.state: Dict[str, jnp.ndarray] = {
+            "kq": jnp.zeros(codes, jnp.uint8),
+            "ks": jnp.zeros(meta, jnp.float16),
+            "kz": jnp.zeros(meta, jnp.float16),
+            "vq": jnp.zeros(codes, jnp.uint8),
+            "vs": jnp.zeros(meta, jnp.float16),
+            "vz": jnp.zeros(meta, jnp.float16),
+        }
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._owned: Dict[int, List[int]] = {}      # seq_id -> physical pages
+
+    # ---------------------------------------------------------------- alloc
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return max(1, -(-n_tokens // self.page_size))
+
+    def can_alloc(self, n_tokens: int) -> bool:
+        n = self.pages_for(n_tokens)
+        return n <= len(self._free) and n <= self.max_pages_per_seq
+
+    def alloc_seq(self, seq_id: int, n_tokens: int) -> List[int]:
+        """Reserve pages covering ``n_tokens`` for a new sequence."""
+        if seq_id in self._owned:
+            raise ValueError(f"seq {seq_id} already holds pages")
+        n = self.pages_for(n_tokens)
+        if n > self.max_pages_per_seq:
+            raise ValueError(f"seq of {n_tokens} tokens exceeds max_seq")
+        if n > len(self._free):
+            raise MemoryError(f"pool exhausted: want {n}, free {len(self._free)}")
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned[seq_id] = pages
+        return pages
+
+    def free_seq(self, seq_id: int) -> None:
+        self._free.extend(self._owned.pop(seq_id))
+
+    # ---------------------------------------------------------- block tables
+    def block_table_row(self, seq_id: int) -> np.ndarray:
+        """[max_pages_per_seq] int32; unallocated logical pages -> null page 0."""
+        row = np.zeros((self.max_pages_per_seq,), np.int32)
+        pages = self._owned.get(seq_id, [])
+        row[:len(pages)] = pages
+        return row
+
+    # ---------------------------------------------------------------- bytes
+    @property
+    def nbytes(self) -> int:
+        return sum(int(x.size) * x.dtype.itemsize for x in self.state.values())
+
+    @property
+    def predicted_nbytes(self) -> int:
+        cfg = self.cfg
+        return paged_kv_bytes(self.num_pages, self.page_size, cfg.n_layers,
+                              cfg.n_kv_heads, cfg.resolved_head_dim,
+                              self.kv_bits)

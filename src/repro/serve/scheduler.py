@@ -1,0 +1,145 @@
+"""Token-level continuous-batching scheduler over the paged KV cache.
+
+Request lifecycle: WAITING -(admit: pages reserved, chunked prefill)->
+RUNNING -(max_new tokens)-> FINISHED.  Admission happens between any two
+decode steps (token granularity, not request granularity): whenever a slot
+frees up and the pool has pages for ``len(prompt) + max_new`` tokens, the
+head-of-line request is admitted and prefilled *into its own pages* — a
+refilled slot can never inherit the previous occupant's stale KV, which is
+the legacy engine's refill bug fixed by construction.
+
+The scheduler is pure host logic: it owns request state and the page
+allocator, and marshals the fixed-shape [slots]-batched inputs the jitted
+decode step consumes.  Admission is FCFS without skip-ahead, so a giant
+request cannot be starved by small ones slipping past it.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serve.page_pool import PagePool
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class SeqState:
+    """A running request: its slot, pages (held by seq_id) and progress."""
+    req: Request
+    seq_id: int
+    slot: int
+    pos: int = 0            # tokens written to the paged cache so far
+    last_token: int = 0     # next decode input
+
+
+class TokenScheduler:
+    def __init__(self, pool: PagePool, slots: int):
+        self.pool = pool
+        self.slots = slots
+        self.waiting: deque[Request] = deque()
+        self.running: List[Optional[SeqState]] = [None] * slots
+        self.finished: List[SeqState] = []
+        self._next_id = 0
+
+    # ----------------------------------------------------------------- state
+    @property
+    def n_running(self) -> int:
+        return sum(s is not None for s in self.running)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or self.n_running > 0
+
+    def add(self, requests: List[Request]) -> None:
+        self.waiting.extend(requests)
+
+    # ------------------------------------------------------------- admission
+    def admit(self) -> List[SeqState]:
+        """Fill free slots from the waiting queue while pages last.  Returns
+        the newly admitted sequences; the engine must prefill each before the
+        next decode step."""
+        admitted = []
+        for slot in range(self.slots):
+            if self.running[slot] is not None or not self.waiting:
+                continue
+            req = self.waiting[0]
+            need = len(req.prompt) + req.max_new
+            if not self.pool.can_alloc(need):
+                break                     # FCFS: no skip-ahead past the head
+            self.waiting.popleft()
+            seq = SeqState(req, self._next_id, slot)
+            self._next_id += 1
+            self.pool.alloc_seq(seq.seq_id, need)
+            self.running[slot] = seq
+            admitted.append(seq)
+        return admitted
+
+    def check_progress(self) -> None:
+        """Deadlock guard: work is queued but nothing runs and nothing fits."""
+        if self.has_work() and self.n_running == 0:
+            req = self.waiting[0]
+            need = self.pool.pages_for(len(req.prompt) + req.max_new)
+            detail = (f"exceeds the per-seq cap of "
+                      f"{self.pool.max_pages_per_seq} pages (max_seq)"
+                      if need > self.pool.max_pages_per_seq else
+                      f"pool has {self.pool.free_pages} free of "
+                      f"{self.pool.num_pages - 1}")
+            raise MemoryError(
+                f"request of {len(req.prompt)}+{req.max_new} tokens needs "
+                f"{need} pages; {detail}")
+
+    # ------------------------------------------------------------ progress
+    def record_prefill(self, seq: SeqState, first_token: int) -> None:
+        """Prompt fully in pages; ``first_token`` = argmax at the prompt tail."""
+        seq.pos = len(seq.req.prompt)
+        seq.last_token = first_token
+        seq.req.out.append(first_token)
+        if len(seq.req.out) >= seq.req.max_new:
+            self._finish(seq)
+
+    def batch_inputs(self):
+        """Fixed-shape [slots] decode inputs; idle slots get length 0 (fully
+        masked) and write position 0 (the pool's null page)."""
+        B, Pmax = self.slots, self.pool.max_pages_per_seq
+        tokens = np.zeros((B, 1), np.int32)
+        tables = np.zeros((B, Pmax), np.int32)
+        positions = np.zeros((B,), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        for slot, seq in enumerate(self.running):
+            if seq is None:
+                continue
+            tokens[slot, 0] = seq.last_token
+            tables[slot] = self.pool.block_table_row(seq.seq_id)
+            positions[slot] = seq.pos
+            lengths[slot] = seq.pos + 1
+        return tokens, tables, positions, lengths
+
+    def advance(self, next_tokens: np.ndarray) -> List[SeqState]:
+        """Consume one decode step's sampled tokens; returns newly finished."""
+        done = []
+        for slot, seq in enumerate(self.running):
+            if seq is None:
+                continue
+            seq.pos += 1
+            tok = int(next_tokens[slot])
+            seq.req.out.append(tok)
+            seq.last_token = tok
+            if len(seq.req.out) >= seq.req.max_new:
+                done.append(seq)
+                self._finish(seq)
+        return done
+
+    def _finish(self, seq: SeqState) -> None:
+        seq.req.done = True
+        self.pool.free_seq(seq.seq_id)
+        self.running[seq.slot] = None
+        self.finished.append(seq)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, ShapeCell
 from repro.models import model as M
 from repro.models.common import NO_SHARD
+from repro.quant import context as qctx
 from repro.train.optimizer import (OptState, adamw_update, clip_by_global_norm,
                                    init_opt_state)
 
@@ -72,17 +73,47 @@ def build_train_step(cfg: ModelConfig, mesh=None, shd=NO_SHARD, rot=None,
     return train_step
 
 
-def build_prefill(cfg: ModelConfig, mesh=None, shd=NO_SHARD, rot=None):
+def build_prefill(cfg: ModelConfig, mesh=None, shd=NO_SHARD, rot=None,
+                  act_quant=None):
+    """``act_quant``: per-linear activation hook, threaded explicitly so the
+    quant context is active while jit *traces* the step (a global set/clear
+    around ``jax.jit(...)`` construction never fires — tracing is lazy)."""
     def prefill_step(params, tokens, frames=None):
-        return M.prefill(cfg, params, tokens, frames=frames, shd=shd,
-                         mesh=mesh, rot=rot)
+        with qctx.act_quant(act_quant):
+            return M.prefill(cfg, params, tokens, frames=frames, shd=shd,
+                             mesh=mesh, rot=rot)
     return prefill_step
 
 
-def build_decode_step(cfg: ModelConfig, mesh=None, shd=NO_SHARD, rot=None):
+def build_decode_step(cfg: ModelConfig, mesh=None, shd=NO_SHARD, rot=None,
+                      act_quant=None):
     def decode_step(params, token, cache, pos):
-        return M.decode_step(cfg, params, token, cache, pos, shd=shd,
-                             mesh=mesh, rot=rot)
+        with qctx.act_quant(act_quant):
+            return M.decode_step(cfg, params, token, cache, pos, shd=shd,
+                                 mesh=mesh, rot=rot)
+    return decode_step
+
+
+def build_paged_prefill_chunk(cfg: ModelConfig, mesh=None, shd=NO_SHARD,
+                              rot=None, act_quant=None, kv_bits: int = 4):
+    def prefill_chunk(params, tokens, pool, block_table, start, n_pages):
+        # n_pages is static (jit specializes per covered-page count): only the
+        # page prefix holding [0, start+C) is gathered for chunk attention
+        with qctx.act_quant(act_quant):
+            return M.paged_prefill_chunk(cfg, params, tokens, pool,
+                                         block_table, start, shd=shd,
+                                         mesh=mesh, rot=rot, kv_bits=kv_bits,
+                                         n_pages=n_pages)
+    return prefill_chunk
+
+
+def build_paged_decode_step(cfg: ModelConfig, mesh=None, shd=NO_SHARD,
+                            rot=None, act_quant=None, kv_bits: int = 4):
+    def decode_step(params, token, pool, block_tables, positions, lengths):
+        with qctx.act_quant(act_quant):
+            return M.paged_decode_step(cfg, params, token, pool, block_tables,
+                                       positions, lengths, shd=shd, mesh=mesh,
+                                       rot=rot, kv_bits=kv_bits)
     return decode_step
 
 

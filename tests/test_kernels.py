@@ -8,10 +8,13 @@ from repro.kernels.act_quant.ops import act_quant
 from repro.kernels.act_quant.ref import act_quant_ref
 from repro.kernels.hadamard.ops import online_hadamard as wht_op
 from repro.kernels.hadamard.ref import wht_ref
+from repro.kernels.paged_attn.ops import paged_attention
+from repro.kernels.paged_attn.ref import paged_attention_ref
 from repro.kernels.quant_matmul.ops import w4_matmul
 from repro.kernels.quant_matmul.ref import w4_matmul_ref
 from repro.kernels.whip_rotate.ops import whip_rotate
 from repro.kernels.whip_rotate.ref import whip_rotate_grad_ref, whip_rotate_ref
+from repro.quant.kv_cache import quantize_kv
 from repro.quant.quantizers import QTensor, pack_int4, quant_weight
 
 
@@ -24,6 +27,65 @@ def test_wht_kernel_matches_ref(n, dtype, key):
     tol = 5e-5 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("n", [64, 256])
+def test_wht_kernel_matches_online_hadamard(n, key):
+    """Serve-path parity: the Pallas WHT op == core.rotations.online_hadamard
+    (the dense-matmul R3/R4 reference the serve driver used to import)."""
+    from repro.core.rotations import online_hadamard as dense_op
+    x = jax.random.normal(key, (4, 8, 2, n), jnp.float32)
+    np.testing.assert_allclose(np.asarray(wht_op(x)),
+                               np.asarray(dense_op(x)), atol=5e-5, rtol=5e-5)
+
+
+def _quant_pool(key, P, T, H, hd, bits):
+    k = jax.random.normal(key, (P, T, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 7), (P, T, H, hd))
+    qk, qv = quantize_kv(k, bits), quantize_kv(v, bits)
+    return {"kq": qk.q, "ks": qk.scale[..., 0], "kz": qk.zero[..., 0],
+            "vq": qv.q, "vs": qv.scale[..., 0], "vz": qv.zero[..., 0]}
+
+
+@pytest.mark.parametrize("bits,hd", [(4, 16), (4, 13), (8, 16)])
+@pytest.mark.parametrize("window,cap", [(0, 0.0), (5, 0.0), (0, 30.0)])
+def test_paged_attn_kernel_matches_ref(bits, hd, window, cap, key):
+    """Pallas paged attention (scalar-prefetch block-table gather + fused
+    int4 dequant + online softmax) vs the dense-gather oracle; lengths
+    include partial pages, full capacity, and an empty (idle) slot."""
+    P, T, H, G = 9, 4, 2, 3
+    B, Pmax = 4, 5
+    pool = _quant_pool(key, P, T, H, hd, bits)
+    rng = np.random.default_rng(3)
+    bt = jnp.asarray(rng.integers(1, P, (B, Pmax)), jnp.int32)
+    lengths = jnp.asarray([7, 20, 1, 0], jnp.int32)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, H * G, hd))
+    out = paged_attention(q, pool, bt, lengths, bits=bits, window=window,
+                          logit_cap=cap)
+    ref = paged_attention_ref(q, pool, bt, lengths, bits=bits, window=window,
+                              logit_cap=cap)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-6, rtol=2e-5)
+
+
+def test_paged_attn_matches_dense_decode(key):
+    """Paged attention over int4 pages == the dense decode path
+    (decode_attn_scores) over the same dequantized cache, within f32 noise."""
+    from repro.kernels.paged_attn.ref import gather_pages
+    from repro.models.attention import decode_attn_scores
+    P, T, H, hd, G, B, Pmax = 9, 4, 2, 16, 2, 2, 4
+    pool = _quant_pool(key, P, T, H, hd, 4)
+    rng = np.random.default_rng(0)
+    bt = jnp.asarray(rng.integers(1, P, (B, Pmax)), jnp.int32)
+    lengths = jnp.asarray([9, 14], jnp.int32)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, H * G, hd))
+    out = paged_attention(q, pool, bt, lengths, bits=4)
+    k, v = gather_pages(pool, bt, bits=4, head_dim=hd)
+    k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    dense = decode_attn_scores(q, k, v, k_pos, (lengths - 1)[:, None])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               atol=2e-6, rtol=2e-5)
 
 
 @pytest.mark.parametrize("shape", [(16, 64), (128, 96), (64, 512), (3, 33)])
