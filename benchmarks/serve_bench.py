@@ -4,7 +4,10 @@ Measures on a reduced llama2-7b:
   * decode throughput (tok/s) and chunked-prefill latency of the paged engine,
   * the same for the legacy lockstep engine (dense fake-quant cache),
   * KV memory: actual paged-pool bytes vs the dense-cache estimate at the
-    same capacity, plus pool utilization for the benchmark workload.
+    same capacity, plus pool utilization for the benchmark workload,
+  * weight memory: packed-QTensor projection bytes vs the fp16 QDQ footprint
+    they replace, artifact (hash-verified, mmap) load time, and decode
+    throughput of the packed-weight engine cold-booted from that artifact.
 
 Warm numbers re-run ``generate`` with the jit cache hot — the serving regime:
 the paged engine's two programs are keyed by engine geometry (slots, pages,
@@ -72,4 +75,36 @@ def run(smoke: bool = False) -> list:
     stats = _serve(legacy, cfg, n_req, plen, max_new, require_done=False)
     rows.append((f"serve,legacy_decode,{tag}",
                  stats["decode_tok_per_s"], "tok_per_s"))
+
+    # quantize-once pipeline: weight memory + artifact cold-boot cost.
+    # Rotation choice doesn't matter for bytes — use the Hadamard pack so the
+    # bench never pays calibration time.
+    import tempfile
+
+    from repro.artifacts import (QuantArtifact, load_artifact, rotation_spec,
+                                 save_artifact)
+    from repro.core import fuse_rotations, random_pack
+    from repro.quant import pack_params, projection_weight_bytes
+
+    pack = random_pack(cfg, jax.random.PRNGKey(1))
+    fcfg, fparams = fuse_rotations(cfg, params, pack)
+    # snapshot the same serving bits the engines above ran with, so the
+    # packed cold-boot row is apples-to-apples
+    fcfg = fcfg.replace(quant=fcfg.quant.replace(a_bits=8, kv_bits=4))
+    packed = pack_params(fcfg, fparams)
+    proj, proj_fp16 = projection_weight_bytes(packed)
+    rows.append((f"serve,w_bytes_packed,{tag}", proj, "B"))
+    rows.append((f"serve,w_bytes_qdq_fp16,{tag}", proj_fp16, "B"))
+    with tempfile.TemporaryDirectory() as td:
+        save_artifact(td, QuantArtifact(cfg=fcfg, params=packed,
+                                        rotations=rotation_spec(pack)))
+        t0 = time.time()
+        art = load_artifact(td)                  # mmap + hash verification
+        rows.append((f"serve,artifact_load,{tag}", time.time() - t0, "s"))
+        cold = PagedServeEngine.from_artifact(art, batch_slots=slots,
+                                              max_seq=max_seq, page_size=page)
+        _serve(cold, cfg, n_req, plen, max_new)            # compile
+        stats = _serve(cold, cfg, n_req, plen, max_new)    # warm
+        rows.append((f"serve,paged_packed_decode,{tag}",
+                     stats["decode_tok_per_s"], "tok_per_s"))
     return rows

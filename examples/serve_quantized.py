@@ -1,12 +1,21 @@
-"""End-to-end serving driver: batched requests against a DartQuant W4A8KV4
-model on the paged int4-KV runtime — page-pool cache, token-level continuous
-batching with chunked prefill, Pallas paged attention, and the Pallas WHT
-kernel as the online R3/R4 rotation.
+"""Quantize-once → serve-from-artifact: the production deployment flow.
+
+Step 1 runs DartQuant calibration once, folds R1/R2 into the weights, packs
+every projection to int4 QTensors (fp16 scales), and writes a hash-verified
+QuantArtifact.  Step 2 cold-boots the paged int4-KV runtime from that
+artifact — packed weights straight onto the device through the Pallas
+quant_matmul kernel, online R3/R4 resolved from the fused-rotation metadata,
+and zero calls into the calibration stack.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
-from repro.launch.serve import main
+import tempfile
 
-main(["--arch", "llama2-7b", "--engine", "paged", "--requests", "8",
-      "--slots", "4", "--prompt-len", "12", "--max-new", "12",
-      "--page-size", "8", "--a-bits", "8", "--kv-bits", "4"])
+from repro.launch.quantize import main as quantize
+from repro.launch.serve import main as serve
+
+with tempfile.TemporaryDirectory() as artifact_dir:
+    quantize(["--arch", "llama2-7b", "--steps", "20", "--a-bits", "8",
+              "--kv-bits", "4", "--out", artifact_dir])
+    serve(["--artifact", artifact_dir, "--requests", "8", "--slots", "4",
+           "--prompt-len", "12", "--max-new", "12", "--page-size", "8"])

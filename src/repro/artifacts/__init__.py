@@ -1,0 +1,14 @@
+"""Quantize-once artifact pipeline (deployment half of DartQuant).
+
+Calibration runs once (``repro.launch.quantize``); serving cold-boots from a
+serialized ``QuantArtifact`` — packed integer weights, fused-rotation
+metadata, config snapshot, hash-verified manifest — without touching the
+calibration stack.
+"""
+from repro.artifacts.format import (QuantArtifact, config_from_dict,
+                                    config_to_dict, resolve_rotations,
+                                    rotation_spec)
+from repro.artifacts.io import ArtifactError, load_artifact, save_artifact
+from repro.artifacts.manifest import (build_manifest, flatten_tree,
+                                      tensor_sha256, unflatten_tree,
+                                      verify_manifest)

@@ -1,0 +1,77 @@
+"""QuantArtifact: the serialized quantize-once deployment unit.
+
+An artifact is everything serving needs and nothing calibration needs:
+
+  * ``params``     — model pytree with projection weights as packed
+                     ``QTensor``s (int4 nibbles / int8 codes + fp16 group or
+                     per-channel scales); norms/embeddings stay dense.
+  * ``rotations``  — fused-rotation metadata: R1/R2 are already folded into
+                     the weights (recorded as ``"fused"``), R3/R4 are online
+                     Hadamard specs resolved to the Pallas WHT kernel at boot.
+  * ``cfg``        — the *fused* ModelConfig snapshot (norm conversion, quant
+                     settings) so the engine needs no source-of-truth lookup.
+  * manifest       — per-tensor shapes/dtypes/offsets/sha256, asserted on load.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, QuantConfig
+
+FORMAT_VERSION = 1
+
+
+@dataclass
+class QuantArtifact:
+    cfg: ModelConfig
+    params: dict
+    rotations: Dict[str, Optional[str]] = field(default_factory=dict)
+    meta: dict = field(default_factory=dict)
+    manifest: Optional[dict] = None
+
+
+def rotation_spec(pack: dict) -> Dict[str, Optional[str]]:
+    """Fused-rotation metadata for a calibration pack that has just been
+    folded into the weights: R1/R2 carry no runtime work, R3/R4 run as
+    online Hadamards."""
+    return {
+        "r1": "fused" if pack.get("r1") is not None else None,
+        "r2": "fused" if (pack.get("r2") is not None
+                          or pack.get("r2_shared") is not None) else None,
+        "r3": "hadamard",
+        "r4": "hadamard" if pack.get("r4") is not None else None,
+    }
+
+
+def resolve_rotations(rotations: Dict[str, Optional[str]]) -> dict:
+    """Build the serve-time rot-context hooks from artifact metadata.
+
+    Only online sites materialize hooks; ``"fused"`` sites are already in the
+    weights.  The Pallas WHT kernel is the Hadamard implementation (TPU fast
+    path; interpret mode elsewhere).
+    """
+    from repro.kernels.hadamard.ops import online_hadamard
+    rot = {}
+    for site in ("r3", "r4"):
+        kind = rotations.get(site)
+        if kind is None or kind == "fused":
+            continue
+        if kind != "hadamard":
+            raise ValueError(f"unknown online rotation {site}={kind!r}")
+        rot[site] = online_hadamard
+    return rot
+
+
+def config_to_dict(cfg: ModelConfig) -> dict:
+    d = dataclasses.asdict(cfg)
+    d["skip_shapes"] = list(d["skip_shapes"])
+    return d
+
+
+def config_from_dict(d: dict) -> ModelConfig:
+    d = dict(d)
+    qc = QuantConfig(**d.pop("quant"))
+    d["skip_shapes"] = tuple(d.get("skip_shapes", ()))
+    return ModelConfig(quant=qc, **d)

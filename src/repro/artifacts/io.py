@@ -1,0 +1,103 @@
+"""Artifact I/O: one manifest.json + one flat weights.bin per artifact.
+
+``save_artifact`` writes tensors back-to-back (64-byte aligned) into a single
+blob; ``load_artifact`` memory-maps the blob and hands out zero-copy views —
+no per-tensor file opens, no deserialization copies.  Manifest hashes are
+verified on load by default (format invariant: a corrupted artifact never
+serves).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+import numpy as np
+
+from repro.artifacts.format import (FORMAT_VERSION, QuantArtifact,
+                                    config_from_dict, config_to_dict)
+from repro.artifacts.manifest import (ALIGN, build_manifest, flatten_tree,
+                                      unflatten_tree, verify_manifest)
+
+MANIFEST = "manifest.json"
+WEIGHTS = "weights.bin"
+
+
+class ArtifactError(RuntimeError):
+    pass
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes                      # bfloat16 & friends
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def save_artifact(path: str, artifact: QuantArtifact) -> dict:
+    """Serialize a QuantArtifact into directory ``path``; returns the
+    manifest dict that was written."""
+    os.makedirs(path, exist_ok=True)
+    spec, tensors = flatten_tree(artifact.params)
+    entries = build_manifest(tensors)
+    with open(os.path.join(path, WEIGHTS), "wb") as f:
+        for e, a in zip(entries, tensors):
+            pad = e["offset"] - f.tell()
+            if pad:
+                f.write(b"\0" * pad)
+            f.write(a.view(np.uint8).reshape(-1).data)
+    manifest = {
+        "format_version": FORMAT_VERSION,
+        "model_config": config_to_dict(artifact.cfg),
+        "rotations": dict(artifact.rotations),
+        "meta": dict(artifact.meta),
+        "tree": spec,
+        "tensors": entries,
+    }
+    with open(os.path.join(path, MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def load_artifact(path: str, mmap: bool = True,
+                  verify: bool = True) -> QuantArtifact:
+    """Load an artifact directory; tensors are zero-copy views into the
+    memory-mapped blob (``mmap=False`` reads it into RAM instead).
+
+    ``verify`` asserts every tensor's sha256 against the manifest.
+    """
+    try:
+        with open(os.path.join(path, MANIFEST)) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise ArtifactError(f"unreadable artifact at {path}: {e}") from e
+    if manifest.get("format_version") != FORMAT_VERSION:
+        raise ArtifactError(
+            f"artifact format {manifest.get('format_version')} != "
+            f"{FORMAT_VERSION}")
+    blob_path = os.path.join(path, WEIGHTS)
+    if mmap:
+        blob = np.memmap(blob_path, dtype=np.uint8, mode="r")
+    else:
+        blob = np.fromfile(blob_path, dtype=np.uint8)
+    entries = manifest["tensors"]
+    tensors = []
+    for e in entries:
+        end = e["offset"] + e["nbytes"]
+        if end > blob.size:
+            raise ArtifactError(f"{e['name']}: blob truncated "
+                                f"({blob.size} < {end} bytes)")
+        view = blob[e["offset"]:end].view(_np_dtype(e["dtype"]))
+        tensors.append(view.reshape(e["shape"]))
+    if verify:
+        try:
+            verify_manifest(entries, tensors)
+        except ValueError as e:
+            raise ArtifactError(str(e)) from e
+    params = unflatten_tree(manifest["tree"], tensors)
+    return QuantArtifact(cfg=config_from_dict(manifest["model_config"]),
+                         params=params,
+                         rotations=manifest.get("rotations", {}),
+                         meta=manifest.get("meta", {}),
+                         manifest=manifest)

@@ -1,0 +1,94 @@
+"""Artifact manifest: tree spec + tensor table with content hashes.
+
+The param pytree is walked explicitly (dicts, ``QTensor`` nodes, arrays,
+None) into a JSON tree spec referencing a flat tensor list; the tensor table
+records shape/dtype/offset/sha256 per entry.  Hashes are asserted on every
+load — a truncated or bit-flipped artifact can never serve.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.quant.quantizers import QTensor
+
+ALIGN = 64          # tensor offsets in weights.bin are 64-byte aligned
+
+
+def tensor_sha256(a) -> str:
+    a = np.ascontiguousarray(np.asarray(a))
+    return hashlib.sha256(a.view(np.uint8).reshape(-1).data).hexdigest()
+
+
+def flatten_tree(tree) -> Tuple[dict, List[np.ndarray]]:
+    """-> (json-able tree spec, tensor list in reference order)."""
+    tensors: List[np.ndarray] = []
+
+    def ref(a) -> int:
+        tensors.append(np.ascontiguousarray(np.asarray(a)))
+        return len(tensors) - 1
+
+    def walk(node):
+        if isinstance(node, QTensor):
+            return {"kind": "qtensor", "bits": node.bits, "group": node.group,
+                    "in_features": node.in_features, "packed": node.packed,
+                    "q": ref(node.q), "scale": ref(node.scale),
+                    "zero": None if node.zero is None else ref(node.zero)}
+        if isinstance(node, dict):
+            return {"kind": "dict",
+                    "items": {k: walk(node[k]) for k in sorted(node)}}
+        if node is None:
+            return {"kind": "none"}
+        return {"kind": "array", "tensor": ref(node)}
+
+    return walk(tree), tensors
+
+
+def unflatten_tree(spec: dict, tensors: List[np.ndarray]):
+    kind = spec["kind"]
+    if kind == "qtensor":
+        zero = spec["zero"]
+        return QTensor(tensors[spec["q"]], tensors[spec["scale"]],
+                       None if zero is None else tensors[zero],
+                       bits=spec["bits"], group=spec["group"],
+                       in_features=spec["in_features"], packed=spec["packed"])
+    if kind == "dict":
+        return {k: unflatten_tree(v, tensors)
+                for k, v in spec["items"].items()}
+    if kind == "none":
+        return None
+    return tensors[spec["tensor"]]
+
+
+def build_manifest(tensors: List[np.ndarray]) -> List[dict]:
+    """Tensor table with aligned offsets into the flat weights blob."""
+    entries, offset = [], 0
+    for i, a in enumerate(tensors):
+        offset = -(-offset // ALIGN) * ALIGN
+        entries.append({
+            "name": f"t{i}",
+            "offset": offset,
+            "nbytes": int(a.nbytes),
+            "shape": list(a.shape),
+            "dtype": a.dtype.name,
+            "sha256": tensor_sha256(a),
+        })
+        offset += int(a.nbytes)
+    return entries
+
+
+def verify_manifest(entries: List[dict], tensors: List[np.ndarray]) -> None:
+    """Assert shapes/dtypes/hashes of loaded tensors against the manifest."""
+    if len(entries) != len(tensors):
+        raise ValueError(f"manifest lists {len(entries)} tensors, "
+                         f"blob decoded {len(tensors)}")
+    for e, a in zip(entries, tensors):
+        if list(a.shape) != e["shape"] or a.dtype.name != e["dtype"]:
+            raise ValueError(f"{e['name']}: shape/dtype mismatch "
+                             f"({a.shape}/{a.dtype.name} vs manifest)")
+        got = tensor_sha256(a)
+        if got != e["sha256"]:
+            raise ValueError(f"{e['name']}: sha256 mismatch — artifact "
+                             "corrupted or truncated")

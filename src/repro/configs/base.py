@@ -31,6 +31,9 @@ class QuantConfig:
     use_r3: bool = True             # online Hadamard on Q/K (KV-cache quant)
     use_r4: bool = True             # online Hadamard before down-proj
 
+    def replace(self, **kw) -> "QuantConfig":
+        return dataclasses.replace(self, **kw)
+
 
 @dataclass(frozen=True)
 class ModelConfig:

@@ -1,27 +1,46 @@
-"""Public wrapper: W4 dequant matmul over QTensor weights."""
+"""Public wrapper: quantized-weight dequant matmul over QTensor weights."""
 from __future__ import annotations
 
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.common import use_interpret
-from repro.kernels.quant_matmul.quant_matmul import w4_matmul_pallas
+from repro.kernels.quant_matmul.quant_matmul import quant_matmul_pallas
 from repro.quant.quantizers import QTensor
 
 
-def w4_matmul(x: jax.Array, qt: QTensor) -> jax.Array:
-    """y = x @ dequant(qt).T for any-rank x; qt.q packed uint8 [N, K/2]."""
+def _block(n: int, cap: int = 128) -> int:
+    b = cap
+    while n % b and b > 1:
+        b //= 2
+    return b
+
+
+def quant_matmul(x: jax.Array, qt: QTensor) -> jax.Array:
+    """y = x @ dequant(qt).T for any-rank x.
+
+    qt.q: packed uint8 [N, K/2] (int4) or int8 [N, K]; qt.scale [N, 1] or
+    [N, K/group].  x's last dim is the *logical* in-feature count — it is
+    zero-padded up to the stored (even/group-padded) K, which is exact since
+    the padded weight columns hold zero codes.
+    """
     lead = x.shape[:-1]
     K = x.shape[-1]
+    Kp = qt.stored_in_dim
+    if Kp != K:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, Kp - K)])
     m = int(np.prod(lead)) if lead else 1
-    bm = 128
-    while m % bm and bm > 1:
-        bm //= 2
     N = qt.q.shape[0]
-    bn = 128
-    while N % bn and bn > 1:
-        bn //= 2
-    y = w4_matmul_pallas(x.reshape(m, K), qt.q, qt.scale,
-                         block_m=bm, block_n=bn, interpret=use_interpret())
+    scale = qt.scale if qt.scale.ndim == 2 else qt.scale.reshape(N, -1)
+    y = quant_matmul_pallas(x.reshape(m, Kp), qt.q, scale,
+                            bits=qt.bits, group=qt.group,
+                            block_m=_block(m), block_n=_block(N),
+                            interpret=use_interpret())
     return y.reshape(lead + (N,))
+
+
+def w4_matmul(x: jax.Array, qt: QTensor) -> jax.Array:
+    """Back-compat alias: packed-int4 QTensor matmul."""
+    return quant_matmul(x, qt)

@@ -1,12 +1,14 @@
-"""Pallas TPU kernel: int4-weight dequant matmul (the serving GEMM).
+"""Pallas TPU kernel: int4/int8-weight dequant matmul (the serving GEMM).
 
 TPU adaptation of the paper's CUTLASS INT4 GEMM: v5e has no INT4 MXU path, so
-the TPU-native form is weight-only int4 — packed nibbles are unpacked and
-dequantized to bf16 *inside VMEM* (halving HBM weight traffic, the actual
-bottleneck of decode) and fed to the MXU with f32 accumulation.
+the TPU-native form is weight-only quantization — packed nibbles (or int8
+bytes) are unpacked and dequantized to f32 *inside VMEM* (halving/quartering
+HBM weight traffic, the actual bottleneck of decode) and fed to the MXU with
+f32 accumulation.  Scales are per output channel ([N,1]) or grouped on the
+in-feature dim ([N, K/group]).
 
-Grid tiles (M/bm, N/bn); the full K stripe of x and the packed K/2 stripe of w
-live in VMEM per tile.
+Grid tiles (M/bm, N/bn); the full K stripe of x and the packed K/2 (int4) or
+K (int8) stripe of w live in VMEM per tile.
 """
 from __future__ import annotations
 
@@ -17,40 +19,63 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _w4_matmul_kernel(x_ref, qw_ref, s_ref, o_ref):
-    x = x_ref[...]                                          # [bm, K]
-    qw = qw_ref[...]                                        # [bn, K//2] uint8
+def _unpack_nibbles(qw: jax.Array) -> jax.Array:
     lo = (qw & 0xF).astype(jnp.int8)
     hi = ((qw >> 4) & 0xF).astype(jnp.int8)
     lo = jnp.where(lo > 7, lo - 16, lo)
     hi = jnp.where(hi > 7, hi - 16, hi)
-    q = jnp.stack([lo, hi], axis=-1).reshape(qw.shape[0], qw.shape[1] * 2)
-    w = q.astype(jnp.float32) * s_ref[...].astype(jnp.float32)   # [bn, K]
+    return jnp.stack([lo, hi], axis=-1).reshape(qw.shape[0], qw.shape[1] * 2)
+
+
+def _quant_matmul_kernel(bits, group, x_ref, qw_ref, s_ref, o_ref):
+    x = x_ref[...]                                          # [bm, K]
+    qw = qw_ref[...]                                        # [bn, K/2] u8 | [bn, K] i8
+    q = _unpack_nibbles(qw) if bits == 4 else qw
+    qf = q.astype(jnp.float32)                              # [bn, K]
+    s = s_ref[...].astype(jnp.float32)                      # [bn, 1] | [bn, K/group]
+    if group > 0:
+        bn, K = qf.shape
+        w = (qf.reshape(bn, K // group, group) * s[:, :, None]).reshape(bn, K)
+    else:
+        w = qf * s
     acc = jax.lax.dot_general(x.astype(jnp.float32), w,
                               (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
-@partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
-def w4_matmul_pallas(x: jax.Array, qw: jax.Array, scale: jax.Array,
-                     block_m: int = 128, block_n: int = 128,
-                     interpret: bool = True) -> jax.Array:
-    """x [M,K] bf16/f32; qw [N,K/2] uint8; scale [N,1] -> y [M,N]."""
+@partial(jax.jit,
+         static_argnames=("bits", "group", "block_m", "block_n", "interpret"))
+def quant_matmul_pallas(x: jax.Array, qw: jax.Array, scale: jax.Array,
+                        bits: int = 4, group: int = -1,
+                        block_m: int = 128, block_n: int = 128,
+                        interpret: bool = True) -> jax.Array:
+    """x [M,K]; qw [N,K/2] uint8 (int4 nibbles) or [N,K] int8; scale [N,G]
+    with G = 1 (per channel) or K/group -> y [M,N]."""
     M, K = x.shape
     N = qw.shape[0]
+    G = scale.shape[1]
     bm, bn = min(block_m, M), min(block_n, N)
     assert M % bm == 0 and N % bn == 0
     grid = (M // bm, N // bn)
     return pl.pallas_call(
-        _w4_matmul_kernel,
+        partial(_quant_matmul_kernel, bits, group),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, K // 2), lambda i, j: (j, 0)),
-            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, qw.shape[1]), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, G), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         interpret=interpret,
     )(x, qw, scale)
+
+
+def w4_matmul_pallas(x: jax.Array, qw: jax.Array, scale: jax.Array,
+                     block_m: int = 128, block_n: int = 128,
+                     interpret: bool = True) -> jax.Array:
+    """Back-compat alias: packed-int4, per-channel scale."""
+    return quant_matmul_pallas(x, qw, scale, bits=4, group=-1,
+                               block_m=block_m, block_n=block_n,
+                               interpret=interpret)

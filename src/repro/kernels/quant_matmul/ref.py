@@ -1,16 +1,35 @@
-"""Pure-jnp oracle for the W4 dequant matmul."""
+"""Pure-jnp oracle for the quantized-weight dequant matmul."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.quant.quantizers import unpack_int4
+from repro.quant.quantizers import QTensor, unpack_int4
+
+
+def quant_matmul_ref(x, qt: QTensor):
+    """x [..., K logical]; qt as in ops.quant_matmul.
+
+    y = x @ (unpack(q) * scale).T in f32 accumulation, padding x's last dim
+    to the stored K (padded weight columns hold zero codes — exact).
+    """
+    q = unpack_int4(qt.q) if qt.packed else qt.q
+    qf = q.astype(jnp.float32)                              # [N, Kp]
+    s = qt.scale.astype(jnp.float32)
+    if qt.group > 0:
+        N, Kp = qf.shape
+        w = (qf.reshape(N, Kp // qt.group, qt.group)
+             * s[:, :, None]).reshape(N, Kp)
+    else:
+        w = qf * s.reshape(qf.shape[0], -1)
+    Kp = w.shape[-1]
+    if x.shape[-1] != Kp:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, Kp - x.shape[-1])])
+    y = jnp.einsum("...i,oi->...o", x.astype(jnp.float32), w)
+    return y.astype(x.dtype)
 
 
 def w4_matmul_ref(x, qw_packed, scale):
-    """x [M,K]; qw_packed [N,K/2] uint8 (two int4 nibbles); scale [N,1].
-
-    y = x @ (unpack(qw) * scale).T  in f32 accumulation.
-    """
+    """Back-compat oracle: x [M,K]; qw_packed [N,K/2] uint8; scale [N,1]."""
     q = unpack_int4(qw_packed).astype(jnp.float32)          # [N, K]
     w = q * scale.astype(jnp.float32)
     return (x.astype(jnp.float32) @ w.T).astype(x.dtype)

@@ -1,0 +1,81 @@
+"""One-shot quantization driver: calibrate → fuse → pack → save artifact.
+
+  PYTHONPATH=src python -m repro.launch.quantize --arch llama2-7b --out art/
+
+This is the only place the calibration stack runs in the deployment flow —
+DartQuant's calibrate-cheap-once story.  The resulting artifact directory
+(packed int4/int8 weights + fused-rotation metadata + hash-verified manifest)
+cold-boots ``repro.launch.serve --artifact <dir>`` with zero calibration work.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.artifacts import QuantArtifact, rotation_spec, save_artifact
+from repro.configs import get_config
+from repro.core import calibrate_model, fuse_rotations, random_pack
+from repro.data.pipeline import calibration_batch
+from repro.models import model as M
+from repro.quant import memory_bytes, pack_params, projection_weight_bytes
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--out", required=True, help="artifact output directory")
+    ap.add_argument("--steps", type=int, default=30,
+                    help="QR-Orth calibration steps per site")
+    ap.add_argument("--calib-seqs", type=int, default=4)
+    ap.add_argument("--calib-len", type=int, default=64)
+    ap.add_argument("--w-bits", type=int, default=4)
+    ap.add_argument("--w-group", type=int, default=-1)
+    ap.add_argument("--a-bits", type=int, default=8)
+    ap.add_argument("--kv-bits", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rotation", choices=["dart", "hadamard"], default="dart",
+                    help="dart = calibrated QR-Orth; hadamard = QuaRot baseline")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full config instead of the reduced smoke one")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    qcfg = cfg.quant.replace(w_bits=args.w_bits, w_group_size=args.w_group,
+                             a_bits=args.a_bits, kv_bits=args.kv_bits)
+    cfg = cfg.replace(quant=qcfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init_params(cfg, key)
+
+    t0 = time.time()
+    if args.rotation == "dart":
+        calib = jnp.asarray(calibration_batch(cfg, args.calib_seqs,
+                                              args.calib_len))
+        pack = calibrate_model(cfg, params, calib, key=key, steps=args.steps)
+    else:
+        pack = random_pack(cfg, key)
+    cfg, params = fuse_rotations(cfg, params, pack)
+    calib_s = time.time() - t0
+
+    packed = pack_params(cfg, params)
+    art = QuantArtifact(
+        cfg=cfg, params=packed, rotations=rotation_spec(pack),
+        meta={"arch": args.arch, "rotation": args.rotation,
+              "steps": args.steps, "calib_s": round(calib_s, 3)})
+    save_artifact(args.out, art)
+
+    proj, proj_fp16 = projection_weight_bytes(packed)
+    print(f"[quantize] {args.arch}: calibrated ({args.rotation}, "
+          f"{args.steps} steps) in {calib_s:.1f}s")
+    print(f"[quantize] artifact -> {args.out}  "
+          f"total {memory_bytes(packed)} B; projection weights {proj} B "
+          f"({proj / max(proj_fp16, 1):.2f}x of fp16)")
+    return art
+
+
+if __name__ == "__main__":
+    main()

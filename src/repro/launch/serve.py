@@ -1,10 +1,18 @@
 """Serving driver: batched generation over a DartQuant-quantized model.
 
+  # quantize-once → serve-from-artifact (production flow; no calibration here)
+  PYTHONPATH=src python -m repro.launch.quantize --arch llama2-7b --out art/
+  PYTHONPATH=src python -m repro.launch.serve --artifact art/ --requests 8
+
+  # in-process calibrate-then-serve (dev flow)
   PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --requests 8
 
-Default engine is the paged int4-KV runtime (page-pool cache + token-level
-continuous batching + Pallas paged attention); ``--engine legacy`` selects the
-lockstep dense-cache engine (required for MLA/SSM/hybrid/enc-dec families).
+With ``--artifact`` the engine cold-boots from the saved QuantArtifact —
+packed int4/int8 weights straight onto the device, online R3/R4 resolved from
+the fused-rotation metadata — and the calibration stack
+(``core.calibrate``/``core.qr_orth``) is never invoked.  Default engine is
+the paged int4-KV runtime; ``--engine legacy`` selects the lockstep
+dense-cache engine (required for MLA/SSM/hybrid/enc-dec families).
 """
 from __future__ import annotations
 
@@ -15,16 +23,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import calibrate_model, fuse_rotations
-from repro.data.pipeline import calibration_batch
 from repro.models import model as M
-from repro.quant import quantize_params
 from repro.serve import PagedServeEngine, Request, ServeEngine
+
+
+def _engine_kind(args, cfg, kv_bits: int) -> bool:
+    return args.engine == "paged" or (
+        args.engine == "auto" and M.supports_paged(cfg)
+        and kv_bits in (4, 8))
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--artifact", default=None,
+                    help="serve from a saved QuantArtifact directory "
+                         "(skips the calibration stack entirely)")
     ap.add_argument("--engine", choices=["paged", "legacy", "auto"],
                     default="auto")
     ap.add_argument("--requests", type=int, default=8)
@@ -32,47 +46,92 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--page-size", type=int, default=16)
-    ap.add_argument("--a-bits", type=int, default=8)
-    ap.add_argument("--kv-bits", type=int, default=4)
+    ap.add_argument("--a-bits", type=int, default=None)
+    ap.add_argument("--kv-bits", type=int, default=None)
     ap.add_argument("--no-quant", action="store_true")
+    ap.add_argument("--qdq", action="store_true",
+                    help="serve fake-quant (QDQ) fp weights instead of "
+                         "packed int4 QTensors (in-process flow only)")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch).reduced()
-    key = jax.random.PRNGKey(0)
-    params = M.init_params(cfg, key)
+    if args.artifact:
+        # the artifact snapshot IS the serving config — reject conflicting
+        # flags instead of silently ignoring them
+        bad = [n for n, v in (("--arch", args.arch),
+                              ("--a-bits", args.a_bits),
+                              ("--kv-bits", args.kv_bits)) if v is not None]
+        bad += [n for n, v in (("--qdq", args.qdq),
+                               ("--no-quant", args.no_quant)) if v]
+        if bad:
+            ap.error(f"{', '.join(bad)} conflict(s) with --artifact: the "
+                     "serving config comes from the artifact snapshot "
+                     "(re-run repro.launch.quantize to change it)")
+    else:
+        args.arch = args.arch or "llama2-7b"
+        args.a_bits = 8 if args.a_bits is None else args.a_bits
+        args.kv_bits = 4 if args.kv_bits is None else args.kv_bits
 
-    rot = None
-    if not args.no_quant:
-        calib = jnp.asarray(calibration_batch(cfg, 4, 64))
-        pack = calibrate_model(cfg, params, calib, key=key, steps=30)
-        cfg, params = fuse_rotations(cfg, params, pack)
-        params = quantize_params(cfg, params)
-        # online R3/R4 Hadamards via the Pallas WHT kernel (TPU fast path),
-        # not the dense-matmul reference in core.rotations
-        from repro.kernels.hadamard.ops import online_hadamard
-        rot = {"r3": online_hadamard, "r4": online_hadamard}
-        print("calibrated + quantized (W4, rotations fused)")
+    max_seq = args.prompt_len + args.max_new * 4
+    eng_kw = dict(batch_slots=args.slots, max_seq=max_seq)
+
+    if args.artifact:
+        # cold boot: packed weights + rotation metadata from disk; zero calls
+        # into core.calibrate/core.qr_orth
+        from repro.artifacts import load_artifact
+        art = load_artifact(args.artifact)
+        cfg = art.cfg
+        use_paged = _engine_kind(args, cfg, cfg.quant.kv_bits)
+        if use_paged:
+            eng = PagedServeEngine.from_artifact(
+                art, page_size=args.page_size, **eng_kw)
+        else:
+            eng = ServeEngine.from_artifact(art, **eng_kw)
+        print(f"[serve] cold boot from {args.artifact} "
+              f"(rotations: {art.rotations}, meta: {art.meta})")
+    else:
+        cfg = get_config(args.arch).reduced()
+        key = jax.random.PRNGKey(0)
+        params = M.init_params(cfg, key)
+        rot = None
+        if not args.no_quant:
+            from repro.core import calibrate_model, fuse_rotations
+            from repro.data.pipeline import calibration_batch
+            from repro.quant import pack_params, quantize_params
+            calib = jnp.asarray(calibration_batch(cfg, 4, 64))
+            pack = calibrate_model(cfg, params, calib, key=key, steps=30)
+            cfg, params = fuse_rotations(cfg, params, pack)
+            if args.qdq:
+                params = quantize_params(cfg, params)
+            else:
+                # true packed int4: QTensor weights through the Pallas
+                # quant_matmul kernel
+                params = pack_params(cfg, params)
+            # online R3/R4 Hadamards via the Pallas WHT kernel (TPU fast
+            # path), not the dense-matmul reference in core.rotations
+            from repro.kernels.hadamard.ops import online_hadamard
+            rot = {"r3": online_hadamard, "r4": online_hadamard}
+            print(f"calibrated + quantized (W4 "
+                  f"{'QDQ' if args.qdq else 'packed'}, rotations fused)")
+        use_paged = _engine_kind(args, cfg, args.kv_bits)
+        if use_paged:
+            eng = PagedServeEngine(cfg, params, rot=rot,
+                                   page_size=args.page_size,
+                                   a_bits=args.a_bits, kv_bits=args.kv_bits,
+                                   **eng_kw)
+        else:
+            eng = ServeEngine(cfg, params, rot=rot, a_bits=args.a_bits,
+                              kv_bits=args.kv_bits, **eng_kw)
 
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, args.prompt_len),
                     max_new=args.max_new) for _ in range(args.requests)]
-    max_seq = args.prompt_len + args.max_new * 4
-    use_paged = args.engine == "paged" or (
-        args.engine == "auto" and M.supports_paged(cfg)
-        and args.kv_bits in (4, 8))
-    if use_paged:
-        eng = PagedServeEngine(cfg, params, rot=rot, batch_slots=args.slots,
-                               max_seq=max_seq, page_size=args.page_size,
-                               a_bits=args.a_bits, kv_bits=args.kv_bits)
-    else:
-        eng = ServeEngine(cfg, params, rot=rot, batch_slots=args.slots,
-                          max_seq=max_seq, a_bits=args.a_bits,
-                          kv_bits=args.kv_bits)
     reqs, stats = eng.generate(reqs, verbose=True)
     done = sum(r.done for r in reqs)
     print(f"[{type(eng).__name__}] served {done}/{len(reqs)} requests; "
           f"{stats['decode_tok_per_s']:.1f} tok/s decode; "
-          f"kv cache {stats['kv_cache_bytes']} B")
+          f"kv cache {stats['kv_cache_bytes']} B; "
+          f"weights {stats['weight_bytes']} B")
+    return reqs, stats
 
 
 if __name__ == "__main__":

@@ -318,8 +318,10 @@ def mla_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
     krope_cache = jax.lax.dynamic_update_slice(
         cache["krope"], k_rope[:, None].astype(cache["krope"].dtype), (0, pos, 0))
 
-    # absorb W_UK into q: q_lat [B,h,kvlr]
-    wkv_b = p["wkv_b"].reshape(h, nope + vd, kvlr)
+    # absorb W_UK into q: q_lat [B,h,kvlr] (densify packed weights — the
+    # absorbed form consumes wkv_b as a tensor, not through a GEMM)
+    from repro.quant.qlinear import dense_weight
+    wkv_b = dense_weight(p["wkv_b"], jnp.float32).reshape(h, nope + vd, kvlr)
     w_uk, w_uv = wkv_b[:, :nope], wkv_b[:, nope:]                   # [h,nope,kvlr],[h,vd,kvlr]
     q_lat = jnp.einsum("bhn,hnk->bhk", q_nope[:, 0].astype(jnp.float32),
                        w_uk.astype(jnp.float32))

@@ -89,17 +89,24 @@ def dense_init(key, shape, in_dim: int, dtype) -> jax.Array:
     return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
 
 
-def linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
-    """y = x @ w.T (+ b).  w: [out, in].
+def linear(x: jax.Array, w, b: Optional[jax.Array] = None) -> jax.Array:
+    """y = x @ w.T (+ b).  w: [out, in] array or packed QTensor.
 
     Consults the trace-time activation-quant context (repro.quant.context):
     when set, x is per-token fake-quantized first — the paper's A4/A8 path.
+    QTensor weights (pack_params / artifact cold-boot) dispatch through the
+    Pallas quant_matmul kernel so int4 weights stay int4 in device memory.
     """
     from repro.quant import context as qctx
     aq = qctx.get_act_quant()
     if aq is not None:
         x = aq(x)
-    y = jnp.einsum("...i,oi->...o", x, w.astype(x.dtype))
+    from repro.quant.quantizers import QTensor
+    if isinstance(w, QTensor):
+        from repro.quant.qlinear import qtensor_matmul
+        y = qtensor_matmul(x, w)
+    else:
+        y = jnp.einsum("...i,oi->...o", x, w.astype(x.dtype))
     if b is not None:
         y = y + b.astype(y.dtype)
     return y

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.common import NO_SHARD, dense_init, linear
+from repro.quant.qlinear import dense_weight
 
 MOE_GROUP = 2048          # einsum-path dispatch group size (tokens)
 
@@ -138,9 +139,11 @@ def moe_einsum(cfg: ModelConfig, p: dict, x: jax.Array,
     xg = shd(xg, "moe_gtd")
     xe = jnp.einsum("gtd,gtec->gecd", xg, disp)                 # [G,E,cap,D]
     xe = shd(xe, "moe_gecd")
-    wg = p["w_gate"].astype(x.dtype)
-    wu = p["w_up"].astype(x.dtype)
-    wd = p["w_down"].astype(x.dtype)
+    # expert stacks are 3-D: packed QTensors dequantize here (the 2-D Pallas
+    # GEMM covers the dense/shared projections via ``linear``)
+    wg = dense_weight(p["w_gate"], x.dtype)
+    wu = dense_weight(p["w_up"], x.dtype)
+    wd = dense_weight(p["w_down"], x.dtype)
     h = jax.nn.silu(jnp.einsum("gecd,efd->gecf", xe, wg)) \
         * jnp.einsum("gecd,efd->gecf", xe, wu)
     if rot is not None and rot.get("r4") is not None:
@@ -175,8 +178,10 @@ def moe_ragged_local(cfg: ModelConfig, p: dict, x: jax.Array, rot=None
     order = jnp.argsort(flat_e)
     xs = jnp.repeat(x, K, axis=0)[order]
     group_sizes = jnp.bincount(flat_e, length=E).astype(jnp.int32)
-    ys = _ragged_ffn(p["w_gate"].astype(x.dtype), p["w_up"].astype(x.dtype),
-                     p["w_down"].astype(x.dtype), xs, group_sizes, rot=rot)
+    ys = _ragged_ffn(dense_weight(p["w_gate"], x.dtype),
+                     dense_weight(p["w_up"], x.dtype),
+                     dense_weight(p["w_down"], x.dtype),
+                     xs, group_sizes, rot=rot)
     y = jnp.zeros_like(xs).at[order].set(ys).reshape(T, K, D)
     y = (y * w[..., None].astype(x.dtype)).sum(1)
     return y, aux
@@ -297,7 +302,10 @@ def moe_ragged_ep(cfg: ModelConfig, p: dict, x: jax.Array, mesh,
                   P(ep_spec, None, None)),
         out_specs=(P(dp_spec, None), P(dp_spec)),
         check_rep=False)
-    y, aux = fn(x, p["router"], rb, p["w_gate"], p["w_up"], p["w_down"])
+    # shard_map in_specs are per-array: densify packed expert stacks first
+    y, aux = fn(x, p["router"], rb, dense_weight(p["w_gate"], x.dtype),
+                dense_weight(p["w_up"], x.dtype),
+                dense_weight(p["w_down"], x.dtype))
     return y, jnp.mean(aux)
 
 

@@ -4,7 +4,9 @@ from repro.quant.gptq import gptq_quantize, hessian, recon_error, rtn_quantize
 from repro.quant.kv_cache import (QuantKV, dequantize_kv, kv_bytes,
                                   make_kv_quant, packed_dim, paged_kv_bytes,
                                   quantize_kv, quantkv_bytes)
-from repro.quant.qlinear import (memory_bytes, pack_params, qlinear_matmul,
+from repro.quant.qlinear import (dense_weight, memory_bytes, pack_params,
+                                 pack_weight, projection_weight_bytes,
+                                 qlinear_matmul, qtensor_matmul,
                                  quantize_params)
 from repro.quant.quantizers import (QTensor, dequant_act, dequant_weight,
                                     fake_quant_act, fake_quant_kv,

@@ -1,22 +1,29 @@
-"""Quantized model parameters: QDQ simulation + int4-packed serving weights.
+"""Quantized model parameters: QDQ simulation + int4/int8-packed serving weights.
 
-``quantize_params``       — fake-quantize (QDQ) all projection weights (RTN or
-                            GPTQ given calibration inputs); quality-exact with
-                            the paper's W4 setting, runs through normal matmuls.
-``pack_params``           — int4-pack projection weights into QTensor storage
-                            (serving memory format; consumed by the
+``quantize_params``       — fake-quantize (QDQ) all projection weights; shares
+                            the integer codes + fp16 scales with the packed
+                            path, so QDQ is bit-exact with what serving stores.
+``pack_params``           — replace projection weights with packed QTensors
+                            (serving memory format; consumed by the Pallas
                             quant_matmul kernel / qlinear_matmul fallback).
+``qtensor_matmul``        — the model-layer dispatch: Pallas kernel when the
+                            tensor qualifies, jnp fallback otherwise.
+
+Odd in-feature weights are padded to the packing/group multiple with zero
+codes (exact: zero columns contribute nothing) and record their logical
+``in_features`` on the QTensor, mirroring the odd-head-dim handling in
+``quant/kv_cache.py``.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, QuantConfig
-from repro.quant.quantizers import (QTensor, dequant_weight, fake_quant_weight,
-                                    pack_int4, quant_weight, unpack_int4)
+from repro.quant.quantizers import (QTensor, dequant_weight, pack_int4,
+                                    quant_weight, unpack_int4)
 
 # projection-weight leaf names (rotation consumers/producers); everything else
 # (norms, biases, embeddings, router, conv, SSM scalars) stays high precision.
@@ -32,16 +39,65 @@ def _is_weight(path) -> bool:
     return name in _WEIGHT_KEYS
 
 
+def _pad_multiple(group: int) -> int:
+    """Smallest in-feature multiple that satisfies nibble packing (2) and the
+    scale-group width simultaneously."""
+    if group <= 0:
+        return 2
+    return group if group % 2 == 0 else 2 * group
+
+
+def pack_weight(w: jax.Array, bits: int = 4, group: int = -1,
+                clip_ratio: float = 1.0, pack: bool = True) -> QTensor:
+    """Quantize one weight [..., out, in] into the serving QTensor format.
+
+    Pads odd/non-group in-features with zero columns (recorded as
+    ``in_features``), stores fp16 scales, and nibble-packs int4 codes when
+    ``pack``.  int8 codes stay one byte per element.
+    """
+    K = w.shape[-1]
+    mult = _pad_multiple(group)
+    Kp = -(-K // mult) * mult
+    if Kp != K:
+        w = jnp.pad(w, [(0, 0)] * (w.ndim - 1) + [(0, Kp - K)])
+    qt = quant_weight(w, bits=bits, group=group, clip_ratio=clip_ratio)
+    scale = qt.scale.astype(jnp.float16)
+    if pack and bits == 4:
+        return QTensor(pack_int4(qt.q), scale, None, bits=4, group=group,
+                       in_features=K, packed=True)
+    return QTensor(qt.q, scale, None, bits=bits, group=group, in_features=K)
+
+
+def dense_weight(w, dtype) -> jax.Array:
+    """Dequantize a (possibly packed) weight leaf back to a dense array,
+    trimming in-feature padding.  Plain arrays pass through with a cast."""
+    if not isinstance(w, QTensor):
+        return w.astype(dtype)
+    if w.zero is not None:
+        raise NotImplementedError(
+            "dense_weight handles symmetric weight QTensors only")
+    q = unpack_int4(w.q) if w.packed else w.q
+    dq = dequant_weight(QTensor(q, w.scale, None, bits=w.bits, group=w.group),
+                        dtype=dtype)
+    if w.in_features is not None and w.in_features != dq.shape[-1]:
+        dq = dq[..., :w.in_features]
+    return dq
+
+
 def quantize_params(cfg: ModelConfig, params: dict,
                     qcfg: Optional[QuantConfig] = None) -> dict:
-    """RTN fake-quant every projection weight (QDQ, same pytree)."""
+    """RTN fake-quant every projection weight (QDQ, same pytree).
+
+    Round-trips through the same codes + fp16 scales as ``pack_params``, so
+    QDQ quality numbers are bit-exact with the packed serving weights.
+    """
     qcfg = qcfg or cfg.quant
 
     def fn(path, leaf):
-        if _is_weight(path) and leaf.ndim >= 2:
-            return fake_quant_weight(leaf, bits=qcfg.w_bits,
-                                     group=qcfg.w_group_size,
-                                     clip_ratio=qcfg.w_clip_ratio)
+        if _is_weight(path) and leaf.ndim >= 2 and qcfg.w_bits < 16:
+            qt = pack_weight(leaf, bits=qcfg.w_bits, group=qcfg.w_group_size,
+                             clip_ratio=qcfg.w_clip_ratio, pack=False)
+            return dense_weight(qt, leaf.dtype)
         return leaf
 
     return jax.tree_util.tree_map_with_path(fn, params)
@@ -49,28 +105,66 @@ def quantize_params(cfg: ModelConfig, params: dict,
 
 def pack_params(cfg: ModelConfig, params: dict,
                 qcfg: Optional[QuantConfig] = None) -> dict:
-    """Replace projection weights with int4-packed QTensors (serving format)."""
+    """Replace projection weights with packed QTensors (serving format)."""
     qcfg = qcfg or cfg.quant
 
     def fn(path, leaf):
-        if _is_weight(path) and leaf.ndim >= 2 and leaf.shape[-1] % 2 == 0:
-            qt = quant_weight(leaf, bits=qcfg.w_bits, group=qcfg.w_group_size,
-                              clip_ratio=qcfg.w_clip_ratio)
-            return QTensor(pack_int4(qt.q), qt.scale.astype(jnp.float16), None)
+        if _is_weight(path) and leaf.ndim >= 2 and qcfg.w_bits < 16:
+            return pack_weight(leaf, bits=qcfg.w_bits, group=qcfg.w_group_size,
+                               clip_ratio=qcfg.w_clip_ratio)
         return leaf
 
     return jax.tree_util.tree_map_with_path(fn, params)
 
 
-def qlinear_matmul(x: jax.Array, qt: QTensor, group: int = -1) -> jax.Array:
-    """y = x @ dequant(qt).T — jnp fallback; the Pallas kernel fuses unpack+
-    dequant+matmul in VMEM (repro.kernels.quant_matmul)."""
-    q = unpack_int4(qt.q)
-    w = q.astype(x.dtype) * qt.scale.astype(x.dtype)
-    return jnp.einsum("...i,oi->...o", x, w)
+def qlinear_matmul(x: jax.Array, qt: QTensor) -> jax.Array:
+    """y = x @ dequant(qt).T — jnp fallback/oracle with f32 accumulation;
+    the Pallas kernel fuses unpack+dequant+matmul in VMEM
+    (repro.kernels.quant_matmul)."""
+    w = dense_weight(qt, jnp.float32)           # [..., N, K] logical
+    y = jnp.einsum("...i,oi->...o", x.astype(jnp.float32), w)
+    return y.astype(x.dtype)
+
+
+def qtensor_matmul(x: jax.Array, qt: QTensor) -> jax.Array:
+    """Model-layer dispatch for QTensor weights: Pallas quant_matmul kernel
+    for 2-D packed-int4 / int8 tensors, jnp fallback for 3-D expert stacks
+    and exotic bit widths.  Symmetric weights only (zero must be None)."""
+    if qt.q.ndim == 2 and qt.zero is None and (
+            (qt.bits == 4 and qt.packed) or (qt.bits == 8 and not qt.packed)):
+        from repro.kernels.quant_matmul.ops import quant_matmul
+        return quant_matmul(x, qt)
+    return qlinear_matmul(x, qt)
 
 
 def memory_bytes(params: dict) -> int:
     """Total storage bytes of a (possibly packed) param tree."""
     leaves = jax.tree_util.tree_leaves(params)
     return sum(int(l.size) * l.dtype.itemsize for l in leaves)
+
+
+def projection_weight_bytes(params: dict) -> Tuple[int, int]:
+    """(actual_bytes, fp16_equivalent_bytes) over projection-weight leaves.
+
+    ``actual_bytes`` counts what the tree really holds (packed codes + scales
+    for QTensors, raw array bytes otherwise); ``fp16_equivalent_bytes`` is the
+    logical element count at 2 bytes each — the QDQ-fp16 serving footprint the
+    packed format replaces.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, QTensor))[0]
+    actual = fp16 = 0
+    for path, leaf in flat:
+        if not any(getattr(p, "key", None) in _WEIGHT_KEYS for p in path):
+            continue
+        if isinstance(leaf, QTensor):
+            actual += sum(int(a.size) * a.dtype.itemsize
+                          for a in (leaf.q, leaf.scale) if a is not None)
+            logical = 1
+            for d in leaf.logical_shape:
+                logical *= int(d)
+            fp16 += 2 * logical
+        else:
+            actual += int(leaf.size) * leaf.dtype.itemsize
+            fp16 += 2 * int(leaf.size)
+    return actual, fp16

@@ -7,17 +7,64 @@ integer path; the integer path lives in qlinear.py / kernels.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 
-class QTensor(NamedTuple):
-    """Integer-quantized tensor + affine metadata."""
-    q: jax.Array            # int8 storage (int4 values occupy [-8, 7])
-    scale: jax.Array
-    zero: Optional[jax.Array]   # None => symmetric
+@jax.tree_util.register_pytree_node_class
+class QTensor:
+    """Integer-quantized tensor + affine metadata (registered pytree).
+
+    Children (traced): ``q`` (integer codes), ``scale``, ``zero`` (None =>
+    symmetric).  Static aux data rides through jit/scan/vmap untouched:
+
+      ``bits``         code width (4/8)
+      ``group``        scale granularity on the last dim (-1 = per channel)
+      ``in_features``  *logical* last-dim size before even/group padding —
+                       odd in-feature weights pad their codes, mirroring the
+                       odd-head-dim handling in quant/kv_cache.py
+      ``packed``       True => two int4 nibbles per uint8 byte on the last dim
+    """
+    __slots__ = ("q", "scale", "zero", "bits", "group", "in_features", "packed")
+
+    def __init__(self, q, scale, zero=None, *, bits: int = 8, group: int = -1,
+                 in_features: Optional[int] = None, packed: bool = False):
+        self.q = q
+        self.scale = scale
+        self.zero = zero
+        self.bits = int(bits)
+        self.group = int(group)
+        self.in_features = None if in_features is None else int(in_features)
+        self.packed = bool(packed)
+
+    @property
+    def stored_in_dim(self) -> int:
+        """Last-dim size of the dequantized codes (incl. any padding)."""
+        return self.q.shape[-1] * (2 if self.packed else 1)
+
+    @property
+    def logical_shape(self) -> Tuple[int, ...]:
+        k = self.stored_in_dim if self.in_features is None else self.in_features
+        return tuple(self.q.shape[:-1]) + (k,)
+
+    def tree_flatten(self):
+        return ((self.q, self.scale, self.zero),
+                (self.bits, self.group, self.in_features, self.packed))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        obj = object.__new__(cls)   # children may be tracers/sentinels
+        obj.q, obj.scale, obj.zero = children
+        obj.bits, obj.group, obj.in_features, obj.packed = aux
+        return obj
+
+    def __repr__(self):
+        q = self.q
+        shape = getattr(q, "shape", None)
+        return (f"QTensor(q={shape}, bits={self.bits}, group={self.group}, "
+                f"in_features={self.in_features}, packed={self.packed})")
 
 
 # --------------------------------------------------------------------------- #
@@ -34,15 +81,19 @@ def quant_weight(w: jax.Array, bits: int = 4, group: int = -1,
         scale = jnp.maximum(amax / qmax, 1e-8)
         q = jnp.clip(jnp.round(wg / scale), -qmax - 1, qmax)
         return QTensor(q.reshape(shp).astype(jnp.int8),
-                       scale.reshape(shp[:-1] + (shp[-1] // group,)), None)
+                       scale.reshape(shp[:-1] + (shp[-1] // group,)), None,
+                       bits=bits, group=group, in_features=shp[-1])
     amax = jnp.max(jnp.abs(w), axis=-1, keepdims=True) * clip_ratio
     scale = jnp.maximum(amax / qmax, 1e-8)
     q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax)
-    return QTensor(q.astype(jnp.int8), scale, None)
+    return QTensor(q.astype(jnp.int8), scale, None, bits=bits,
+                   in_features=w.shape[-1])
 
 
-def dequant_weight(qt: QTensor, group: int = -1,
+def dequant_weight(qt: QTensor, group: Optional[int] = None,
                    dtype=jnp.float32) -> jax.Array:
+    if group is None:
+        group = qt.group
     if group > 0:
         shp = qt.q.shape
         qg = qt.q.reshape(shp[:-1] + (shp[-1] // group, group)).astype(dtype)
@@ -66,7 +117,7 @@ def quant_act(x: jax.Array, bits: int = 4) -> QTensor:
     hi = jnp.max(x, axis=-1, keepdims=True)
     scale = jnp.maximum((hi - lo) / qmax, 1e-8)
     q = jnp.clip(jnp.round((x - lo) / scale), 0, qmax)
-    return QTensor(q.astype(jnp.uint8), scale, lo)
+    return QTensor(q.astype(jnp.uint8), scale, lo, bits=bits)
 
 
 def dequant_act(qt: QTensor, dtype=jnp.float32) -> jax.Array:

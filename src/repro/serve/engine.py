@@ -25,7 +25,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models.common import NO_SHARD
-from repro.quant import fake_quant_act, kv_bytes, make_kv_quant
+from repro.quant import fake_quant_act, kv_bytes, make_kv_quant, memory_bytes
 from repro.serve.page_pool import PagePool
 from repro.serve.scheduler import Request, SeqState, TokenScheduler
 
@@ -34,6 +34,24 @@ __all__ = ["Request", "ServeEngine", "PagedServeEngine"]
 
 def _act_quant_hook(a_bits: int):
     return (lambda x: fake_quant_act(x, a_bits)) if a_bits < 16 else None
+
+
+def _from_artifact(cls, artifact, paged: bool, **kw):
+    """Cold-boot an engine from a QuantArtifact: packed weights on device,
+    online rotations resolved from metadata, serving bits from the config
+    snapshot — zero calls into the calibration stack."""
+    from repro.artifacts.format import resolve_rotations
+    qc = artifact.cfg.quant
+    kw.setdefault("rot", resolve_rotations(artifact.rotations))
+    kw.setdefault("a_bits", qc.a_bits)
+    if paged and "kv_bits" not in kw and qc.kv_bits not in (4, 8):
+        raise ValueError(
+            f"artifact snapshot has kv_bits={qc.kv_bits}; the paged engine "
+            "stores integer KV — pass kv_bits=4/8 explicitly or use the "
+            "legacy ServeEngine")
+    kw.setdefault("kv_bits", qc.kv_bits)
+    params = jax.device_put(artifact.params)    # one transfer off the mmap
+    return cls(artifact.cfg, params, **kw)
 
 
 class PagedServeEngine:
@@ -75,6 +93,10 @@ class PagedServeEngine:
         self._decode = jax.jit(S.build_paged_decode_step(
             cfg, mesh=mesh, shd=shd, rot=self.rot, act_quant=aq,
             kv_bits=kv_bits), donate_argnums=donate)
+
+    @classmethod
+    def from_artifact(cls, artifact, **kw) -> "PagedServeEngine":
+        return _from_artifact(cls, artifact, paged=True, **kw)
 
     # ------------------------------------------------------------------ #
     def _prefill_seq(self, seq: SeqState) -> int:
@@ -144,6 +166,8 @@ class PagedServeEngine:
                 self.slots, self.max_seq, cfg.n_layers,
                 max(cfg.n_kv_heads, 1), cfg.resolved_head_dim or 1,
                 self.kv_bits),
+            # packed QTensors report their real (codes + scales) footprint
+            "weight_bytes": memory_bytes(self.params),
         }
         if verbose:
             print(stats)
@@ -178,6 +202,10 @@ class ServeEngine:
                                                    rot=self.rot,
                                                    act_quant=aq))
         self._aq = aq
+
+    @classmethod
+    def from_artifact(cls, artifact, **kw) -> "ServeEngine":
+        return _from_artifact(cls, artifact, paged=False, **kw)
 
     # ------------------------------------------------------------------ #
     def generate(self, requests: List[Request], verbose: bool = False):
@@ -248,6 +276,7 @@ class ServeEngine:
             "kv_cache_bytes": kv_bytes(
                 B, self.max_seq, cfg.n_layers, max(cfg.n_kv_heads, 1),
                 cfg.resolved_head_dim or 1, self.kv_bits),
+            "weight_bytes": memory_bytes(self.params),
         }
         if verbose:
             print(stats)

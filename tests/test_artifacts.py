@@ -1,0 +1,230 @@
+"""repro.artifacts: quantize-once artifact pipeline + packed-int4 serving.
+
+Covers the format invariants (bit-exact round trip, hash-verified manifest),
+the cold-boot contract (artifact serve == in-process calibrate-then-serve
+token-for-token, with the calibration stack provably untouched), the memory
+story (packed projection weights ≤ 0.3x the fp16 QDQ footprint), and kernel
+vs QDQ decode parity.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.artifacts import (ArtifactError, QuantArtifact, load_artifact,
+                             rotation_spec, save_artifact)
+from repro.artifacts.io import WEIGHTS
+from repro.configs import get_config
+from repro.core import fuse_rotations, random_pack
+from repro.models import model as M
+from repro.quant import (memory_bytes, pack_params, pack_weight,
+                         projection_weight_bytes, qlinear_matmul,
+                         quantize_params)
+from repro.quant.quantizers import QTensor
+from repro.serve import PagedServeEngine, Request, ServeEngine
+
+CFG = get_config("llama2-7b").reduced().replace(
+    n_layers=2, vocab_size=256, max_seq_len=64)
+
+
+def _fused_packed(key, pack=None):
+    params = M.init_params(CFG, key)
+    pack = pack if pack is not None else random_pack(CFG, key)
+    cfg, params = fuse_rotations(CFG, params, pack)
+    return cfg, pack_params(cfg, params), quantize_params(cfg, params), pack
+
+
+def _artifact(cfg, packed, pack):
+    return QuantArtifact(cfg=cfg, params=packed,
+                         rotations=rotation_spec(pack),
+                         meta={"arch": "llama2-7b"})
+
+
+def _requests(n, plen=8, max_new=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, CFG.vocab_size, plen),
+                    max_new=max_new) for _ in range(n)]
+
+
+@pytest.fixture(scope="module")
+def fused(key):
+    return _fused_packed(key)
+
+
+# --------------------------------------------------------------------------- #
+# Round trip + manifest
+# --------------------------------------------------------------------------- #
+def test_roundtrip_bit_exact(tmp_path, fused):
+    cfg, packed, _, pack = fused
+    save_artifact(str(tmp_path), _artifact(cfg, packed, pack))
+    art = load_artifact(str(tmp_path))
+
+    flat_a = jax.tree_util.tree_flatten_with_path(
+        packed, is_leaf=lambda x: isinstance(x, QTensor))[0]
+    flat_b = jax.tree_util.tree_flatten_with_path(
+        art.params, is_leaf=lambda x: isinstance(x, QTensor))[0]
+    assert [p for p, _ in flat_a] == [p for p, _ in flat_b]
+    for (_, a), (_, b) in zip(flat_a, flat_b):
+        if isinstance(a, QTensor):
+            assert (a.bits, a.group, a.in_features, a.packed) == \
+                (b.bits, b.group, b.in_features, b.packed)
+            assert np.array_equal(np.asarray(a.q), np.asarray(b.q))
+            assert np.array_equal(np.asarray(a.scale), np.asarray(b.scale))
+        else:
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert art.cfg == cfg
+    assert art.rotations["r3"] == "hadamard"
+    assert art.rotations["r1"] == "fused"
+
+
+def test_manifest_tamper_detected(tmp_path, fused):
+    cfg, packed, _, pack = fused
+    save_artifact(str(tmp_path), _artifact(cfg, packed, pack))
+    blob = tmp_path / WEIGHTS
+    raw = bytearray(blob.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    blob.write_bytes(bytes(raw))
+    with pytest.raises(ArtifactError, match="sha256"):
+        load_artifact(str(tmp_path))
+    # truncation is caught before hashing
+    blob.write_bytes(bytes(raw[: len(raw) // 2]))
+    with pytest.raises(ArtifactError):
+        load_artifact(str(tmp_path))
+
+
+def test_load_is_zero_copy_mmap(tmp_path, fused):
+    cfg, packed, _, pack = fused
+    save_artifact(str(tmp_path), _artifact(cfg, packed, pack))
+    art = load_artifact(str(tmp_path))
+    leaves = jax.tree_util.tree_leaves(art.params)
+    assert all(isinstance(l.base, np.memmap) or isinstance(l, np.memmap)
+               for l in leaves)
+
+
+# --------------------------------------------------------------------------- #
+# Cold boot: serve from artifact == in-process path, no calibration calls
+# --------------------------------------------------------------------------- #
+def test_cold_boot_matches_inprocess_token_for_token(tmp_path, key,
+                                                     monkeypatch):
+    from repro.core import calibrate_model
+    from repro.data.pipeline import calibration_batch
+    calib = jnp.asarray(calibration_batch(CFG, 2, 32))
+    params = M.init_params(CFG, key)
+    pack = calibrate_model(CFG, params, calib, key=key, steps=5)
+    cfg, fparams = fuse_rotations(CFG, params, pack)
+    # snapshot the serving bits into the config (what launch/quantize.py does)
+    cfg = cfg.replace(quant=cfg.quant.replace(a_bits=8, kv_bits=4))
+    packed = pack_params(cfg, fparams)
+
+    from repro.kernels.hadamard.ops import online_hadamard
+    rot = {"r3": online_hadamard, "r4": online_hadamard}
+    eng_kw = dict(batch_slots=2, max_seq=24, page_size=8, a_bits=8, kv_bits=4)
+    eng = PagedServeEngine(cfg, packed, rot=rot, **eng_kw)
+    ref_reqs, _ = eng.generate(_requests(3))
+
+    save_artifact(str(tmp_path), _artifact(cfg, packed, pack))
+
+    # the cold boot must never touch the calibration stack
+    def _forbidden(*a, **kw):
+        raise AssertionError("calibration stack invoked during cold boot")
+    import repro.core.calibrate as cal_mod
+    import repro.core.qr_orth as qr_mod
+    for mod, names in ((cal_mod, ("calibrate_model", "calibrate_rotation",
+                                  "calibrate_rotations")),
+                       (qr_mod, ("calibrate_scan", "calibrate_qr",
+                                 "calibrate_cayley",
+                                 "calibrate_rotations_batched"))):
+        for name in names:
+            monkeypatch.setattr(mod, name, _forbidden)
+
+    art = load_artifact(str(tmp_path))
+    cold = PagedServeEngine.from_artifact(
+        art, batch_slots=2, max_seq=24, page_size=8)
+    assert cold.kv_bits == 4
+    cold_reqs, stats = cold.generate(_requests(3))
+    for r_ref, r_cold in zip(ref_reqs, cold_reqs):
+        assert r_cold.done and r_cold.out == r_ref.out
+    assert stats["weight_bytes"] == memory_bytes(packed)
+
+
+def test_paged_cold_boot_rejects_kv16_snapshot(tmp_path, fused):
+    """A snapshot with KV quant off (kv_bits=16) must not be silently
+    clamped to 4-bit pages — the artifact's config is a contract."""
+    cfg, packed, _, pack = fused            # CFG keeps the default kv_bits=16
+    save_artifact(str(tmp_path), _artifact(cfg, packed, pack))
+    art = load_artifact(str(tmp_path))
+    with pytest.raises(ValueError, match="kv_bits"):
+        PagedServeEngine.from_artifact(art, batch_slots=2, max_seq=16,
+                                       page_size=8)
+    # explicit override is the sanctioned escape hatch
+    eng = PagedServeEngine.from_artifact(art, batch_slots=2, max_seq=16,
+                                         page_size=8, kv_bits=4)
+    assert eng.kv_bits == 4
+
+
+def test_legacy_engine_cold_boot(tmp_path, fused):
+    """The lockstep engine serves packed artifacts too (non-paged families)."""
+    cfg, packed, _, pack = fused
+    save_artifact(str(tmp_path), _artifact(cfg, packed, pack))
+    art = load_artifact(str(tmp_path))
+    eng = ServeEngine.from_artifact(art, batch_slots=2, max_seq=16)
+    reqs, stats = eng.generate(_requests(2, plen=6, max_new=3))
+    assert all(r.done for r in reqs)
+    assert stats["weight_bytes"] == memory_bytes(packed)
+
+
+# --------------------------------------------------------------------------- #
+# Memory + numerics
+# --------------------------------------------------------------------------- #
+def test_packed_projection_bytes_under_budget(fused):
+    """Acceptance: packed projection weights ≤ 0.3x the fp16 QDQ footprint."""
+    cfg, packed, qdq, _ = fused
+    proj, proj_fp16 = projection_weight_bytes(packed)
+    assert proj <= 0.3 * proj_fp16
+    # QDQ keeps dense fp tensors resident — the memory story it fakes
+    dense_proj, dense_fp16 = projection_weight_bytes(qdq)
+    assert dense_proj >= dense_fp16        # f32 here, ≥ the fp16 equivalent
+    assert memory_bytes(packed) < memory_bytes(qdq)
+
+
+def test_packed_forward_matches_qdq(fused):
+    """Packed-kernel execution == the QDQ reference path within f32 noise
+    (same codes + fp16 scales by construction, different matmul order)."""
+    cfg, packed, qdq, _ = fused
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab_size, (2, 12)), jnp.int32)
+    logits_p, _ = M.prefill(cfg, packed, toks)
+    logits_q, _ = M.prefill(cfg, qdq, toks)
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_q),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_pack_weight_odd_in_features(key):
+    """Odd last dims are padded (not skipped) and record the logical shape."""
+    w = jax.random.normal(key, (6, 33))
+    qt = pack_weight(w, bits=4)
+    assert qt.packed and qt.in_features == 33
+    assert qt.q.shape == (6, 17)            # padded to 34, two nibbles/byte
+    assert qt.logical_shape == (6, 33)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 33))
+    y = qlinear_matmul(x, qt)
+    assert y.shape == (4, 6)
+    # padding columns are exact zeros: identical to quantizing the unpadded
+    # weight per channel
+    from repro.quant.quantizers import quant_weight
+    ref = x.astype(jnp.float32) @ (
+        quant_weight(w, bits=4).q.astype(jnp.float32)
+        * quant_weight(w, bits=4).scale.astype(jnp.float16).astype(jnp.float32)).T
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-5)
+
+
+def test_pack_params_covers_odd_dims():
+    """pack_params no longer silently skips odd in-feature projections."""
+    fake = {"attn": {"wq": jnp.ones((4, 7)), "wo": jnp.ones((4, 8))},
+            "norm": {"scale": jnp.ones((7,))}}
+    packed = pack_params(CFG, fake)
+    assert isinstance(packed["attn"]["wq"], QTensor)
+    assert packed["attn"]["wq"].in_features == 7
+    assert isinstance(packed["attn"]["wo"], QTensor)
+    assert not isinstance(packed["norm"]["scale"], QTensor)

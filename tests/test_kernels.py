@@ -10,8 +10,8 @@ from repro.kernels.hadamard.ops import online_hadamard as wht_op
 from repro.kernels.hadamard.ref import wht_ref
 from repro.kernels.paged_attn.ops import paged_attention
 from repro.kernels.paged_attn.ref import paged_attention_ref
-from repro.kernels.quant_matmul.ops import w4_matmul
-from repro.kernels.quant_matmul.ref import w4_matmul_ref
+from repro.kernels.quant_matmul.ops import quant_matmul, w4_matmul
+from repro.kernels.quant_matmul.ref import quant_matmul_ref, w4_matmul_ref
 from repro.kernels.whip_rotate.ops import whip_rotate
 from repro.kernels.whip_rotate.ref import whip_rotate_grad_ref, whip_rotate_ref
 from repro.quant.kv_cache import quantize_kv
@@ -106,13 +106,38 @@ def test_w4_matmul_kernel_matches_ref(mkn, dtype, key):
     x = jax.random.normal(key, (m, k), dtype)
     w = jax.random.normal(jax.random.fold_in(key, 1), (n, k))
     qt = quant_weight(w, bits=4)
-    packed = QTensor(pack_int4(qt.q), qt.scale, None)
+    packed = QTensor(pack_int4(qt.q), qt.scale, None, bits=4, packed=True)
     out = w4_matmul(x, packed)
     ref = w4_matmul_ref(x, packed.q, packed.scale)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32),
                                atol=1e-2 if dtype == jnp.bfloat16 else 1e-4,
                                rtol=1e-2)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("group", [-1, 16])
+@pytest.mark.parametrize("k", [64, 33])
+def test_quant_matmul_kernel_qlinear_dense_parity(bits, group, k, key):
+    """The Pallas quant_matmul, the jnp qlinear_matmul fallback, and the
+    pure-jnp oracle agree exactly on the same packed QTensor (group and
+    per-channel scales, int4 and int8, odd in-features via code padding) —
+    and all track the dense fp matmul within quantization noise."""
+    from repro.quant.qlinear import pack_weight, qlinear_matmul
+    x = jax.random.normal(key, (8, k), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, k))
+    qt = pack_weight(w, bits=bits, group=group)
+    assert qt.in_features == k
+    out = quant_matmul(x, qt)
+    ref = quant_matmul_ref(x, qt)
+    fb = qlinear_matmul(x, qt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(fb),
+                               atol=1e-5, rtol=1e-5)
+    dense = np.asarray(x @ w.T.astype(jnp.float32))
+    err = np.abs(np.asarray(out) - dense).max() / np.abs(dense).max()
+    assert err < (0.2 if bits == 4 else 0.02)
 
 
 @pytest.mark.parametrize("mn", [(256, 32), (1024, 64), (512, 96)])
