@@ -1,17 +1,26 @@
-"""Serve-runtime benchmark: paged int4-KV engine vs the legacy dense engine.
+"""Serve-runtime benchmark: the paged runtime across decoder families.
 
-Measures on a reduced llama2-7b:
-  * decode throughput (tok/s) and chunked-prefill latency of the paged engine,
-  * the same for the legacy lockstep engine (dense fake-quant cache),
+Measures on reduced configs:
+  * decode throughput (tok/s) and chunked-prefill latency of the paged engine
+    on a dense GQA decoder (llama2),
+  * MLA latent-cache serving (deepseek-v3): decode tok/s plus latent-cache
+    bytes — paged-actual (quantized c_kv + rope-key pages) vs the fp16 dense
+    latent cache at the same capacity,
+  * hybrid serving (zamba2): decode tok/s through the SSM state pool + shared
+    attention pages under the same token-level scheduler,
   * KV memory: actual paged-pool bytes vs the dense-cache estimate at the
-    same capacity, plus pool utilization for the benchmark workload,
+    same capacity,
   * weight memory: packed-QTensor projection bytes vs the fp16 QDQ footprint
     they replace, artifact (hash-verified, mmap) load time, and decode
     throughput of the packed-weight engine cold-booted from that artifact.
 
+The legacy lockstep engine is no longer benchmarked: for decoder-only
+families ``ServeEngine`` is a thin wrapper over the paged engine (the
+lockstep loop survives only for enc-dec).
+
 Warm numbers re-run ``generate`` with the jit cache hot — the serving regime:
-the paged engine's two programs are keyed by engine geometry (slots, pages,
-page size, chunk), so repeat deployments recompile nothing.
+the paged engine's programs are keyed by engine geometry (slots, pages, page
+size, chunk), so repeat deployments recompile nothing.
 """
 from __future__ import annotations
 
@@ -23,7 +32,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import model as M
 from repro.quant import kv_bytes
-from repro.serve import PagedServeEngine, Request, ServeEngine
+from repro.quant.kv_cache import latent_bytes
+from repro.serve import PagedServeEngine, Request
 
 
 def _requests(cfg, n, prompt_len, max_new, seed=0):
@@ -65,16 +75,36 @@ def run(smoke: bool = False) -> list:
                  kv_bytes(slots, max_seq, cfg.n_layers, cfg.n_kv_heads,
                           cfg.resolved_head_dim, 16), "B"))
 
-    # the lockstep engine needs headroom: refilled requests keep decoding in
-    # the same ever-growing position range (and their outputs are wrong — the
-    # refill bug — so only throughput is comparable, not content)
-    legacy = ServeEngine(cfg, params, batch_slots=slots,
-                         max_seq=plen + max_new * -(-n_req // slots),
-                         a_bits=8, kv_bits=4)
-    _serve(legacy, cfg, n_req, plen, max_new, require_done=False)  # compile
-    stats = _serve(legacy, cfg, n_req, plen, max_new, require_done=False)
-    rows.append((f"serve,legacy_decode,{tag}",
+    # ---- MLA latent pages (deepseek-v3): decode tok/s + latent bytes ----- #
+    mla_cfg = get_config("deepseek-v3-671b").reduced()
+    mla_params = M.init_params(mla_cfg, jax.random.PRNGKey(1))
+    mla = PagedServeEngine(mla_cfg, mla_params, batch_slots=slots,
+                           max_seq=max_seq, page_size=page, kv_bits=4)
+    _serve(mla, mla_cfg, n_req, plen, max_new)              # compile
+    stats = _serve(mla, mla_cfg, n_req, plen, max_new)      # warm
+    rows.append((f"serve,mla_paged_decode,{tag}",
                  stats["decode_tok_per_s"], "tok_per_s"))
+    # deepseek's reduced config is a mixed stack: latent pages live in the
+    # attn_dense + attn_moe sub-states
+    rows.append((f"serve,mla_latent_bytes_paged,{tag}",
+                 sum(v for k, v in stats["cache_bytes_by_kind"].items()
+                     if k.startswith("attn")), "B"))
+    rows.append((f"serve,mla_latent_bytes_fp16,{tag}",
+                 latent_bytes(slots * max_seq, mla_cfg.n_layers,
+                              mla_cfg.kv_lora_rank,
+                              mla_cfg.qk_rope_head_dim, 16), "B"))
+
+    # ---- hybrid (zamba2): SSM state pool + shared-attn pages ------------- #
+    hy_cfg = get_config("zamba2-7b").reduced()
+    hy_params = M.init_params(hy_cfg, jax.random.PRNGKey(2))
+    hy = PagedServeEngine(hy_cfg, hy_params, batch_slots=slots,
+                          max_seq=max_seq, page_size=page, kv_bits=4)
+    _serve(hy, hy_cfg, n_req, plen, max_new)                # compile
+    stats = _serve(hy, hy_cfg, n_req, plen, max_new)        # warm
+    rows.append((f"serve,hybrid_paged_decode,{tag}",
+                 stats["decode_tok_per_s"], "tok_per_s"))
+    rows.append((f"serve,hybrid_cache_bytes_paged,{tag}",
+                 stats["kv_cache_bytes"], "B"))
 
     # quantize-once pipeline: weight memory + artifact cold-boot cost.
     # Rotation choice doesn't matter for bytes — use the Hadamard pack so the

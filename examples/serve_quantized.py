@@ -7,6 +7,12 @@ artifact — packed weights straight onto the device through the Pallas
 quant_matmul kernel, online R3/R4 resolved from the fused-rotation metadata,
 and zero calls into the calibration stack.
 
+Every decoder-only family serves through the same paged runtime: dense/MoE/
+mixed GQA stacks on int4 KV pages, MLA (deepseek-v3) on quantized latent
+pages, SSM (mamba2) and hybrid (zamba2) on int8 state slots — one token-level
+continuous-batching scheduler for all of them (swap --arch below to try one;
+the legacy lockstep engine survives only for encoder-decoder models).
+
     PYTHONPATH=src python examples/serve_quantized.py
 """
 import tempfile

@@ -1,8 +1,11 @@
-"""Public wrapper: paged decode attention over an int4 page-pool layer slice.
+"""Public wrappers: paged decode attention over a page-pool layer slice.
 
-Dispatches to the Pallas kernel (interpret mode off-TPU, like the other
-kernels); ``paged_attention_ref`` stays the parity oracle and is selectable
-via ``impl="ref"`` for A/B testing.
+``paged_attention`` (GQA KV pages) and ``paged_mla_attention`` (MLA latent
+pages) dispatch to the Pallas kernels (interpret mode off-TPU, like the other
+kernels); the ``ref`` oracles stay the parity references and are selectable
+via ``impl="ref"`` for A/B testing.  ``bits=16`` pools store raw fp16 pages
+(the compat layout the demoted lockstep engine serves through) and always
+take the dense-gather path — correctness over speed on the compat route.
 """
 from __future__ import annotations
 
@@ -13,8 +16,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import use_interpret
-from repro.kernels.paged_attn.paged_attn import paged_attn_pallas
-from repro.kernels.paged_attn.ref import paged_attention_ref
+from repro.kernels.paged_attn.paged_attn import (paged_attn_pallas,
+                                                 paged_mla_attn_pallas)
+from repro.kernels.paged_attn.ref import (paged_attention_ref,
+                                          paged_mla_attention_ref)
 
 
 def paged_attention(q: jax.Array, pool_l: Dict[str, jax.Array],
@@ -22,20 +27,21 @@ def paged_attention(q: jax.Array, pool_l: Dict[str, jax.Array],
                     bits: int = 4, window=0, logit_cap: float = 0.0,
                     scale: Optional[float] = None,
                     impl: str = "pallas") -> jax.Array:
-    """q [B,Hq,hd]; pool_l {kq,ks,kz,vq,vs,vz} [P,T,H,...]; lengths [B].
+    """q [B,Hq,hd]; pool_l {kq,ks,kz,vq,vs,vz} [P,T,H,...] (or {k,v} fp16 at
+    bits=16); lengths [B].
 
     ``window`` may be a traced int32 scalar (per-layer local/global patterns);
     it is folded into a per-sequence start offset so the kernel only ever
     masks on [start, length).
     """
     B, Hq, hd = q.shape
-    H = pool_l["ks"].shape[2]
     if scale is None:
         scale = 1.0 / math.sqrt(hd)
-    if impl == "ref":
+    if impl == "ref" or bits >= 16:
         return paged_attention_ref(q, pool_l, block_tables, lengths,
                                    bits=bits, window=window,
                                    logit_cap=logit_cap, scale=scale)
+    H = pool_l["ks"].shape[2]
     win = jnp.asarray(window, jnp.int32)
     starts = jnp.where(win > 0, jnp.maximum(lengths - win, 0), 0) \
         .astype(jnp.int32)
@@ -45,3 +51,30 @@ def paged_attention(q: jax.Array, pool_l: Dict[str, jax.Array],
         block_tables.astype(jnp.int32), starts, lengths.astype(jnp.int32),
         bits=bits, hd=hd, groups=Hq // H, scale=float(scale),
         logit_cap=float(logit_cap), interpret=use_interpret())
+
+
+def paged_mla_attention(q_lat: jax.Array, q_rope: jax.Array,
+                        pool_l: Dict[str, jax.Array],
+                        block_tables: jax.Array, lengths: jax.Array, *,
+                        scale: float, bits: int = 4,
+                        impl: str = "pallas") -> jax.Array:
+    """Absorbed-MLA paged decode: q_lat [B,h,kvlr], q_rope [B,h,r];
+    pool_l {cq,cs,cz,rq,rs,rz} [P,T,...] (or {ckv,krope} fp16 at bits=16);
+    lengths [B] -> o_lat [B,h,kvlr].
+
+    ``scale`` is required: the model's MLA softmax scale is
+    1/sqrt(qk_nope_head_dim + rope), which cannot be derived from the
+    absorbed q_lat shape (kvlr != nope) — a guessed default would silently
+    diverge from ``mla_decode``.
+    """
+    B, h, kvlr = q_lat.shape
+    rope = q_rope.shape[-1]
+    if impl == "ref" or bits >= 16:
+        return paged_mla_attention_ref(q_lat, q_rope, pool_l, block_tables,
+                                       lengths, bits=bits, scale=scale)
+    return paged_mla_attn_pallas(
+        q_lat, q_rope, pool_l["cq"], pool_l["cs"], pool_l["cz"],
+        pool_l["rq"], pool_l["rs"], pool_l["rz"],
+        block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+        bits=bits, kvlr=kvlr, rope=rope, scale=float(scale),
+        interpret=use_interpret())

@@ -81,6 +81,122 @@ def _paged_attn_kernel(bt_ref, starts_ref, lens_ref,        # scalar prefetch
         o_ref[...] = o.reshape(1, H * G, hd).astype(o_ref.dtype)
 
 
+# --------------------------------------------------------------------------- #
+# MLA latent pages: absorbed decode over quantized c_kv + rope-key pages
+# --------------------------------------------------------------------------- #
+def _dequant_rows(codes, s, z, *, bits: int, dim: int):
+    """[T,pd] uint8 + [T] fp16 scale/zero -> [T,dim] f32 (per-token rows)."""
+    if bits == 4:
+        lo = (codes & 0xF).astype(jnp.float32)
+        hi = ((codes >> 4) & 0xF).astype(jnp.float32)
+        vals = jnp.stack([lo, hi], axis=-1)
+        vals = vals.reshape(codes.shape[:-1] + (codes.shape[-1] * 2,))
+        vals = vals[..., :dim]
+    else:
+        vals = codes.astype(jnp.float32)
+    return vals * s[..., None].astype(jnp.float32) \
+        + z[..., None].astype(jnp.float32)
+
+
+def _paged_mla_kernel(bt_ref, lens_ref,                       # scalar prefetch
+                      ql_ref, qr_ref, cq_ref, cs_ref, cz_ref,
+                      rq_ref, rs_ref, rz_ref, o_ref,
+                      m_s, l_s, acc_s, *,
+                      bits: int, kvlr: int, rope: int, scale: float):
+    """One query token per sequence attends its latent pages (absorbed MLA):
+    scores = q_lat . c_kv + q_rope . k_rope, values ARE the latents (o_lat =
+    p . c_kv), so the page holds one quantized row pair per token and the
+    kernel is single-"head" attention with n_heads query groups."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        m_s[...] = jnp.full_like(m_s, -jnp.inf)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    T = cs_ref.shape[1]
+    ckv = _dequant_rows(cq_ref[0], cs_ref[0], cz_ref[0], bits=bits, dim=kvlr)
+    kr = _dequant_rows(rq_ref[0], rs_ref[0], rz_ref[0], bits=bits, dim=rope)
+    ql = (ql_ref[0].astype(jnp.float32) * scale)          # [h, kvlr]
+    qr = (qr_ref[0].astype(jnp.float32) * scale)          # [h, rope]
+
+    # scores [h,T]: latent + rope-key contributions, contracted on the MXU
+    s = jax.lax.dot_general(ql, ckv, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) \
+        + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    idx = j * T + jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)
+    mask = idx < lens_ref[b]
+    s = jnp.where(mask, s, -jnp.inf)
+
+    m_prev, l_prev = m_s[...], l_s[...]                   # [h,1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(mask, jnp.exp(s - m_safe), 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    m_s[...] = m_new
+    l_s[...] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    # o_lat update [h,kvlr]: values are the latent rows themselves
+    pv = jax.lax.dot_general(p, ckv, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_s[...] = acc_s[...] * corr + pv
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        o = acc_s[...] / jnp.maximum(l_s[...], 1e-30)
+        o_ref[...] = o[None].astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("bits", "kvlr", "rope", "scale",
+                                   "interpret"))
+def paged_mla_attn_pallas(q_lat: jax.Array, q_rope: jax.Array,
+                          cq, cs, cz, rq, rs, rz,
+                          block_tables: jax.Array, lengths: jax.Array, *,
+                          bits: int, kvlr: int, rope: int, scale: float,
+                          interpret: bool = True) -> jax.Array:
+    """q_lat [B,h,kvlr], q_rope [B,h,rope]; latent pools [P,T,(pd)];
+    block_tables [B,Pmax]; lengths [B] -> o_lat [B,h,kvlr]."""
+    B, h, _ = q_lat.shape
+    T = cs.shape[1]
+    Pmax = block_tables.shape[1]
+
+    def page(b, j, bt, ln):              # noqa: ARG001 — index map signature
+        return (bt[b, j], 0, 0)
+
+    def page2(b, j, bt, ln):             # noqa: ARG001
+        return (bt[b, j], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Pmax),
+        in_specs=[
+            pl.BlockSpec((1, h, kvlr), lambda b, j, bt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, h, rope), lambda b, j, bt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, T, cq.shape[-1]), page),
+            pl.BlockSpec((1, T), page2),
+            pl.BlockSpec((1, T), page2),
+            pl.BlockSpec((1, T, rq.shape[-1]), page),
+            pl.BlockSpec((1, T), page2),
+            pl.BlockSpec((1, T), page2),
+        ],
+        out_specs=pl.BlockSpec((1, h, kvlr), lambda b, j, bt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, kvlr), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        partial(_paged_mla_kernel, bits=bits, kvlr=kvlr, rope=rope,
+                scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, h, kvlr), q_lat.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, q_lat, q_rope, cq, cs, cz, rq, rs, rz)
+
+
 @partial(jax.jit, static_argnames=("bits", "hd", "groups", "scale",
                                    "logit_cap", "interpret"))
 def paged_attn_pallas(q: jax.Array, kq, ks, kz, vq, vs, vz,

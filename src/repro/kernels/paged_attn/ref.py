@@ -26,8 +26,18 @@ def dequant_codes(q: jax.Array, s: jax.Array, z: jax.Array, *, bits: int,
 
 def gather_pages(pool_l: Dict[str, jax.Array], block_tables: jax.Array, *,
                  bits: int, head_dim: int, dtype=jnp.float32):
-    """pool_l [P,T,H,*]; block_tables [B,Pmax] -> k, v [B,Pmax*T,H,hd]."""
+    """pool_l [P,T,H,*]; block_tables [B,Pmax] -> k, v [B,Pmax*T,H,hd].
+
+    ``bits=16`` pools hold raw fp16 under ``k``/``v`` (no codes to dequantize
+    — the compat layout the demoted lockstep engine serves through).
+    """
     B, Pmax = block_tables.shape
+    if bits >= 16:
+        T, H = pool_l["k"].shape[1], pool_l["k"].shape[2]
+        return (pool_l["k"][block_tables].astype(dtype)
+                .reshape(B, Pmax * T, H, head_dim),
+                pool_l["v"][block_tables].astype(dtype)
+                .reshape(B, Pmax * T, H, head_dim))
     T, H = pool_l["kq"].shape[1], pool_l["kq"].shape[2]
 
     def flat(codes, s, z):
@@ -39,6 +49,29 @@ def gather_pages(pool_l: Dict[str, jax.Array], block_tables: jax.Array, *,
     k = flat(pool_l["kq"], pool_l["ks"], pool_l["kz"])
     v = flat(pool_l["vq"], pool_l["vs"], pool_l["vz"])
     return k, v
+
+
+def gather_latent_pages(pool_l: Dict[str, jax.Array], block_tables: jax.Array,
+                        *, bits: int, kv_lora_rank: int, rope_dim: int,
+                        dtype=jnp.float32):
+    """MLA latent pool [P,T,*] -> c_kv [B,Pmax*T,kvlr], k_rope [B,Pmax*T,r]."""
+    B, Pmax = block_tables.shape
+    if bits >= 16:
+        T = pool_l["ckv"].shape[1]
+        return (pool_l["ckv"][block_tables].astype(dtype)
+                .reshape(B, Pmax * T, kv_lora_rank),
+                pool_l["krope"][block_tables].astype(dtype)
+                .reshape(B, Pmax * T, rope_dim))
+    T = pool_l["cs"].shape[1]
+
+    def flat(codes, s, z, dim):
+        g = dequant_codes(codes[block_tables], s[block_tables],
+                          z[block_tables], bits=bits, head_dim=dim,
+                          dtype=dtype)
+        return g.reshape(B, Pmax * T, dim)
+
+    return (flat(pool_l["cq"], pool_l["cs"], pool_l["cz"], kv_lora_rank),
+            flat(pool_l["rq"], pool_l["rs"], pool_l["rz"], rope_dim))
 
 
 def paged_attention_ref(q: jax.Array, pool_l: Dict[str, jax.Array],
@@ -68,3 +101,27 @@ def paged_attention_ref(q: jax.Array, pool_l: Dict[str, jax.Array],
     denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
     o = jnp.einsum("bhgk,bkhd->bhgd", p / denom, v)
     return o.reshape(B, Hq, hd).astype(q.dtype)
+
+
+def paged_mla_attention_ref(q_lat: jax.Array, q_rope: jax.Array,
+                            pool_l: Dict[str, jax.Array],
+                            block_tables: jax.Array, lengths: jax.Array, *,
+                            scale: float, bits: int = 4) -> jax.Array:
+    """Absorbed-MLA decode oracle: q_lat [B,h,kvlr], q_rope [B,h,r];
+    lengths [B] -> o_lat [B,h,kvlr] (the latent rows are the values).
+    ``scale`` is required — see ``ops.paged_mla_attention``."""
+    B, h, kvlr = q_lat.shape
+    rope = q_rope.shape[-1]
+    ckv, kr = gather_latent_pages(pool_l, block_tables, bits=bits,
+                                  kv_lora_rank=kvlr, rope_dim=rope)
+    s = (jnp.einsum("bhk,bsk->bhs", q_lat.astype(jnp.float32), ckv)
+         + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32), kr)) * scale
+    idx = jnp.arange(ckv.shape[1], dtype=jnp.int32)
+    valid = idx[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - jnp.where(jnp.isfinite(m), m, 0.0))
+    p = jnp.where(valid[:, None, :], p, 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhs,bsk->bhk", p / denom, ckv)
+    return o.astype(q_lat.dtype)

@@ -10,9 +10,18 @@
 With ``--artifact`` the engine cold-boots from the saved QuantArtifact —
 packed int4/int8 weights straight onto the device, online R3/R4 resolved from
 the fused-rotation metadata — and the calibration stack
-(``core.calibrate``/``core.qr_orth``) is never invoked.  Default engine is
-the paged int4-KV runtime; ``--engine legacy`` selects the lockstep
-dense-cache engine (required for MLA/SSM/hybrid/enc-dec families).
+(``core.calibrate``/``core.qr_orth``) is never invoked.
+
+Every decoder-only family serves through the paged runtime (the default):
+dense/MoE/mixed GQA stacks on int4/int8 KV pages, MLA (deepseek-v3) on
+quantized latent pages, SSM (mamba2) and hybrid (zamba2) on int8 state
+slots — all under the same token-level continuous-batching scheduler.
+``--engine legacy`` selects the lockstep dense-cache loop, which survives
+only for encoder-decoder models (whisper); for everything else the legacy
+``ServeEngine`` is a thin wrapper over the paged engine.
+
+Sampling is per request: greedy by default; ``--temperature``/``--top-k``
+(with ``--seed``) enable stochastic decoding with a per-request PRNG key.
 """
 from __future__ import annotations
 
@@ -27,27 +36,41 @@ from repro.models import model as M
 from repro.serve import PagedServeEngine, Request, ServeEngine
 
 
-def _engine_kind(args, cfg, kv_bits: int) -> bool:
-    return args.engine == "paged" or (
-        args.engine == "auto" and M.supports_paged(cfg)
-        and kv_bits in (4, 8))
+def _use_paged(args, cfg) -> bool:
+    if args.engine == "paged":
+        return True
+    return args.engine == "auto" and M.supports_paged(cfg)
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="Serve a quantized model. Every decoder-only family "
+                    "(dense/MoE/mixed GQA, MLA, SSM, hybrid) runs on the "
+                    "paged continuous-batching engine; the legacy lockstep "
+                    "engine remains only for encoder-decoder models.")
     ap.add_argument("--arch", default=None)
     ap.add_argument("--artifact", default=None,
                     help="serve from a saved QuantArtifact directory "
                          "(skips the calibration stack entirely)")
     ap.add_argument("--engine", choices=["paged", "legacy", "auto"],
-                    default="auto")
+                    default="auto",
+                    help="auto = paged for every decoder-only family "
+                         "(legacy only for enc-dec)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--a-bits", type=int, default=None)
-    ap.add_argument("--kv-bits", type=int, default=None)
+    ap.add_argument("--kv-bits", type=int, default=None,
+                    help="4/8 = quantized KV or MLA-latent pages; 16 = raw "
+                         "fp16 pages (compat)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the top-k logits (0 = full)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="base PRNG seed for sampled decoding")
     ap.add_argument("--no-quant", action="store_true")
     ap.add_argument("--qdq", action="store_true",
                     help="serve fake-quant (QDQ) fp weights instead of "
@@ -73,6 +96,7 @@ def main(argv=None):
 
     max_seq = args.prompt_len + args.max_new * 4
     eng_kw = dict(batch_slots=args.slots, max_seq=max_seq)
+    base_seed = 0 if args.seed is None else args.seed
 
     if args.artifact:
         # cold boot: packed weights + rotation metadata from disk; zero calls
@@ -80,12 +104,16 @@ def main(argv=None):
         from repro.artifacts import load_artifact
         art = load_artifact(args.artifact)
         cfg = art.cfg
-        use_paged = _engine_kind(args, cfg, cfg.quant.kv_bits)
-        if use_paged:
+        if _use_paged(args, cfg):
             eng = PagedServeEngine.from_artifact(
-                art, page_size=args.page_size, **eng_kw)
+                art, page_size=args.page_size, base_seed=base_seed, **eng_kw)
         else:
-            eng = ServeEngine.from_artifact(art, **eng_kw)
+            # the wrapper forwards decoder-only families to the paged engine,
+            # so sampling/paging flags must flow through it too
+            eng = ServeEngine.from_artifact(
+                art, page_size=args.page_size,
+                **(dict(base_seed=base_seed, **eng_kw)
+                   if M.supports_paged(cfg) else eng_kw))
         print(f"[serve] cold boot from {args.artifact} "
               f"(rotations: {art.rotations}, meta: {art.meta})")
     else:
@@ -112,19 +140,24 @@ def main(argv=None):
             rot = {"r3": online_hadamard, "r4": online_hadamard}
             print(f"calibrated + quantized (W4 "
                   f"{'QDQ' if args.qdq else 'packed'}, rotations fused)")
-        use_paged = _engine_kind(args, cfg, args.kv_bits)
-        if use_paged:
+        if _use_paged(args, cfg):
             eng = PagedServeEngine(cfg, params, rot=rot,
                                    page_size=args.page_size,
                                    a_bits=args.a_bits, kv_bits=args.kv_bits,
-                                   **eng_kw)
+                                   base_seed=base_seed, **eng_kw)
         else:
             eng = ServeEngine(cfg, params, rot=rot, a_bits=args.a_bits,
-                              kv_bits=args.kv_bits, **eng_kw)
+                              kv_bits=args.kv_bits, page_size=args.page_size,
+                              **(dict(base_seed=base_seed, **eng_kw)
+                                 if M.supports_paged(cfg) else eng_kw))
 
     rng = np.random.default_rng(0)
+    # per-request keys derive from the engine base seed + sequence id, so
+    # requests sample independently yet replay deterministically
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, args.prompt_len),
-                    max_new=args.max_new) for _ in range(args.requests)]
+                    max_new=args.max_new, temperature=args.temperature,
+                    top_k=args.top_k)
+            for _ in range(args.requests)]
     reqs, stats = eng.generate(reqs, verbose=True)
     done = sum(r.done for r in reqs)
     print(f"[{type(eng).__name__}] served {done}/{len(reqs)} requests; "

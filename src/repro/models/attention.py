@@ -199,7 +199,7 @@ def gqa_attention(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
 # MLA forward (train / prefill)
 # --------------------------------------------------------------------------- #
 def mla_attention(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
-                  shd=NO_SHARD, return_kv: bool = False):
+                  shd=NO_SHARD, rot=None, return_kv: bool = False):
     B, S, _ = x.shape
     h = cfg.n_heads
     nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -214,6 +214,11 @@ def mla_attention(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
     c_kv, k_rope = ckv[..., :kvlr], ckv[..., kvlr:]
     c_kv = rmsnorm(c_kv, p["kv_norm"]["scale"], cfg.norm_eps)
     k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,r]
+    if rot is not None and rot.get("kv_quant") is not None:
+        # paper's KV-4bit on the MLA *latent*: quantize c_kv + rope key at
+        # cache-write; QDQ == the integer latent pages the paged runtime holds
+        c_kv = rot["kv_quant"](c_kv)
+        k_rope = rot["kv_quant"](k_rope)
 
     kv = linear(c_kv, p["wkv_b"]).reshape(B, S, h, nope + vd)
     k_nope, v = kv[..., :nope], kv[..., nope:]
@@ -237,7 +242,8 @@ def attention(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
               causal: bool = True, window=0, shd=NO_SHARD,
               kv_override=None, rot=None, return_kv: bool = False):
     if cfg.attn_type == "mla":
-        return mla_attention(cfg, p, x, positions, shd=shd, return_kv=return_kv)
+        return mla_attention(cfg, p, x, positions, shd=shd, rot=rot,
+                             return_kv=return_kv)
     return gqa_attention(cfg, p, x, positions, causal=causal, window=window,
                          shd=shd, kv_override=kv_override, rot=rot,
                          return_kv=return_kv)
@@ -293,7 +299,8 @@ def gqa_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
 
 
 def mla_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
-               pos: jax.Array, shd=NO_SHARD, cp_fn=None) -> Tuple[jax.Array, dict]:
+               pos: jax.Array, shd=NO_SHARD, rot=None,
+               cp_fn=None) -> Tuple[jax.Array, dict]:
     """Absorbed MLA decode: cache holds the latent c_kv + rope key.
 
     cache: {'ckv': [B,Smax,kvlr], 'krope': [B,Smax,r]}
@@ -312,6 +319,9 @@ def mla_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
     ckv_new = linear(x, p["wkv_a"])                                 # [B,1,kvlr+r]
     c_kv = rmsnorm(ckv_new[..., :kvlr], p["kv_norm"]["scale"], cfg.norm_eps)
     k_rope = apply_rope(ckv_new[..., None, kvlr:], positions, cfg.rope_theta)[:, 0, 0]
+    if rot is not None and rot.get("kv_quant") is not None:
+        c_kv = rot["kv_quant"](c_kv)
+        k_rope = rot["kv_quant"](k_rope)
 
     ckv_cache = jax.lax.dynamic_update_slice(
         cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, pos, 0))
@@ -351,8 +361,17 @@ def _strip_kv_quant(rot):
 
 def _write_kv_pages(pool_l: dict, k: jax.Array, v: jax.Array,
                     pages: jax.Array, offs: jax.Array, kv_bits: int) -> dict:
-    """Quantize k,v [N,H,hd] to QuantKV and scatter into pages[N]/offs[N]."""
+    """Quantize k,v [N,H,hd] to QuantKV and scatter into pages[N]/offs[N].
+
+    ``kv_bits=16``: the pool holds raw fp16 pages under ``k``/``v`` (the
+    compat layout the demoted lockstep engine serves through) — no codes.
+    """
     from repro.quant.kv_cache import quantize_kv
+    if kv_bits >= 16:
+        return {
+            "k": pool_l["k"].at[pages, offs].set(k.astype(pool_l["k"].dtype)),
+            "v": pool_l["v"].at[pages, offs].set(v.astype(pool_l["v"].dtype)),
+        }
     qk = quantize_kv(k, kv_bits)
     qv = quantize_kv(v, kv_bits)
     return {
@@ -362,6 +381,31 @@ def _write_kv_pages(pool_l: dict, k: jax.Array, v: jax.Array,
         "vq": pool_l["vq"].at[pages, offs].set(qv.q),
         "vs": pool_l["vs"].at[pages, offs].set(qv.scale[..., 0]),
         "vz": pool_l["vz"].at[pages, offs].set(qv.zero[..., 0]),
+    }
+
+
+def _write_latent_pages(pool_l: dict, c_kv: jax.Array, k_rope: jax.Array,
+                        pages: jax.Array, offs: jax.Array,
+                        kv_bits: int) -> dict:
+    """Quantize MLA latent rows c_kv [N,kvlr] + k_rope [N,r] (per-token
+    scale/zero, the QuantKV convention) and scatter into pages[N]/offs[N]."""
+    from repro.quant.kv_cache import quantize_kv
+    if kv_bits >= 16:
+        return {
+            "ckv": pool_l["ckv"].at[pages, offs].set(
+                c_kv.astype(pool_l["ckv"].dtype)),
+            "krope": pool_l["krope"].at[pages, offs].set(
+                k_rope.astype(pool_l["krope"].dtype)),
+        }
+    qc = quantize_kv(c_kv, kv_bits)
+    qr = quantize_kv(k_rope, kv_bits)
+    return {
+        "cq": pool_l["cq"].at[pages, offs].set(qc.q),
+        "cs": pool_l["cs"].at[pages, offs].set(qc.scale[..., 0]),
+        "cz": pool_l["cz"].at[pages, offs].set(qc.zero[..., 0]),
+        "rq": pool_l["rq"].at[pages, offs].set(qr.q),
+        "rs": pool_l["rs"].at[pages, offs].set(qr.scale[..., 0]),
+        "rz": pool_l["rz"].at[pages, offs].set(qr.zero[..., 0]),
     }
 
 
@@ -378,7 +422,7 @@ def paged_gqa_decode(cfg: ModelConfig, p: dict, x: jax.Array, pool_l: dict,
     """
     from repro.kernels.paged_attn.ops import paged_attention
     B = x.shape[0]
-    T = pool_l["ks"].shape[1]
+    T = next(iter(pool_l.values())).shape[1]
     q, k, v = gqa_project(cfg, p, x, positions[:, None],
                           rot=_strip_kv_quant(rot))
     pages = jnp.take_along_axis(block_tables, (positions // T)[:, None],
@@ -409,7 +453,7 @@ def paged_gqa_prefill_chunk(cfg: ModelConfig, p: dict, x: jax.Array,
     from repro.kernels.paged_attn.ref import gather_pages
     B, C, _ = x.shape
     hd = cfg.resolved_head_dim
-    T = pool_l["ks"].shape[1]
+    T = next(iter(pool_l.values())).shape[1]
     positions = start + jnp.arange(C, dtype=jnp.int32)
     q, k, v = gqa_project(cfg, p, x, positions, rot=_strip_kv_quant(rot))
     # chunk overhang past the table (chunk > reserved coverage) must land on
@@ -431,10 +475,111 @@ def paged_gqa_prefill_chunk(cfg: ModelConfig, p: dict, x: jax.Array,
     return out, new_pool
 
 
+def _mla_absorbed_q(cfg: ModelConfig, p: dict, x: jax.Array,
+                    positions: jax.Array):
+    """Project queries in the absorbed-decode form.  x [B,S,D] ->
+    q_lat [B,S,h,kvlr] (W_UK absorbed), q_rope [B,S,h,r], w_uv [h,vd,kvlr]."""
+    from repro.quant.qlinear import dense_weight
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvlr = cfg.kv_lora_rank
+    cq = rmsnorm(linear(x, p["wq_a"]), p["q_norm"]["scale"], cfg.norm_eps)
+    q = linear(cq, p["wq_b"]).reshape(B, S, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    wkv_b = dense_weight(p["wkv_b"], jnp.float32).reshape(h, nope + vd, kvlr)
+    w_uk, w_uv = wkv_b[:, :nope], wkv_b[:, nope:]
+    q_lat = jnp.einsum("bshn,hnk->bshk", q_nope.astype(jnp.float32), w_uk)
+    return q_lat, q_rope.astype(jnp.float32), w_uv
+
+
+def _mla_latent_kv(cfg: ModelConfig, p: dict, x: jax.Array,
+                   positions: jax.Array):
+    """New latent rows for the cache: c_kv [B,S,kvlr], k_rope [B,S,r]."""
+    kvlr = cfg.kv_lora_rank
+    ckv = linear(x, p["wkv_a"])
+    c_kv = rmsnorm(ckv[..., :kvlr], p["kv_norm"]["scale"], cfg.norm_eps)
+    k_rope = apply_rope(ckv[..., None, kvlr:], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def paged_mla_decode(cfg: ModelConfig, p: dict, x: jax.Array, pool_l: dict,
+                     block_tables: jax.Array, positions: jax.Array,
+                     lengths: jax.Array, window=0, shd=NO_SHARD, rot=None,
+                     kv_bits: int = 4) -> Tuple[jax.Array, dict]:
+    """Absorbed MLA decode over quantized latent pages: one token per slot.
+
+    x [B,1,D]; pool_l {cq,cs,cz,rq,rs,rz} [P,T,...] (one layer's latent
+    slice); positions/lengths [B] as in ``paged_gqa_decode``.  The page rows
+    ARE the values (o_lat = p . c_kv); absorbed ``wkv_b`` is consumed as a
+    tensor exactly like the dense ``mla_decode``.
+    """
+    from repro.kernels.paged_attn.ops import paged_mla_attention
+    B = x.shape[0]
+    h, vd = cfg.n_heads, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    T = next(iter(pool_l.values())).shape[1]
+    pos2 = positions[:, None]
+    q_lat, q_rope, w_uv = _mla_absorbed_q(cfg, p, x, pos2)
+    c_kv, k_rope = _mla_latent_kv(cfg, p, x, pos2)
+    pages = jnp.take_along_axis(block_tables, (positions // T)[:, None],
+                                axis=1)[:, 0]
+    new_pool = _write_latent_pages(pool_l, c_kv[:, 0], k_rope[:, 0], pages,
+                                   positions % T, kv_bits)
+    o_lat = paged_mla_attention(q_lat[:, 0], q_rope[:, 0], new_pool,
+                                block_tables, lengths, bits=kv_bits,
+                                scale=scale)
+    o = jnp.einsum("bhk,hvk->bhv", o_lat.astype(jnp.float32), w_uv)
+    out = linear(o.reshape(B, 1, h * vd).astype(x.dtype), p["wo"])
+    return out, new_pool
+
+
+def paged_mla_prefill_chunk(cfg: ModelConfig, p: dict, x: jax.Array,
+                            pool_l: dict, block_table: jax.Array,
+                            start, window=0, shd=NO_SHARD, rot=None,
+                            kv_bits: int = 4,
+                            n_pages: Optional[int] = None) -> Tuple[jax.Array, dict]:
+    """One prompt chunk against the latent pages (absorbed form throughout):
+    write quantized c_kv + rope-key rows, then flash-attend the written page
+    prefix with Hkv=1 and n_heads query groups (k = [c_kv | k_rope], v = c_kv).
+    """
+    from repro.kernels.paged_attn.ref import gather_latent_pages
+    B, C, _ = x.shape
+    h, vd = cfg.n_heads, cfg.v_head_dim
+    kvlr, rope_d = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + rope_d)
+    T = next(iter(pool_l.values())).shape[1]
+    positions = start + jnp.arange(C, dtype=jnp.int32)
+    q_lat, q_rope, w_uv = _mla_absorbed_q(cfg, p, x, positions)
+    c_kv, k_rope = _mla_latent_kv(cfg, p, x, positions)
+    # chunk overhang past the reserved table lands on the null page (see
+    # paged_gqa_prefill_chunk)
+    logical = positions // T
+    Pmax = block_table.shape[1]
+    pages = jnp.where(logical < Pmax,
+                      block_table[0, jnp.minimum(logical, Pmax - 1)], 0)
+    new_pool = _write_latent_pages(pool_l, c_kv[0], k_rope[0], pages,
+                                   positions % T, kv_bits)
+    gather_table = block_table if n_pages is None else block_table[:, :n_pages]
+    ckv_d, kr_d = gather_latent_pages(new_pool, gather_table, bits=kv_bits,
+                                      kv_lora_rank=kvlr, rope_dim=rope_d)
+    qfull = jnp.concatenate([q_lat, q_rope], -1)          # [1,C,h,kvlr+r]
+    k = jnp.concatenate([ckv_d, kr_d], -1)[:, :, None, :]  # [1,S,1,kvlr+r]
+    v = ckv_d[:, :, None, :]                               # [1,S,1,kvlr]
+    k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    o_lat = chunked_attention(qfull, k, v, positions, k_pos, causal=True,
+                              chunk=min(512, k.shape[1]), scale=scale)
+    o = jnp.einsum("bshk,hvk->bshv", o_lat.astype(jnp.float32), w_uv)
+    out = linear(o.reshape(B, C, h * vd).astype(x.dtype), p["wo"])
+    return out, new_pool
+
+
 def attn_decode(cfg: ModelConfig, p: dict, x, cache, pos, window=0,
                 shd=NO_SHARD, rot=None, cp_fn=None):
     if cfg.attn_type == "mla":
-        return mla_decode(cfg, p, x, cache, pos, shd=shd, cp_fn=cp_fn)
+        return mla_decode(cfg, p, x, cache, pos, shd=shd, rot=rot,
+                          cp_fn=cp_fn)
     return gqa_decode(cfg, p, x, cache, pos, window=window, shd=shd,
                       rot=rot, cp_fn=cp_fn)
 

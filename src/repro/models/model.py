@@ -357,11 +357,17 @@ def _dense_decode_stack(cfg, layers, x, kv_cache, pos, windows, shd=NO_SHARD,
     return x, new_cache
 
 
-def _mamba_decode_stack(cfg, layers, x, cache, shd=NO_SHARD):
+def _mamba_decode_stack(cfg, layers, x, cache, shd=NO_SHARD, rot=None):
+    sq = (rot or {}).get("state_quant")
+
     def body(x, xs):
         lp, cache_l = xs
         h = apply_norm(cfg, lp["ln"], x)
         out, st = ssm_mod.mamba2_decode(cfg, lp["mixer"], h, cache_l, shd=shd)
+        if sq is not None:
+            # recurrent-state QDQ at write time: bit-exact with the paged
+            # runtime's int8 state slots (the QuantKV convention)
+            st = {k: sq(v) for k, v in st.items()}
         return x + out, st
     return jax.lax.scan(body, x, (layers, cache))
 
@@ -374,14 +380,14 @@ def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, cache: dict,
 
     if cfg.family == "ssm":
         x, st = _mamba_decode_stack(cfg, params["layers"], x, cache["ssm"],
-                                    shd=shd)
+                                    shd=shd, rot=rot)
         new_cache["ssm"] = st
     elif cfg.family == "hybrid":
         shared = params["shared"]
 
         def group_body(x, xs):
             glp, st_l, kv_l = xs
-            x, st = _mamba_decode_stack(cfg, glp, x, st_l, shd=shd)
+            x, st = _mamba_decode_stack(cfg, glp, x, st_l, shd=shd, rot=rot)
             h = apply_norm(cfg, shared["ln1"], x)
             h, new_kv = attn_mod.attn_decode(cfg, shared["attn"], h, kv_l, pos,
                                              shd=shd, rot=rot, cp_fn=cp_fn)
@@ -397,7 +403,7 @@ def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, cache: dict,
         new_cache["kv_shared"] = kv
         if "mamba_rest" in params:
             x, st_r = _mamba_decode_stack(cfg, params["mamba_rest"], x,
-                                          cache["ssm_rest"], shd=shd)
+                                          cache["ssm_rest"], shd=shd, rot=rot)
             new_cache["ssm_rest"] = st_r
     elif cfg.is_encoder_decoder:
         x = x + params["pos_dec"][pos][None, None].astype(x.dtype)
@@ -429,17 +435,32 @@ def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, cache: dict,
 
 
 # --------------------------------------------------------------------------- #
-# Paged serve path (int4 page-pool cache; see repro.serve)
+# Paged serve path (page-pool caches + state slots; see repro.serve)
 # --------------------------------------------------------------------------- #
 def supports_paged(cfg: ModelConfig) -> bool:
-    """The paged runtime covers single-stack dense/MoE GQA decoders."""
-    return (cfg.attn_type == "gqa" and cfg.family in ("dense", "moe")
-            and not cfg.is_encoder_decoder and cfg.pos_embed == "rope"
-            and not (cfg.n_experts and cfg.n_dense_layers))
+    """The paged runtime covers every decoder-only family: single-stack and
+    mixed dense+MoE stacks (GQA or MLA latent pages), SSM state pools, and
+    hybrid interleavings.  Only encoder-decoder models fall back to the
+    legacy lockstep engine."""
+    if cfg.is_encoder_decoder:
+        return False
+    if cfg.family == "ssm":
+        return cfg.attn_type == "none"
+    if cfg.family == "hybrid":
+        return cfg.attn_type == "gqa" and cfg.pos_embed == "rope"
+    return (cfg.family in ("dense", "moe", "vlm")
+            and cfg.attn_type in ("gqa", "mla") and cfg.pos_embed == "rope")
+
+
+def _paged_adapters(cfg: ModelConfig, kv_bits: int, state_bits: int) -> dict:
+    from repro.serve.cache_adapters import adapters_for
+    return adapters_for(cfg, kv_bits=kv_bits, state_bits=state_bits)
 
 
 def _paged_block_tail(cfg, lp, x, h, shd, mesh, rot):
-    """Post-attention residual + FFN shared by paged decode/prefill bodies."""
+    """Post-attention residual + FFN shared by paged decode/prefill bodies;
+    per-layer FFN dispatch ("moe" in the layer pytree) covers mixed
+    dense+MoE stacks with no extra machinery."""
     if cfg.sandwich_norm:
         h = apply_norm(cfg, lp["post_ln1"], h)
     x = x + h
@@ -454,53 +475,210 @@ def _paged_block_tail(cfg, lp, x, h, shd, mesh, rot):
     return x + h
 
 
+def _paged_step(cfg: ModelConfig, params: dict, x: jax.Array, pool: dict,
+                ctx, carry, shd, mesh, rot, kv_bits: int, state_bits: int):
+    """Shared paged body: run the layer stack against the pool, dispatching
+    each layer through its cache adapter (``ctx`` type selects decode vs
+    prefill-chunk behaviour).  Returns (hidden, new_pool, new_carry)."""
+    ads = _paged_adapters(cfg, kv_bits, state_bits)
+    new_pool: dict = {}
+    new_carry: dict = {} if carry is not None else None
+
+    def attn_body(ad):
+        def body(x, xs):
+            lp, pool_l, win = xs
+            h = apply_norm(cfg, lp["ln1"], x)
+            h, new_pool_l, _ = ad.attend_or_mix(lp["attn"], h, pool_l, None,
+                                                ctx, window=win, shd=shd,
+                                                rot=rot)
+            return _paged_block_tail(cfg, lp, x, h, shd, mesh, rot), new_pool_l
+        return body
+
+    if cfg.family == "ssm":
+        ad = ads["ssm"]
+        carry_ssm = None if carry is None else carry["ssm"]
+
+        def body(x, xs):
+            lp, st_l, cr_l = xs
+            h = apply_norm(cfg, lp["ln"], x)
+            out, new_st, new_cr = ad.attend_or_mix(lp["mixer"], h, st_l,
+                                                   cr_l, ctx, shd=shd,
+                                                   rot=rot)
+            return x + out, (new_st, new_cr)
+
+        x, (new_st, new_cr) = jax.lax.scan(
+            body, x, (params["layers"], pool["ssm"], carry_ssm))
+        new_pool["ssm"] = new_st
+        if new_carry is not None:
+            new_carry["ssm"] = new_cr
+    elif cfg.family == "hybrid":
+        x, new_pool, new_carry = _paged_hybrid(cfg, ads, params, x, pool,
+                                               ctx, carry, shd, mesh, rot)
+    else:
+        if "dense_layers" in params:      # mixed: dense prefix + MoE rest,
+            nd = cfg.n_dense_layers       # separate sub-states (no slice/
+            x, new_pool["attn_dense"] = jax.lax.scan(    # concat copies)
+                attn_body(ads["attn_dense"]), x,
+                (params["dense_layers"], pool["attn_dense"],
+                 _windows(cfg, nd)))
+            x, new_pool["attn_moe"] = jax.lax.scan(
+                attn_body(ads["attn_moe"]), x,
+                (params["moe_layers"], pool["attn_moe"],
+                 _windows(cfg, cfg.n_layers - nd)))
+        else:
+            x, new_pool["attn"] = jax.lax.scan(
+                attn_body(ads["attn"]), x,
+                (params["layers"], pool["attn"], _windows(cfg, cfg.n_layers)))
+        if new_carry is not None:
+            for name in pool:
+                new_carry[name] = None if carry is None else carry.get(name)
+    return x, new_pool, new_carry
+
+
+def _paged_hybrid(cfg, ads, params, x, pool, ctx, carry, shd, mesh, rot):
+    """Zamba2-style hybrid: groups of ``shared_attn_every`` mamba layers with
+    the shared attention block (its KV paged per application) between them."""
+    every = cfg.shared_attn_every
+    n_groups, rest = cfg.n_layers // every, cfg.n_layers % every
+    shared = params["shared"]
+    ssm_ad, attn_ad = ads["ssm"], ads["attn"]
+
+    def grp(tree):
+        return jax.tree.map(
+            lambda a: a[:n_groups * every].reshape((n_groups, every)
+                                                   + a.shape[1:]), tree)
+
+    def tail(tree):
+        return jax.tree.map(lambda a: a[n_groups * every:], tree)
+
+    carry_ssm = None if carry is None else carry["ssm"]
+    g_state, r_state = grp(pool["ssm"]), tail(pool["ssm"])
+    g_carry = None if carry_ssm is None else grp(carry_ssm)
+    r_carry = None if carry_ssm is None else tail(carry_ssm)
+
+    def mamba_body(x, xs):
+        lp, st_l, cr_l = xs
+        h = apply_norm(cfg, lp["ln"], x)
+        out, new_st, new_cr = ssm_ad.attend_or_mix(lp["mixer"], h, st_l,
+                                                   cr_l, ctx, shd=shd,
+                                                   rot=rot)
+        return x + out, (new_st, new_cr)
+
+    def group_body(x, xs):
+        glp, gst, gcr, kv_l = xs
+        x, (new_st, new_cr) = jax.lax.scan(mamba_body, x, (glp, gst, gcr))
+        h = apply_norm(cfg, shared["ln1"], x)
+        h, new_kv, _ = attn_ad.attend_or_mix(shared["attn"], h, kv_l, None,
+                                             ctx, shd=shd, rot=rot)
+        x = x + h
+        h = apply_norm(cfg, shared["ln2"], x)
+        x = x + ffn_mod.mlp_forward(cfg, shared["mlp"], h, shd=shd, rot=rot)
+        return x, (new_st, new_cr, new_kv)
+
+    x, (g_new, g_new_cr, new_kv) = jax.lax.scan(
+        group_body, x, (params["mamba_groups"], g_state, g_carry,
+                        pool["attn"]))
+    flat = jax.tree.map(
+        lambda a: a.reshape((n_groups * every,) + a.shape[2:]), g_new)
+    flat_cr = None if g_new_cr is None else jax.tree.map(
+        lambda a: a.reshape((n_groups * every,) + a.shape[2:]), g_new_cr)
+    if rest:
+        x, (r_new, r_new_cr) = jax.lax.scan(
+            mamba_body, x, (params["mamba_rest"], r_state, r_carry))
+        flat = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                            flat, r_new)
+        if flat_cr is not None:
+            flat_cr = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                                   flat_cr, r_new_cr)
+    new_pool = {"ssm": flat, "attn": new_kv}
+    new_carry = None if carry is None else {"ssm": flat_cr,
+                                            "attn": carry.get("attn")}
+    return x, new_pool, new_carry
+
+
 def paged_decode_step(cfg: ModelConfig, params: dict, token: jax.Array,
                       pool: dict, block_tables: jax.Array,
                       positions: jax.Array, lengths: jax.Array,
-                      shd=NO_SHARD, mesh=None, rot=None, kv_bits: int = 4):
-    """token [B,1]; pool leaves [L,P,T,H,...]; positions/lengths [B] — each
-    slot advances at its own position.  Returns (logits [B,1,V], new pool)."""
+                      state_slots: Optional[jax.Array] = None,
+                      shd=NO_SHARD, mesh=None, rot=None, kv_bits: int = 4,
+                      state_bits: int = 8):
+    """token [B,1]; pool: nested per-adapter state (leaves lead with the
+    layer dim); positions/lengths [B] — each slot advances at its own
+    position; state_slots [B] physical state slot per lane (0 = null slot,
+    for idle lanes).  Returns (logits [B,1,V], new pool)."""
     if not supports_paged(cfg):
         raise NotImplementedError(f"no paged decode for {cfg.arch_id}")
+    from repro.serve.cache_adapters import DecodeCtx
+    if state_slots is None:
+        if cfg.family in ("ssm", "hybrid"):
+            # defaulting to slot 0 would read/write the reserved null slot —
+            # the recurrence would silently reset every token
+            raise ValueError(
+                f"{cfg.arch_id}: recurrent-state families require explicit "
+                "state_slots (physical slot per lane; 0 is the null slot)")
+        state_slots = jnp.zeros_like(lengths)
+    ctx = DecodeCtx(block_tables, positions, lengths, state_slots)
     x = _embed(cfg, params, token)
-
-    def body(x, xs):
-        lp, pool_l, win = xs
-        h = apply_norm(cfg, lp["ln1"], x)
-        h, new_pool_l = attn_mod.paged_gqa_decode(
-            cfg, lp["attn"], h, pool_l, block_tables, positions, lengths,
-            window=win, shd=shd, rot=rot, kv_bits=kv_bits)
-        return _paged_block_tail(cfg, lp, x, h, shd, mesh, rot), new_pool_l
-
-    x, new_pool = jax.lax.scan(
-        body, x, (params["layers"], pool, _windows(cfg, cfg.n_layers)))
+    x, new_pool, _ = _paged_step(cfg, params, x, pool, ctx, None, shd, mesh,
+                                 rot, kv_bits, state_bits)
     x = apply_norm(cfg, params["final_norm"], x)
     return _head(cfg, params, x, shd=shd), new_pool
 
 
 def paged_prefill_chunk(cfg: ModelConfig, params: dict, tokens: jax.Array,
                         pool: dict, block_table: jax.Array, start,
+                        carry: Optional[dict] = None, chunk_len=None,
                         shd=NO_SHARD, mesh=None, rot=None, kv_bits: int = 4,
+                        state_bits: int = 8,
                         n_pages: Optional[int] = None):
     """tokens [1,C] (one chunk of one prompt); start: scalar chunk offset;
-    n_pages: static page prefix covering the chunk (see attention module).
-    Returns (logits [1,C,V], new pool)."""
+    carry: fp32 recurrent-state carry from the previous chunk (see
+    ``init_prefill_carry``); chunk_len: valid tokens in the chunk (padding
+    must not advance recurrent state); n_pages: static page prefix covering
+    the chunk.  Returns (logits [1,C,V], new pool, new carry)."""
     if not supports_paged(cfg):
         raise NotImplementedError(f"no paged prefill for {cfg.arch_id}")
+    from repro.serve.cache_adapters import PrefillCtx
+    if carry is None:
+        carry = init_prefill_carry(cfg, kv_bits=kv_bits,
+                                   state_bits=state_bits)
+    if chunk_len is None:
+        chunk_len = tokens.shape[1]
+    ctx = PrefillCtx(block_table, jnp.asarray(start, jnp.int32),
+                     jnp.asarray(chunk_len, jnp.int32), n_pages)
     x = _embed(cfg, params, tokens)
-
-    def body(x, xs):
-        lp, pool_l, win = xs
-        h = apply_norm(cfg, lp["ln1"], x)
-        h, new_pool_l = attn_mod.paged_gqa_prefill_chunk(
-            cfg, lp["attn"], h, pool_l, block_table, start, window=win,
-            shd=shd, rot=rot, kv_bits=kv_bits, n_pages=n_pages)
-        return _paged_block_tail(cfg, lp, x, h, shd, mesh, rot), new_pool_l
-
-    x, new_pool = jax.lax.scan(
-        body, x, (params["layers"], pool, _windows(cfg, cfg.n_layers)))
+    x, new_pool, new_carry = _paged_step(cfg, params, x, pool, ctx, carry,
+                                         shd, mesh, rot, kv_bits, state_bits)
     x = apply_norm(cfg, params["final_norm"], x)
-    return _head(cfg, params, x, shd=shd), new_pool
+    return _head(cfg, params, x, shd=shd), new_pool, new_carry
+
+
+def init_prefill_carry(cfg: ModelConfig, kv_bits: int = 4,
+                       state_bits: int = 8) -> dict:
+    """fp32 single-sequence recurrent-state carry for chunked prefill (None
+    per adapter kind that has no recurrent state)."""
+    ads = _paged_adapters(cfg, kv_bits, state_bits)
+    return {name: ad.init_carry() for name, ad in ads.items()}
+
+
+def commit_prefill_state(cfg: ModelConfig, pool: dict, carry: dict,
+                         phys_slot, kv_bits: int = 4,
+                         state_bits: int = 8) -> dict:
+    """Quantize a finished prefill's fp32 carry into its state slot — the
+    single quantization event at the prefill->decode handoff."""
+    ads = _paged_adapters(cfg, kv_bits, state_bits)
+    return {name: ads[name].commit(pool[name], (carry or {}).get(name),
+                                   phys_slot)
+            for name in pool}
+
+
+def init_pool_slot(cfg: ModelConfig, pool: dict, phys_slot,
+                   kv_bits: int = 4, state_bits: int = 8) -> dict:
+    """Zero one physical state slot (admission hygiene; pages are
+    write-before-read and need no reset)."""
+    ads = _paged_adapters(cfg, kv_bits, state_bits)
+    return {name: ads[name].init_slot(pool[name], phys_slot)
+            for name in pool}
 
 
 # --------------------------------------------------------------------------- #

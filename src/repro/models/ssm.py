@@ -49,15 +49,19 @@ def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
     return z, xbc, dt
 
 
-def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
-    """Depthwise causal conv, width K. xbc [B,S,C]; w [K,C]."""
+def _causal_conv(pad: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width K, over a pre-padded window.
+
+    ``pad`` [B,K-1+S,C] is the chunk prefixed with its left-context (carry
+    rows from the previous chunk, or zeros at start-of-sequence); returns the
+    S in-chunk outputs.
+    """
     K = w.shape[0]
-    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
-    out = jnp.zeros_like(xbc, dtype=jnp.float32)
-    S = xbc.shape[1]
+    S = pad.shape[1] - (K - 1)
+    out = jnp.zeros(pad.shape[:1] + (S,) + pad.shape[2:], jnp.float32)
     for i in range(K):   # K is tiny (4); unrolled taps
         out = out + pad[:, i:i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
-    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(pad.dtype)
 
 
 def ssd_chunked(x: jax.Array, a: jax.Array, Bm: jax.Array, Cm: jax.Array,
@@ -127,16 +131,31 @@ def ssd_reference(x, a, Bm, Cm, dt, h0=None):
     return jnp.stack(ys, 1).astype(x.dtype), h
 
 
-def mamba2_forward(cfg: ModelConfig, p: dict, u: jax.Array,
-                   shd=NO_SHARD, return_state: bool = False):
-    """Full-sequence Mamba-2 mixer. u [B,S,D] -> [B,S,D] (+ state if asked)."""
+def _mamba2_apply(cfg: ModelConfig, p: dict, u: jax.Array,
+                  state: dict | None, shd=NO_SHARD, valid_len=None):
+    """Shared mixer core: full-sequence or one chunk of a longer sequence.
+
+    ``state`` {'conv' [B,K-1,C], 'h' [B,H,P,N]} carries the previous chunk's
+    raw conv tail + SSD state (None = start of sequence).  Returns
+    (out [B,S,D], new_state) — chaining chunks equals the one-shot forward up
+    to f32 reduction order.
+
+    ``valid_len`` (traced scalar): number of real tokens in this chunk; the
+    positions past it are padding and MUST NOT advance the recurrent state
+    (dt is zeroed there, and the conv carry is sliced at the real tail) —
+    unlike KV caches, recurrent state has no decode-overwrites-garbage
+    escape hatch.
+    """
     B, S, _ = u.shape
     H, P, N, G = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
     di = cfg.d_inner
+    K = cfg.ssm_conv
     zxbcdt = linear(u, p["in_proj"])
     z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
-    xbc_raw = xbc
-    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    conv_carry = jnp.zeros((B, K - 1, xbc.shape[-1]), xbc.dtype) \
+        if state is None else state["conv"]
+    conv_pad = jnp.concatenate([conv_carry.astype(xbc.dtype), xbc], axis=1)
+    xbc = _causal_conv(conv_pad, p["conv_w"], p["conv_b"])
     x = xbc[..., :di].reshape(B, S, H, P)
     Bm = xbc[..., di:di + G * N].reshape(B, S, G, N)
     Cm = xbc[..., di + G * N:].reshape(B, S, G, N)
@@ -145,21 +164,43 @@ def mamba2_forward(cfg: ModelConfig, p: dict, u: jax.Array,
     Cm = jnp.repeat(Cm, rep, axis=2)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
                          + p["dt_bias"].astype(jnp.float32))        # [B,S,H]
+    if valid_len is not None:
+        # padded positions: dt=0 -> decay exp(0)=1, input contribution 0, so
+        # the SSD state carries through them untouched
+        valid = jnp.arange(S, dtype=jnp.int32) < valid_len
+        dt = jnp.where(valid[None, :, None], dt, 0.0)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))                    # [H]
     a = dt * A
     x = shd(x, "ssm_bshp")
-    y, h_final = ssd_chunked(x, a, Bm, Cm, dt, cfg.ssm_chunk)
+    h0 = None if state is None else state["h"].astype(jnp.float32)
+    y, h_final = ssd_chunked(x, a, Bm, Cm, dt, cfg.ssm_chunk, h0=h0)
     y = y + x.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
     y = y.reshape(B, S, di)
     y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"]["scale"],
                 cfg.norm_eps)
     out = linear(y.astype(u.dtype), p["out_proj"])
-    if return_state:
-        K = cfg.ssm_conv
-        state = {"conv": xbc_raw[:, -(K - 1):].astype(jnp.float32),
-                 "h": h_final}
-        return out, state
-    return out
+    if valid_len is None:
+        new_conv = conv_pad[:, -(K - 1):]
+    else:
+        # conv_pad rows: [K-1 carry | S chunk]; real tokens end at index
+        # K-1+valid_len, so the K-1 rows before it start at valid_len
+        new_conv = jax.lax.dynamic_slice_in_dim(conv_pad, valid_len, K - 1,
+                                                axis=1)
+    new_state = {"conv": new_conv.astype(jnp.float32), "h": h_final}
+    return out, new_state
+
+
+def mamba2_forward(cfg: ModelConfig, p: dict, u: jax.Array,
+                   shd=NO_SHARD, return_state: bool = False):
+    """Full-sequence Mamba-2 mixer. u [B,S,D] -> [B,S,D] (+ state if asked)."""
+    out, state = _mamba2_apply(cfg, p, u, None, shd=shd)
+    return (out, state) if return_state else out
+
+
+def mamba2_prefill_chunk(cfg: ModelConfig, p: dict, u: jax.Array,
+                         state: dict, shd=NO_SHARD, valid_len=None):
+    """One prompt chunk with carried state; see ``_mamba2_apply``."""
+    return _mamba2_apply(cfg, p, u, state, shd=shd, valid_len=valid_len)
 
 
 def init_ssm_cache(cfg: ModelConfig, batch: int, n_layers: int,

@@ -85,3 +85,39 @@ def paged_kv_bytes(n_pages: int, page_size: int, n_layers: int, n_kv: int,
                    hd: int, bits: int) -> int:
     """Actual footprint of a page pool: allocation is per page, not per seq."""
     return kv_bytes(1, n_pages * page_size, n_layers, n_kv, hd, bits)
+
+
+def latent_bytes(n_tokens: int, n_layers: int, kv_lora_rank: int,
+                 rope_dim: int, bits: int) -> int:
+    """MLA latent-cache footprint: per token one quantized ``c_kv`` row
+    (kv_lora_rank wide) + one rope-key row (rope_dim wide), each with a
+    per-token fp16 scale/zero pair — the paged-MLA page format."""
+    if bits >= 16:
+        return n_tokens * n_layers * 2 * (kv_lora_rank + rope_dim)
+    codes = n_tokens * n_layers * (packed_dim(kv_lora_rank, bits)
+                                   + packed_dim(rope_dim, bits))
+    meta = n_tokens * n_layers * 2 * 2 * 2          # scale+zero, fp16, 2 rows
+    return codes + meta
+
+
+def paged_latent_bytes(n_pages: int, page_size: int, n_layers: int,
+                       kv_lora_rank: int, rope_dim: int, bits: int) -> int:
+    return latent_bytes(n_pages * page_size, n_layers, kv_lora_rank, rope_dim,
+                        bits)
+
+
+def ssm_state_bytes(n_slots: int, n_layers: int, conv_taps: int, conv_dim: int,
+                    n_heads: int, head_dim: int, state_dim: int,
+                    bits: int) -> int:
+    """Per-slot recurrent-state footprint (conv window + SSD state).
+
+    ``bits`` 8 = int8 codes + per-row fp16 scale/zero (QuantKV convention);
+    ``bits`` >= 16 = raw f32 (the legacy dense-cache layout, compat path).
+    """
+    if bits >= 16:
+        return n_slots * n_layers * 4 * (conv_taps * conv_dim
+                                         + n_heads * head_dim * state_dim)
+    conv = n_slots * n_layers * conv_taps * (packed_dim(conv_dim, bits) + 4)
+    h = n_slots * n_layers * n_heads * head_dim * (packed_dim(state_dim, bits)
+                                                   + 4)
+    return conv + h

@@ -1,4 +1,12 @@
-"""Serving runtime: paged int4 KV cache + token-level scheduler + engines."""
+"""Serving runtime: paged quantized caches + token-level scheduler + engines.
+
+Per-layer cache behaviour (GQA KV pages, MLA latent pages, SSM state slots)
+is supplied by the adapters in ``repro.serve.cache_adapters`` — one paged
+runtime for every decoder-only family.
+"""
+from repro.serve.cache_adapters import (DecodeCtx, GQAPages, MLALatentPages,
+                                        PrefillCtx, SSMStatePool,
+                                        adapters_for)
 from repro.serve.engine import PagedServeEngine, Request, ServeEngine
 from repro.serve.page_pool import PagePool
 from repro.serve.scheduler import SeqState, TokenScheduler

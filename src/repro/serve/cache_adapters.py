@@ -1,0 +1,400 @@
+"""Per-layer cache adapters: one paged runtime for every decoder family.
+
+An adapter owns one *kind* of per-layer serving cache — its device layout,
+its byte accounting, and the traced per-layer step that reads/writes it:
+
+  * ``GQAPages``       — the paged int4/int8 KV cache (fp16 pages at bits=16),
+                         attended by the Pallas paged-attention kernel.
+  * ``MLALatentPages`` — paged MLA latent cache: pages hold one quantized
+                         ``c_kv`` row + one rope-key row per token (the
+                         absorbed-decode form), attended by the Pallas
+                         ``paged_mla_attention`` kernel path.
+  * ``SSMStatePool``   — per-slot fixed-size recurrent state (conv window +
+                         SSD state), int8 codes + fp16 scale/zero in the
+                         QuantKV convention (raw f32 at bits>=16).
+
+Protocol (all state-changing methods are pure and trace-safe):
+
+    init_state(geometry)                  -> dict of arrays, leading layer dim
+    init_slot(state, phys_slot)           -> state with that slot zeroed
+    init_carry()                          -> fp32 prefill carry (or None)
+    attend_or_mix(p, x, state_l, carry_l, ctx, ...) -> (out, state_l, carry_l)
+    commit(state, carry, phys_slot)       -> state (prefill carry -> pool)
+    nbytes(state) / predicted_nbytes(...) -> bytes the arrays actually hold
+
+``attend_or_mix`` dispatches on the ctx type: a ``DecodeCtx`` steps one token
+per slot against the pool; a ``PrefillCtx`` processes one prompt chunk of a
+single sequence.  Chunked prefill carries recurrent state in fp32 through the
+carry (no per-chunk requantization); ``commit`` quantizes it into the slot
+exactly once at the prefill->decode handoff, so paged serving matches a
+one-shot legacy reference to f32 reduction order.
+
+The byte-accounting contract is uniform: ``nbytes`` equals the bytes the
+arrays actually hold, physical page 0 / state slot 0 are reserved null
+targets for idle-slot writes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import NO_SHARD
+from repro.quant.kv_cache import (latent_bytes, packed_dim, paged_kv_bytes,
+                                  quantize_kv, ssm_state_bytes)
+
+
+class DecodeCtx(NamedTuple):
+    """Per-step routing for a [slots]-batched decode: idle slots carry
+    length 0 and point at null page 0 / null state slot 0."""
+    block_tables: jax.Array        # [B, Pmax] int32
+    positions: jax.Array           # [B] int32 per-slot write position
+    lengths: jax.Array             # [B] int32 valid tokens after the write
+    state_slots: jax.Array         # [B] int32 physical state slot (0 = null)
+
+
+class PrefillCtx(NamedTuple):
+    """One chunk of one admitted prompt (chunked prefill into owned pages).
+
+    ``chunk_len`` is the number of *real* tokens in the chunk: positions past
+    it are padding — attention caches may write them (decode overwrites
+    before any read), recurrent state must not advance through them.
+    """
+    block_table: jax.Array         # [1, Pmax] int32
+    start: jax.Array               # scalar int32 chunk offset
+    chunk_len: jax.Array           # scalar int32 valid tokens in the chunk
+    n_pages: Optional[int] = None  # static page prefix covering the chunk
+
+
+def _state_nbytes(state: dict) -> int:
+    return sum(int(x.size) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(state))
+
+
+def _quant_rows(x: jax.Array, bits: int):
+    """Per-row (last-axis) QuantKV codes; scale/zero squeezed to row shape."""
+    q = quantize_kv(x, bits)
+    return q.q, q.scale[..., 0], q.zero[..., 0]
+
+
+def _dequant_rows(codes, scale, zero, bits: int, dim: int,
+                  dtype=jnp.float32):
+    from repro.kernels.paged_attn.ref import dequant_codes
+    return dequant_codes(codes, scale, zero, bits=bits, head_dim=dim,
+                         dtype=dtype)
+
+
+# --------------------------------------------------------------------------- #
+# (a) paged GQA KV pages
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class GQAPages:
+    cfg: ModelConfig
+    kv_bits: int = 4
+    n_layers: int = 0              # 0 -> cfg.n_layers
+
+    kind = "gqa-pages"
+    needs_pages = True
+
+    @property
+    def layers(self) -> int:
+        return self.n_layers or self.cfg.n_layers
+
+    def init_state(self, num_pages: int, page_size: int) -> dict:
+        cfg = self.cfg
+        L, H, hd = self.layers, cfg.n_kv_heads, cfg.resolved_head_dim
+        if self.kv_bits >= 16:
+            shape = (L, num_pages, page_size, H, hd)
+            return {"k": jnp.zeros(shape, jnp.float16),
+                    "v": jnp.zeros(shape, jnp.float16)}
+        pd = packed_dim(hd, self.kv_bits)
+        codes = (L, num_pages, page_size, H, pd)
+        meta = (L, num_pages, page_size, H)
+        return {"kq": jnp.zeros(codes, jnp.uint8),
+                "ks": jnp.zeros(meta, jnp.float16),
+                "kz": jnp.zeros(meta, jnp.float16),
+                "vq": jnp.zeros(codes, jnp.uint8),
+                "vs": jnp.zeros(meta, jnp.float16),
+                "vz": jnp.zeros(meta, jnp.float16)}
+
+    def nbytes(self, state: dict) -> int:
+        return _state_nbytes(state)
+
+    def predicted_nbytes(self, num_pages: int, page_size: int) -> int:
+        cfg = self.cfg
+        return paged_kv_bytes(num_pages, page_size, self.layers,
+                              cfg.n_kv_heads, cfg.resolved_head_dim,
+                              self.kv_bits)
+
+    def init_slot(self, state: dict, phys_slot) -> dict:
+        return state               # pages are write-before-read; length-masked
+
+    def init_carry(self):
+        return None                # KV pages are written as chunks arrive
+
+    def commit(self, state: dict, carry, phys_slot) -> dict:
+        return state
+
+    def write_decode(self, state_l: dict, k: jax.Array, v: jax.Array,
+                     pages: jax.Array, offs: jax.Array) -> dict:
+        """Quantize one token's k,v [N,H,hd] rows into pages[N]/offs[N]."""
+        from repro.models.attention import _write_kv_pages
+        return _write_kv_pages(state_l, k, v, pages, offs, self.kv_bits)
+
+    write_prefill_chunk = write_decode   # same scatter, [C] rows at once
+
+    def attend_or_mix(self, p: dict, x: jax.Array, state_l: dict, carry_l,
+                      ctx, *, window=0, shd=NO_SHARD, rot=None):
+        from repro.models import attention as attn_mod
+        if isinstance(ctx, PrefillCtx):
+            out, new_state = attn_mod.paged_gqa_prefill_chunk(
+                self.cfg, p, x, state_l, ctx.block_table, ctx.start,
+                window=window, shd=shd, rot=rot, kv_bits=self.kv_bits,
+                n_pages=ctx.n_pages)
+        else:
+            out, new_state = attn_mod.paged_gqa_decode(
+                self.cfg, p, x, state_l, ctx.block_tables, ctx.positions,
+                ctx.lengths, window=window, shd=shd, rot=rot,
+                kv_bits=self.kv_bits)
+        return out, new_state, carry_l
+
+
+# --------------------------------------------------------------------------- #
+# (b) paged MLA latent pages
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class MLALatentPages:
+    cfg: ModelConfig
+    kv_bits: int = 4
+    n_layers: int = 0
+
+    kind = "mla-latent-pages"
+    needs_pages = True
+
+    @property
+    def layers(self) -> int:
+        return self.n_layers or self.cfg.n_layers
+
+    def init_state(self, num_pages: int, page_size: int) -> dict:
+        cfg = self.cfg
+        L, kvlr, rope = self.layers, cfg.kv_lora_rank, cfg.qk_rope_head_dim
+        if self.kv_bits >= 16:
+            return {"ckv": jnp.zeros((L, num_pages, page_size, kvlr),
+                                     jnp.float16),
+                    "krope": jnp.zeros((L, num_pages, page_size, rope),
+                                       jnp.float16)}
+        meta = (L, num_pages, page_size)
+        return {"cq": jnp.zeros(meta + (packed_dim(kvlr, self.kv_bits),),
+                                jnp.uint8),
+                "cs": jnp.zeros(meta, jnp.float16),
+                "cz": jnp.zeros(meta, jnp.float16),
+                "rq": jnp.zeros(meta + (packed_dim(rope, self.kv_bits),),
+                                jnp.uint8),
+                "rs": jnp.zeros(meta, jnp.float16),
+                "rz": jnp.zeros(meta, jnp.float16)}
+
+    def nbytes(self, state: dict) -> int:
+        return _state_nbytes(state)
+
+    def predicted_nbytes(self, num_pages: int, page_size: int) -> int:
+        cfg = self.cfg
+        return latent_bytes(num_pages * page_size, self.layers,
+                            cfg.kv_lora_rank, cfg.qk_rope_head_dim,
+                            self.kv_bits)
+
+    def init_slot(self, state: dict, phys_slot) -> dict:
+        return state
+
+    def init_carry(self):
+        return None
+
+    def commit(self, state: dict, carry, phys_slot) -> dict:
+        return state
+
+    def write_decode(self, state_l: dict, c_kv: jax.Array, k_rope: jax.Array,
+                     pages: jax.Array, offs: jax.Array) -> dict:
+        """Quantize latent rows c_kv [N,kvlr] + k_rope [N,r] into pages."""
+        from repro.models.attention import _write_latent_pages
+        return _write_latent_pages(state_l, c_kv, k_rope, pages, offs,
+                                   self.kv_bits)
+
+    write_prefill_chunk = write_decode
+
+    def attend_or_mix(self, p: dict, x: jax.Array, state_l: dict, carry_l,
+                      ctx, *, window=0, shd=NO_SHARD, rot=None):
+        from repro.models import attention as attn_mod
+        if isinstance(ctx, PrefillCtx):
+            out, new_state = attn_mod.paged_mla_prefill_chunk(
+                self.cfg, p, x, state_l, ctx.block_table, ctx.start,
+                window=window, shd=shd, rot=rot, kv_bits=self.kv_bits,
+                n_pages=ctx.n_pages)
+        else:
+            out, new_state = attn_mod.paged_mla_decode(
+                self.cfg, p, x, state_l, ctx.block_tables, ctx.positions,
+                ctx.lengths, window=window, shd=shd, rot=rot,
+                kv_bits=self.kv_bits)
+        return out, new_state, carry_l
+
+
+# --------------------------------------------------------------------------- #
+# (c) SSM / conv recurrent-state pool (per slot, fixed size)
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class SSMStatePool:
+    cfg: ModelConfig
+    state_bits: int = 8
+    n_layers: int = 0
+
+    kind = "ssm-state-pool"
+    needs_pages = False
+
+    @property
+    def layers(self) -> int:
+        return self.n_layers or self.cfg.n_layers
+
+    def _dims(self):
+        cfg = self.cfg
+        return (cfg.ssm_conv - 1, cfg.conv_dim, cfg.ssm_nheads,
+                cfg.ssm_head_dim, cfg.ssm_state)
+
+    def init_state(self, n_slots: int) -> dict:
+        """Slot-indexed state arrays; physical slot 0 is the null slot idle
+        decode lanes write to (mirrors the pool's null page 0)."""
+        L, S1 = self.layers, n_slots + 1
+        K1, C, H, P, N = self._dims()
+        if self.state_bits >= 16:
+            return {"conv": jnp.zeros((L, S1, K1, C), jnp.float32),
+                    "h": jnp.zeros((L, S1, H, P, N), jnp.float32)}
+        return {"cvq": jnp.zeros((L, S1, K1, packed_dim(C, self.state_bits)),
+                                 jnp.uint8),
+                "cvs": jnp.zeros((L, S1, K1), jnp.float16),
+                "cvz": jnp.zeros((L, S1, K1), jnp.float16),
+                "hq": jnp.zeros((L, S1, H, P, packed_dim(N, self.state_bits)),
+                                jnp.uint8),
+                "hs": jnp.zeros((L, S1, H, P), jnp.float16),
+                "hz": jnp.zeros((L, S1, H, P), jnp.float16)}
+
+    def nbytes(self, state: dict) -> int:
+        return _state_nbytes(state)
+
+    def predicted_nbytes(self, n_slots: int) -> int:
+        K1, C, H, P, N = self._dims()
+        return ssm_state_bytes(n_slots + 1, self.layers, K1, C, H, P, N,
+                               self.state_bits)
+
+    def init_slot(self, state: dict, phys_slot) -> dict:
+        return {k: v.at[:, phys_slot].set(jnp.zeros_like(v[:, 0]))
+                for k, v in state.items()}
+
+    def init_carry(self) -> dict:
+        """fp32 single-sequence prefill state, stacked over layers."""
+        L = self.layers
+        K1, C, H, P, N = self._dims()
+        return {"conv": jnp.zeros((L, 1, K1, C), jnp.float32),
+                "h": jnp.zeros((L, 1, H, P, N), jnp.float32)}
+
+    # ---- slot read/write (the QuantKV round trip) ----------------------- #
+    def read_slots(self, state_l: dict, slots: jax.Array) -> dict:
+        """state_l (one layer) + slots [B] -> {'conv' [B,K1,C], 'h' [B,H,P,N]}."""
+        K1, C, H, P, N = self._dims()
+        if self.state_bits >= 16:
+            return {"conv": state_l["conv"][slots], "h": state_l["h"][slots]}
+        conv = _dequant_rows(state_l["cvq"][slots], state_l["cvs"][slots],
+                             state_l["cvz"][slots], self.state_bits, C)
+        h = _dequant_rows(state_l["hq"][slots], state_l["hs"][slots],
+                          state_l["hz"][slots], self.state_bits, N)
+        return {"conv": conv, "h": h}
+
+    def write_slots(self, state_l: dict, slots: jax.Array,
+                    new: dict) -> dict:
+        """Quantize {'conv','h'} (leading slot batch) and scatter at slots."""
+        if self.state_bits >= 16:
+            return {"conv": state_l["conv"].at[slots].set(
+                        new["conv"].astype(jnp.float32)),
+                    "h": state_l["h"].at[slots].set(
+                        new["h"].astype(jnp.float32))}
+        cq, cs, cz = _quant_rows(new["conv"].astype(jnp.float32),
+                                 self.state_bits)
+        hq, hs, hz = _quant_rows(new["h"].astype(jnp.float32),
+                                 self.state_bits)
+        return {"cvq": state_l["cvq"].at[slots].set(cq),
+                "cvs": state_l["cvs"].at[slots].set(cs),
+                "cvz": state_l["cvz"].at[slots].set(cz),
+                "hq": state_l["hq"].at[slots].set(hq),
+                "hs": state_l["hs"].at[slots].set(hs),
+                "hz": state_l["hz"].at[slots].set(hz)}
+
+    write_decode = write_slots          # protocol alias: per-step state write
+
+    def commit(self, state: dict, carry: dict, phys_slot) -> dict:
+        """Quantize the fp32 prefill carry into the slot — the single
+        quantization event at the prefill->decode handoff."""
+        conv = carry["conv"][:, 0]                     # [L,K1,C]
+        h = carry["h"][:, 0]                           # [L,H,P,N]
+        if self.state_bits >= 16:
+            return {"conv": state["conv"].at[:, phys_slot].set(conv),
+                    "h": state["h"].at[:, phys_slot].set(h)}
+        cq, cs, cz = _quant_rows(conv, self.state_bits)
+        hq, hs, hz = _quant_rows(h, self.state_bits)
+        return {"cvq": state["cvq"].at[:, phys_slot].set(cq),
+                "cvs": state["cvs"].at[:, phys_slot].set(cs),
+                "cvz": state["cvz"].at[:, phys_slot].set(cz),
+                "hq": state["hq"].at[:, phys_slot].set(hq),
+                "hs": state["hs"].at[:, phys_slot].set(hs),
+                "hz": state["hz"].at[:, phys_slot].set(hz)}
+
+    def attend_or_mix(self, p: dict, x: jax.Array, state_l: dict, carry_l,
+                      ctx, *, window=0, shd=NO_SHARD, rot=None):
+        from repro.models import ssm as ssm_mod
+        if isinstance(ctx, PrefillCtx):
+            # prefill state flows through the fp32 carry; the pool slot is
+            # written once by commit() after the last chunk.  chunk padding
+            # must not advance the recurrence (valid_len mask).
+            out, new_carry = ssm_mod.mamba2_prefill_chunk(
+                self.cfg, p, x, carry_l, shd=shd, valid_len=ctx.chunk_len)
+            return out, state_l, new_carry
+        cache = self.read_slots(state_l, ctx.state_slots)
+        out, new = ssm_mod.mamba2_decode(self.cfg, p, x, cache, shd=shd)
+        return out, self.write_slots(state_l, ctx.state_slots, new), carry_l
+
+
+# --------------------------------------------------------------------------- #
+# Factory: which adapters a config's layer stack needs
+# --------------------------------------------------------------------------- #
+def adapters_for(cfg: ModelConfig, *, kv_bits: int = 4,
+                 state_bits: int = 8) -> dict:
+    """Sub-state name -> adapter for every decoder family the paged runtime
+    serves.  Keys match the nested layout of ``PagePool.state``:
+
+        single attention stacks (dense/moe/vlm):
+            {'attn': GQAPages | MLALatentPages}          [n_layers]
+        mixed dense+MoE (deepseek/grok1-style):
+            {'attn_dense': ..., 'attn_moe': ...}         [prefix] / [rest]
+            (two sub-states so the layer scans consume them without
+            slice/concat copies — pool donation keeps aliasing)
+        ssm:    {'ssm': SSMStatePool}                    [n_layers]
+        hybrid: {'ssm': SSMStatePool,                    [all mamba layers]
+                 'attn': GQAPages}                       [one per group]
+    """
+    if cfg.is_encoder_decoder:
+        raise NotImplementedError(
+            f"{cfg.arch_id} (family={cfg.family}, encoder-decoder): the paged "
+            "runtime covers decoder-only models — use the legacy lockstep "
+            "ServeEngine")
+    if cfg.family == "ssm":
+        return {"ssm": SSMStatePool(cfg, state_bits)}
+    if cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        return {"ssm": SSMStatePool(cfg, state_bits, n_layers=cfg.n_layers),
+                "attn": GQAPages(cfg, kv_bits,
+                                 n_layers=cfg.n_layers // every)}
+    attn_cls = MLALatentPages if cfg.attn_type == "mla" else GQAPages
+    if cfg.n_experts and cfg.n_dense_layers:
+        nd = cfg.n_dense_layers
+        return {"attn_dense": attn_cls(cfg, kv_bits, n_layers=nd),
+                "attn_moe": attn_cls(cfg, kv_bits,
+                                     n_layers=cfg.n_layers - nd)}
+    return {"attn": attn_cls(cfg, kv_bits)}

@@ -1,17 +1,25 @@
 """Serving engines over a (quantized, rotated) model.
 
-``PagedServeEngine`` is the real runtime: an int4 page-pool KV cache
-(``repro.serve.page_pool``), a token-level continuous-batching scheduler
-(``repro.serve.scheduler``) with chunked prefill, and the Pallas
-paged-attention kernel (``repro.kernels.paged_attn``).  All jitted shapes are
-fixed by the engine geometry (slots, page count, page size, chunk), so one
-engine compiles exactly two programs — the calibrate-on-deploy flow reuses
-them across repeat deployments.
+``PagedServeEngine`` is the runtime for *every* decoder-only family: a paged
+quantized cache pool (``repro.serve.page_pool``) whose per-layer behaviour is
+supplied by cache adapters (``repro.serve.cache_adapters``) — GQA KV pages,
+MLA latent pages, SSM/conv state slots — a token-level continuous-batching
+scheduler (``repro.serve.scheduler``) with chunked prefill, and the Pallas
+paged-attention kernels (``repro.kernels.paged_attn``).  All jitted shapes
+are fixed by the engine geometry (slots, page count, page size, chunk), so
+one engine compiles a handful of programs — the calibrate-on-deploy flow
+reuses them across repeat deployments.
 
-``ServeEngine`` is the legacy lockstep dense-cache engine, kept for model
-families the paged path doesn't cover (MLA/SSM/hybrid/enc-dec).  Its slot
-refill is request-granular and does NOT prefill the refilled prompt — a known
-correctness bug the paged engine fixes by construction.
+Sampling is per request: greedy argmax by default, or temperature/top-k with
+a per-request PRNG key threaded through the scheduler (deterministic replay:
+the step key is the request key folded with the absolute position).
+
+``ServeEngine`` is a thin compat wrapper that forwards every decoder-only
+family to ``PagedServeEngine``; the legacy lockstep dense-cache loop is kept
+verbatim only for encoder-decoder models (which the paged runtime does not
+cover).  The lockstep slot refill is request-granular and does NOT prefill
+the refilled prompt — a known correctness bug the paged engine fixes by
+construction.
 """
 from __future__ import annotations
 
@@ -41,91 +49,171 @@ def _from_artifact(cls, artifact, paged: bool, **kw):
     online rotations resolved from metadata, serving bits from the config
     snapshot — zero calls into the calibration stack."""
     from repro.artifacts.format import resolve_rotations
-    qc = artifact.cfg.quant
+    cfg = artifact.cfg
+    qc = cfg.quant
+    if paged and not M.supports_paged(cfg):
+        raise NotImplementedError(
+            f"artifact config {cfg.arch_id} (family={cfg.family}"
+            f"{', encoder-decoder' if cfg.is_encoder_decoder else ''}) is not "
+            "covered by the paged runtime; fall back to the legacy lockstep "
+            "engine: ServeEngine.from_artifact(...)")
     kw.setdefault("rot", resolve_rotations(artifact.rotations))
     kw.setdefault("a_bits", qc.a_bits)
-    if paged and "kv_bits" not in kw and qc.kv_bits not in (4, 8):
+    if paged and "kv_bits" not in kw and cfg.attn_type != "none" \
+            and qc.kv_bits not in (4, 8):
         raise ValueError(
             f"artifact snapshot has kv_bits={qc.kv_bits}; the paged engine "
-            "stores integer KV — pass kv_bits=4/8 explicitly or use the "
-            "legacy ServeEngine")
+            "stores integer KV pages by default — pass kv_bits=4/8 (or 16 "
+            "for raw fp16 pages) explicitly, or use the ServeEngine wrapper")
     kw.setdefault("kv_bits", qc.kv_bits)
     params = jax.device_put(artifact.params)    # one transfer off the mmap
-    return cls(artifact.cfg, params, **kw)
+    return cls(cfg, params, **kw)
+
+
+def _build_sampler(vocab: int):
+    """Per-slot sampling: greedy at temperature 0 (the oracle), else
+    temperature softmax restricted to the top-k logits, keyed by the
+    request key folded with the absolute position (deterministic replay)."""
+    def sample(logits, temps, top_ks, keys, positions):
+        lg = logits[:, 0, :vocab].astype(jnp.float32)
+        greedy = jnp.argmax(lg, axis=-1)
+
+        def one(lg_b, t, k, key, pos):
+            key = jax.random.fold_in(key, pos)
+            kk = jnp.where(k > 0, k, vocab)
+            srt = jnp.sort(lg_b)[::-1]                      # descending
+            thresh = srt[jnp.clip(kk - 1, 0, vocab - 1)]
+            masked = jnp.where(lg_b >= thresh,
+                               lg_b / jnp.maximum(t, 1e-6), -jnp.inf)
+            return jax.random.categorical(key, masked)
+
+        sampled = jax.vmap(one)(lg, temps, top_ks, keys,
+                                positions.astype(jnp.uint32))
+        return jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+    return sample
 
 
 class PagedServeEngine:
-    """Paged int4-KV serving runtime (W4 weights via params, A-quant hook,
-    4/8-bit integer KV pages, online R3/R4 via the rot context)."""
+    """Paged serving runtime for every decoder-only family (W4 weights via
+    params, A-quant hook, quantized KV/latent pages + int8 state slots,
+    online R3/R4 via the rot context)."""
 
     def __init__(self, cfg: ModelConfig, params, rot=None, mesh=None,
                  shd=NO_SHARD, batch_slots: int = 4, max_seq: int = 256,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 a_bits: int = 16, kv_bits: int = 4, greedy: bool = True):
-        if kv_bits not in (4, 8):
-            raise ValueError("paged cache stores integer KV: kv_bits in {4,8}")
+                 a_bits: int = 16, kv_bits: int = 4, state_bits: int = 8,
+                 base_seed: int = 0):
+        if kv_bits not in (4, 8, 16):
+            raise ValueError("paged cache stores quantized KV (kv_bits 4/8) "
+                             "or raw fp16 pages (kv_bits 16)")
         if not M.supports_paged(cfg):
             raise NotImplementedError(
-                f"{cfg.arch_id}: use the legacy ServeEngine")
+                f"{cfg.arch_id} (family={cfg.family}"
+                f"{', encoder-decoder' if cfg.is_encoder_decoder else ''}) "
+                "is not covered by the paged runtime; fall back to the "
+                "legacy lockstep engine: ServeEngine")
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
         self.max_seq = max_seq
         self.kv_bits = kv_bits
+        self.state_bits = state_bits
+        self.base_seed = base_seed
         self.prefill_chunk = prefill_chunk or page_size
         self.rot = dict(rot or {})
         if num_pages is None:
             # every slot can hold a full-length sequence, + the null page
             num_pages = batch_slots * -(-max_seq // page_size) + 1
         self.pool = PagePool(cfg, num_pages=num_pages, page_size=page_size,
-                             max_seq=max_seq, kv_bits=kv_bits)
+                             max_seq=max_seq, kv_bits=kv_bits,
+                             state_bits=state_bits, n_slots=batch_slots)
+        self._has_state = any(not a.needs_pages
+                              for a in self.pool.adapters.values())
 
         from repro.train import steps as S
         aq = _act_quant_hook(a_bits)
-        # donate the pool state (arg 2): the step's output pool aliases the
-        # input buffers instead of copying the whole pool every token.  CPU
-        # XLA has no donation — skip it there to avoid per-call warnings.
-        donate = () if jax.default_backend() == "cpu" else (2,)
+        # donate the pool state (arg 2 / arg 0): the step's output pool
+        # aliases the input buffers instead of copying the whole pool every
+        # token.  CPU XLA has no donation — skip it there to avoid warnings.
+        cpu = jax.default_backend() == "cpu"
+        donate = () if cpu else (2,)
+        qkw = dict(kv_bits=kv_bits, state_bits=state_bits)
         self._prefill = jax.jit(S.build_paged_prefill_chunk(
-            cfg, mesh=mesh, shd=shd, rot=self.rot, act_quant=aq,
-            kv_bits=kv_bits), donate_argnums=donate, static_argnums=(5,))
+            cfg, mesh=mesh, shd=shd, rot=self.rot, act_quant=aq, **qkw),
+            donate_argnums=donate, static_argnums=(7,))
         self._decode = jax.jit(S.build_paged_decode_step(
-            cfg, mesh=mesh, shd=shd, rot=self.rot, act_quant=aq,
-            kv_bits=kv_bits), donate_argnums=donate)
+            cfg, mesh=mesh, shd=shd, rot=self.rot, act_quant=aq, **qkw),
+            donate_argnums=donate)
+        pool_donate = () if cpu else (0,)
+        self._commit = jax.jit(S.build_paged_commit(cfg, **qkw),
+                               donate_argnums=pool_donate)
+        self._init_slot = jax.jit(S.build_paged_init_slot(cfg, **qkw),
+                                  donate_argnums=pool_donate)
+        self._sample = jax.jit(_build_sampler(cfg.vocab_size))
+        # greedy fast path: the default serving mode (and the test oracle)
+        # must not pay the sampler's full-vocab sort per slot per step
+        self._greedy = jax.jit(
+            lambda lg: jnp.argmax(lg[:, 0, :cfg.vocab_size], -1)
+            .astype(jnp.int32))
 
     @classmethod
     def from_artifact(cls, artifact, **kw) -> "PagedServeEngine":
         return _from_artifact(cls, artifact, paged=True, **kw)
 
     # ------------------------------------------------------------------ #
+    def _sample_one(self, seq: SeqState, logits_row, pos: int) -> int:
+        """Sample one token from a [V']-row with the request's parameters."""
+        r = seq.req
+        if r.temperature <= 0:
+            return int(self._greedy(jnp.asarray(logits_row)[None, None])[0])
+        tok = self._sample(
+            jnp.asarray(logits_row)[None, None],
+            jnp.asarray([r.temperature], jnp.float32),
+            jnp.asarray([r.top_k], jnp.int32),
+            jnp.asarray(seq.key_data[None]),
+            jnp.asarray([pos], jnp.int32))
+        return int(tok[0])
+
     def _prefill_seq(self, seq: SeqState) -> int:
-        """Chunked prefill of one admitted prompt into its reserved pages;
-        returns the greedy first generated token (prompt-tail argmax)."""
+        """Chunked prefill of one admitted prompt into its reserved pages
+        (fp32 recurrent carry across chunks, committed to the state slot at
+        the end); returns the first generated token (prompt-tail sample)."""
         cfg = self.cfg
         prompt = np.asarray(seq.req.prompt, np.int32)
         C = self.prefill_chunk
         table = jnp.asarray(self.pool.block_table_row(seq.seq_id)[None])
         first = 0
         T = self.pool.page_size
+        carry = M.init_prefill_carry(cfg, kv_bits=self.kv_bits,
+                                     state_bits=self.state_bits)
+        tail_logits = None
         for s0 in range(0, len(prompt), C):
             chunk = prompt[s0:s0 + C]
             toks = np.zeros((1, C), np.int32)
             toks[0, :len(chunk)] = chunk
-            n_pages = min(-(-(s0 + C) // T), self.pool.max_pages_per_seq)
-            logits, state = self._prefill(self.params, jnp.asarray(toks),
-                                          self.pool.state, table,
-                                          jnp.int32(s0), n_pages)
+            n_pages = min(-(-(s0 + C) // T), self.pool.max_pages_per_seq) \
+                if self.pool.has_pages else 1
+            logits, state, carry = self._prefill(
+                self.params, jnp.asarray(toks), self.pool.state, table,
+                jnp.int32(s0), carry, jnp.int32(len(chunk)), n_pages)
             self.pool.state = state
             tail = len(prompt) - 1 - s0
             if 0 <= tail < C:
-                first = int(jnp.argmax(logits[0, tail, :cfg.vocab_size]))
+                tail_logits = logits[0, tail]
+        if self._has_state:
+            # single quantization event at the prefill->decode handoff
+            self.pool.state = self._commit(
+                self.pool.state, carry,
+                jnp.int32(seq.slot + 1))
+        if tail_logits is not None:
+            first = self._sample_one(seq, tail_logits, len(prompt) - 1)
         return first
 
     def generate(self, requests: List[Request], verbose: bool = False):
         """Serve a request list with token-level continuous batching."""
-        cfg = self.cfg
-        sched = TokenScheduler(self.pool, self.slots)
+        sched = TokenScheduler(self.pool, self.slots,
+                               base_seed=self.base_seed)
         sched.add(list(requests))
         prefill_s = decode_s = 0.0
         n_prefill = n_decode = 0
@@ -134,6 +222,11 @@ class PagedServeEngine:
             admitted = sched.admit()
             for seq in admitted:
                 t0 = time.time()
+                if self._has_state:
+                    # admission hygiene: the previous occupant's state slot
+                    # must not linger (commit overwrites it anyway)
+                    self.pool.state = self._init_slot(
+                        self.pool.state, jnp.int32(seq.slot + 1))
                 first = self._prefill_seq(seq)
                 prefill_s += time.time() - t0
                 n_prefill += len(seq.req.prompt)
@@ -143,18 +236,25 @@ class PagedServeEngine:
                     sched.check_progress()   # stall: queued work can't fit
                 continue   # admitted requests all finished at prefill
                            # (max_new=1) — their slots/pages are free again
-            tokens, tables, positions, lengths = sched.batch_inputs()
+            (tokens, tables, positions, lengths, state_slots,
+             (temps, top_ks, keys)) = sched.batch_inputs()
             t0 = time.time()
             logits, state = self._decode(
                 self.params, jnp.asarray(tokens), self.pool.state,
                 jnp.asarray(tables), jnp.asarray(positions),
-                jnp.asarray(lengths))
+                jnp.asarray(lengths), jnp.asarray(state_slots))
             self.pool.state = state
-            nxt = np.asarray(jnp.argmax(logits[:, 0, :cfg.vocab_size], -1))
+            if temps.max() <= 0:
+                nxt = np.asarray(self._greedy(logits))
+            else:
+                nxt = np.asarray(self._sample(
+                    logits, jnp.asarray(temps), jnp.asarray(top_ks),
+                    jnp.asarray(keys), jnp.asarray(positions)))
             decode_s += time.time() - t0
             n_decode += sched.n_running
             sched.advance(nxt)
 
+        cfg = self.cfg
         stats = {
             "prefill_s": prefill_s,
             "prefill_tok_per_s": n_prefill / max(prefill_s, 1e-9),
@@ -162,6 +262,7 @@ class PagedServeEngine:
             "decode_tok_per_s": n_decode / max(decode_s, 1e-9),
             # actual paged footprint, not a dense-cache estimate
             "kv_cache_bytes": self.pool.nbytes,
+            "cache_bytes_by_kind": self.pool.nbytes_by_kind,
             "kv_cache_bytes_dense": kv_bytes(
                 self.slots, self.max_seq, cfg.n_layers,
                 max(cfg.n_kv_heads, 1), cfg.resolved_head_dim or 1,
@@ -175,21 +276,35 @@ class PagedServeEngine:
 
 
 class ServeEngine:
-    """Legacy lockstep dense-cache engine (request-granular slot refill)."""
+    """Compat wrapper: every decoder-only family forwards to
+    ``PagedServeEngine`` (continuous batching, quantized pages/state); the
+    lockstep dense-cache loop below is kept verbatim ONLY for
+    encoder-decoder models, request-granular refill bug and all."""
 
     def __init__(self, cfg: ModelConfig, params, rot=None, mesh=None,
                  shd=NO_SHARD, batch_slots: int = 4, max_seq: int = 256,
-                 a_bits: int = 16, kv_bits: int = 16, greedy: bool = True):
+                 a_bits: int = 16, kv_bits: int = 16,
+                 page_size: int = 16, **paged_kw):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.slots = batch_slots
         self.a_bits = a_bits
+        self.kv_bits = kv_bits
+        self._paged: Optional[PagedServeEngine] = None
+        if M.supports_paged(cfg):
+            # lossless compat at kv_bits=16: raw fp16 pages + f32 state slots
+            paged_kw.setdefault("state_bits", 32 if kv_bits >= 16 else 8)
+            self._paged = PagedServeEngine(
+                cfg, params, rot=rot, mesh=mesh, shd=shd,
+                batch_slots=batch_slots, max_seq=max_seq,
+                page_size=page_size, a_bits=a_bits, kv_bits=kv_bits,
+                **paged_kw)
+            return
         rot = dict(rot or {})
         if kv_bits < 16 and rot.get("kv_quant") is None:
             rot["kv_quant"] = make_kv_quant(kv_bits)
         self.rot = rot
-        self.kv_bits = kv_bits
 
         # act-quant is threaded through the step builders so the hook is live
         # while jit *traces* (a set/clear around jit construction is a no-op —
@@ -209,7 +324,10 @@ class ServeEngine:
 
     # ------------------------------------------------------------------ #
     def generate(self, requests: List[Request], verbose: bool = False):
-        """Serve a request list with slot-based continuous batching."""
+        """Serve a request list (paged continuous batching for decoder-only
+        families; the lockstep loop for enc-dec)."""
+        if self._paged is not None:
+            return self._paged.generate(requests, verbose=verbose)
         cfg = self.cfg
         queue = list(requests)
         active: List[Optional[Request]] = [None] * self.slots

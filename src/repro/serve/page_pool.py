@@ -1,18 +1,23 @@
-"""Paged int4 KV cache: a fixed pool of token pages + per-sequence block tables.
+"""Paged serving cache: a fixed pool of token pages + per-slot state slots.
 
-Memory is allocated in fixed-size pages of ``page_size`` tokens (vLLM-style),
-stored in the ``QuantKV`` integer format (packed int4/int8 codes + fp16
-scale/zero per (token, head)).  The device state is a flat dict of arrays with
-a leading layer dim so the model's layer scan consumes it as scan xs:
+Memory for *attention* caches is allocated in fixed-size pages of
+``page_size`` tokens (vLLM-style): packed int4/int8 GQA KV codes or MLA
+latent rows + fp16 scale/zero in the ``QuantKV`` convention (raw fp16 pages
+at ``kv_bits=16``, the compat layout).  *Recurrent* caches (SSM/conv state)
+are fixed-size per slot, int8-quantized with fp16 scales.  The device state
+is a nested dict — one sub-state per cache adapter
+(``repro.serve.cache_adapters``) — whose arrays carry a leading layer dim so
+the model's layer scan consumes them as scan xs:
 
-    kq, vq:  [L, num_pages, page_size, Hkv, packed_dim(hd, bits)]  uint8
-    ks, kz,
-    vs, vz:  [L, num_pages, page_size, Hkv]                        fp16
+    state["attn"]   GQA:  kq,vq [L,P,T,Hkv,pd]; ks,kz,vs,vz [L,P,T,Hkv]
+                    MLA:  cq [L,P,T,pd(kvlr)], rq [L,P,T,pd(r)], cs/cz/rs/rz
+    state["ssm"]    cvq [L,S+1,K-1,C], hq [L,S+1,H,P,N] + fp16 scales/zeros
 
-Physical page 0 is a reserved *null page*: inactive decode slots and
-out-of-range block-table entries point at it, so their writes can never
-clobber a live sequence.  The host-side allocator hands out pages 1..P-1 and
-keeps per-sequence block tables (logical page order -> physical page id).
+Physical page 0 and physical state slot 0 are reserved *null* targets:
+inactive decode slots and out-of-range block-table entries point at them, so
+their writes can never clobber a live sequence.  The host-side allocator
+hands out pages 1..P-1 and keeps per-sequence block tables; state slots map
+1:1 to scheduler slots (slot i -> physical i+1).
 
 ``nbytes`` is the bytes actually held on device — the serve engine reports it
 instead of a dense-cache estimate.
@@ -21,39 +26,33 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.quant.kv_cache import packed_dim, paged_kv_bytes
+from repro.serve.cache_adapters import adapters_for
 
 
 class PagePool:
     def __init__(self, cfg: ModelConfig, *, num_pages: int, page_size: int,
-                 max_seq: int, kv_bits: int = 4):
-        if cfg.attn_type != "gqa" or cfg.family not in ("dense", "moe") \
-                or cfg.is_encoder_decoder:
-            raise NotImplementedError(
-                f"paged KV cache supports dense GQA models, not {cfg.arch_id}")
+                 max_seq: int, kv_bits: int = 4, state_bits: int = 8,
+                 n_slots: int = 1):
+        self.adapters = adapters_for(cfg, kv_bits=kv_bits,
+                                     state_bits=state_bits)
         if num_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is the null page)")
         self.cfg = cfg
         self.num_pages = num_pages
         self.page_size = page_size
         self.kv_bits = kv_bits
-        self.max_pages_per_seq = -(-max_seq // page_size)
-        L, H, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
-        pd = packed_dim(hd, kv_bits)
-        codes = (L, num_pages, page_size, H, pd)
-        meta = (L, num_pages, page_size, H)
-        self.state: Dict[str, jnp.ndarray] = {
-            "kq": jnp.zeros(codes, jnp.uint8),
-            "ks": jnp.zeros(meta, jnp.float16),
-            "kz": jnp.zeros(meta, jnp.float16),
-            "vq": jnp.zeros(codes, jnp.uint8),
-            "vs": jnp.zeros(meta, jnp.float16),
-            "vz": jnp.zeros(meta, jnp.float16),
-        }
+        self.state_bits = state_bits
+        self.n_slots = n_slots
+        self.has_pages = any(a.needs_pages for a in self.adapters.values())
+        self.max_pages_per_seq = -(-max_seq // page_size) if self.has_pages \
+            else 1
+        self.state: Dict[str, dict] = {
+            name: (ad.init_state(num_pages, page_size) if ad.needs_pages
+                   else ad.init_state(n_slots))
+            for name, ad in self.adapters.items()}
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
         self._owned: Dict[int, List[int]] = {}      # seq_id -> physical pages
 
@@ -63,6 +62,10 @@ class PagePool:
         return len(self._free)
 
     def pages_for(self, n_tokens: int) -> int:
+        """Pages a sequence of ``n_tokens`` needs; 0 for pure-recurrent
+        models (their state is fixed-size per slot, not per token)."""
+        if not self.has_pages:
+            return 0
         return max(1, -(-n_tokens // self.page_size))
 
     def can_alloc(self, n_tokens: int) -> bool:
@@ -83,6 +86,9 @@ class PagePool:
         return pages
 
     def free_seq(self, seq_id: int) -> None:
+        # strict pop: a double free / unknown id is a scheduler bug that must
+        # surface here, not later as cross-request page reuse (alloc_seq
+        # records every admitted sequence, pageless families included)
         self._free.extend(self._owned.pop(seq_id))
 
     # ---------------------------------------------------------- block tables
@@ -96,11 +102,17 @@ class PagePool:
     # ---------------------------------------------------------------- bytes
     @property
     def nbytes(self) -> int:
-        return sum(int(x.size) * x.dtype.itemsize for x in self.state.values())
+        return sum(ad.nbytes(self.state[name])
+                   for name, ad in self.adapters.items())
+
+    @property
+    def nbytes_by_kind(self) -> Dict[str, int]:
+        return {name: ad.nbytes(self.state[name])
+                for name, ad in self.adapters.items()}
 
     @property
     def predicted_nbytes(self) -> int:
-        cfg = self.cfg
-        return paged_kv_bytes(self.num_pages, self.page_size, cfg.n_layers,
-                              cfg.n_kv_heads, cfg.resolved_head_dim,
-                              self.kv_bits)
+        return sum(
+            (ad.predicted_nbytes(self.num_pages, self.page_size)
+             if ad.needs_pages else ad.predicted_nbytes(self.n_slots))
+            for ad in self.adapters.values())

@@ -1,4 +1,4 @@
-"""Token-level continuous-batching scheduler over the paged KV cache.
+"""Token-level continuous-batching scheduler over the paged cache pool.
 
 Request lifecycle: WAITING -(admit: pages reserved, chunked prefill)->
 RUNNING -(max_new tokens)-> FINISHED.  Admission happens between any two
@@ -6,7 +6,14 @@ decode steps (token granularity, not request granularity): whenever a slot
 frees up and the pool has pages for ``len(prompt) + max_new`` tokens, the
 head-of-line request is admitted and prefilled *into its own pages* — a
 refilled slot can never inherit the previous occupant's stale KV, which is
-the legacy engine's refill bug fixed by construction.
+the legacy engine's refill bug fixed by construction.  Recurrent-state
+families (SSM/hybrid) reserve no pages; their fixed-size state slot is keyed
+by the scheduler slot (physical slot = slot + 1, 0 is the null slot).
+
+Sampling is per request: greedy by default (``temperature=0``, the test
+oracle), or temperature/top-k with a per-request PRNG key derived from
+``seed`` (or the sequence id) — the scheduler threads the key data and the
+per-slot sampling parameters into the engine's fixed-shape decode inputs.
 
 The scheduler is pure host logic: it owns request state and the page
 allocator, and marshals the fixed-shape [slots]-batched inputs the jitted
@@ -19,6 +26,8 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import List, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.page_pool import PagePool
@@ -28,6 +37,9 @@ from repro.serve.page_pool import PagePool
 class Request:
     prompt: np.ndarray
     max_new: int = 16
+    temperature: float = 0.0        # 0 = greedy argmax (the default oracle)
+    top_k: int = 0                  # 0 = full vocab
+    seed: Optional[int] = None      # per-request PRNG seed (None -> seq id)
     out: List[int] = field(default_factory=list)
     done: bool = False
 
@@ -40,12 +52,14 @@ class SeqState:
     slot: int
     pos: int = 0            # tokens written to the paged cache so far
     last_token: int = 0     # next decode input
+    key_data: Optional[np.ndarray] = None   # raw PRNG key data, [2] uint32
 
 
 class TokenScheduler:
-    def __init__(self, pool: PagePool, slots: int):
+    def __init__(self, pool: PagePool, slots: int, base_seed: int = 0):
         self.pool = pool
         self.slots = slots
+        self.base_seed = base_seed
         self.waiting: deque[Request] = deque()
         self.running: List[Optional[SeqState]] = [None] * slots
         self.finished: List[SeqState] = []
@@ -77,6 +91,12 @@ class TokenScheduler:
                 break                     # FCFS: no skip-ahead past the head
             self.waiting.popleft()
             seq = SeqState(req, self._next_id, slot)
+            seed = req.seed if req.seed is not None \
+                else (self.base_seed + seq.seq_id)
+            key = jax.random.PRNGKey(seed)
+            if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+                key = jax.random.key_data(key)      # typed-key impls
+            seq.key_data = np.asarray(key, np.uint32)
             self._next_id += 1
             self.pool.alloc_seq(seq.seq_id, need)
             self.running[slot] = seq
@@ -99,21 +119,32 @@ class TokenScheduler:
 
     # ------------------------------------------------------------ progress
     def record_prefill(self, seq: SeqState, first_token: int) -> None:
-        """Prompt fully in pages; ``first_token`` = argmax at the prompt tail."""
+        """Prompt fully in pages; ``first_token`` sampled at the prompt tail."""
         seq.pos = len(seq.req.prompt)
         seq.last_token = first_token
         seq.req.out.append(first_token)
         if len(seq.req.out) >= seq.req.max_new:
             self._finish(seq)
 
+    def state_slot(self, seq: SeqState) -> int:
+        """Physical state slot for a running sequence (0 is the null slot)."""
+        return seq.slot + 1
+
     def batch_inputs(self):
         """Fixed-shape [slots] decode inputs; idle slots get length 0 (fully
-        masked) and write position 0 (the pool's null page)."""
+        masked), write position 0 (the pool's null page) and state slot 0
+        (the null state slot).  Returns (tokens, tables, positions, lengths,
+        state_slots, sample_inputs) where sample_inputs = (temps, top_ks,
+        key_data) drives per-request sampling."""
         B, Pmax = self.slots, self.pool.max_pages_per_seq
         tokens = np.zeros((B, 1), np.int32)
         tables = np.zeros((B, Pmax), np.int32)
         positions = np.zeros((B,), np.int32)
         lengths = np.zeros((B,), np.int32)
+        state_slots = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        top_ks = np.zeros((B,), np.int32)
+        keys = np.zeros((B, 2), np.uint32)
         for slot, seq in enumerate(self.running):
             if seq is None:
                 continue
@@ -121,7 +152,12 @@ class TokenScheduler:
             tables[slot] = self.pool.block_table_row(seq.seq_id)
             positions[slot] = seq.pos
             lengths[slot] = seq.pos + 1
-        return tokens, tables, positions, lengths
+            state_slots[slot] = self.state_slot(seq)
+            temps[slot] = seq.req.temperature
+            top_ks[slot] = seq.req.top_k
+            keys[slot] = seq.key_data
+        return (tokens, tables, positions, lengths, state_slots,
+                (temps, top_ks, keys))
 
     def advance(self, next_tokens: np.ndarray) -> List[SeqState]:
         """Consume one decode step's sampled tokens; returns newly finished."""

@@ -95,26 +95,55 @@ def build_decode_step(cfg: ModelConfig, mesh=None, shd=NO_SHARD, rot=None,
 
 
 def build_paged_prefill_chunk(cfg: ModelConfig, mesh=None, shd=NO_SHARD,
-                              rot=None, act_quant=None, kv_bits: int = 4):
-    def prefill_chunk(params, tokens, pool, block_table, start, n_pages):
+                              rot=None, act_quant=None, kv_bits: int = 4,
+                              state_bits: int = 8):
+    def prefill_chunk(params, tokens, pool, block_table, start, carry,
+                      chunk_len, n_pages):
         # n_pages is static (jit specializes per covered-page count): only the
-        # page prefix holding [0, start+C) is gathered for chunk attention
+        # page prefix holding [0, start+C) is gathered for chunk attention.
+        # ``carry`` threads fp32 recurrent state (SSM/hybrid) across chunks;
+        # ``chunk_len`` masks chunk padding out of the recurrence.
         with qctx.act_quant(act_quant):
             return M.paged_prefill_chunk(cfg, params, tokens, pool,
-                                         block_table, start, shd=shd,
-                                         mesh=mesh, rot=rot, kv_bits=kv_bits,
+                                         block_table, start, carry=carry,
+                                         chunk_len=chunk_len,
+                                         shd=shd, mesh=mesh, rot=rot,
+                                         kv_bits=kv_bits,
+                                         state_bits=state_bits,
                                          n_pages=n_pages)
     return prefill_chunk
 
 
 def build_paged_decode_step(cfg: ModelConfig, mesh=None, shd=NO_SHARD,
-                            rot=None, act_quant=None, kv_bits: int = 4):
-    def decode_step(params, token, pool, block_tables, positions, lengths):
+                            rot=None, act_quant=None, kv_bits: int = 4,
+                            state_bits: int = 8):
+    def decode_step(params, token, pool, block_tables, positions, lengths,
+                    state_slots):
         with qctx.act_quant(act_quant):
             return M.paged_decode_step(cfg, params, token, pool, block_tables,
-                                       positions, lengths, shd=shd, mesh=mesh,
-                                       rot=rot, kv_bits=kv_bits)
+                                       positions, lengths,
+                                       state_slots=state_slots, shd=shd,
+                                       mesh=mesh, rot=rot, kv_bits=kv_bits,
+                                       state_bits=state_bits)
     return decode_step
+
+
+def build_paged_commit(cfg: ModelConfig, kv_bits: int = 4,
+                       state_bits: int = 8):
+    """Prefill->decode handoff: quantize the fp32 carry into its state slot."""
+    def commit(pool, carry, phys_slot):
+        return M.commit_prefill_state(cfg, pool, carry, phys_slot,
+                                      kv_bits=kv_bits, state_bits=state_bits)
+    return commit
+
+
+def build_paged_init_slot(cfg: ModelConfig, kv_bits: int = 4,
+                          state_bits: int = 8):
+    """Zero a physical state slot at admission (pages need no reset)."""
+    def init_slot(pool, phys_slot):
+        return M.init_pool_slot(cfg, pool, phys_slot, kv_bits=kv_bits,
+                                state_bits=state_bits)
+    return init_slot
 
 
 # --------------------------------------------------------------------------- #

@@ -88,6 +88,60 @@ def test_paged_attn_matches_dense_decode(key):
                                atol=2e-6, rtol=2e-5)
 
 
+def _latent_pool(key, P, T, kvlr, rope, bits):
+    ckv = jax.random.normal(key, (P, T, kvlr))
+    kr = jax.random.normal(jax.random.fold_in(key, 9), (P, T, rope))
+    qc, qr = quantize_kv(ckv, bits), quantize_kv(kr, bits)
+    return {"cq": qc.q, "cs": qc.scale[..., 0], "cz": qc.zero[..., 0],
+            "rq": qr.q, "rs": qr.scale[..., 0], "rz": qr.zero[..., 0]}
+
+
+@pytest.mark.parametrize("bits,kvlr,rope", [(4, 32, 8), (4, 33, 7), (8, 32, 8)])
+def test_paged_mla_kernel_matches_ref(bits, kvlr, rope, key):
+    """Pallas paged MLA attention (latent pages dequantized in VMEM, values =
+    the latent rows) vs the dense-gather oracle; lengths include partial
+    pages, full capacity and an empty (idle) slot."""
+    from repro.kernels.paged_attn.ops import paged_mla_attention
+    from repro.kernels.paged_attn.ref import paged_mla_attention_ref
+    P, T, h, B, Pmax = 9, 4, 5, 4, 5
+    pool = _latent_pool(key, P, T, kvlr, rope, bits)
+    rng = np.random.default_rng(3)
+    bt = jnp.asarray(rng.integers(1, P, (B, Pmax)), jnp.int32)
+    lengths = jnp.asarray([7, 20, 1, 0], jnp.int32)
+    ql = jax.random.normal(jax.random.fold_in(key, 1), (B, h, kvlr))
+    qr = jax.random.normal(jax.random.fold_in(key, 2), (B, h, rope))
+    scale = 1.0 / np.sqrt(24)       # the model's 1/sqrt(nope+rope) scale is
+    out = paged_mla_attention(ql, qr, pool, bt, lengths, bits=bits,
+                              scale=scale)                # not shape-derivable
+    ref = paged_mla_attention_ref(ql, qr, pool, bt, lengths, bits=bits,
+                                  scale=scale)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-6, rtol=2e-5)
+
+
+def test_paged_fp16_pages_match_quantfree_decode(key):
+    """bits=16 pages (the compat layout) attend through the dense-gather
+    path and agree with decode_attn_scores on the raw fp16 values."""
+    from repro.kernels.paged_attn.ref import gather_pages
+    from repro.models.attention import decode_attn_scores
+    P, T, H, hd, G, B, Pmax = 7, 4, 2, 16, 2, 2, 3
+    k = jax.random.normal(key, (P, T, H, hd)).astype(jnp.float16)
+    v = jax.random.normal(jax.random.fold_in(key, 7),
+                          (P, T, H, hd)).astype(jnp.float16)
+    pool = {"k": k, "v": v}
+    rng = np.random.default_rng(1)
+    bt = jnp.asarray(rng.integers(1, P, (B, Pmax)), jnp.int32)
+    lengths = jnp.asarray([5, 11], jnp.int32)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, H * G, hd))
+    out = paged_attention(q, pool, bt, lengths, bits=16)
+    kd, vd = gather_pages(pool, bt, bits=16, head_dim=hd)
+    k_pos = jnp.arange(kd.shape[1], dtype=jnp.int32)
+    dense = decode_attn_scores(q, kd, vd, k_pos, (lengths - 1)[:, None])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               atol=2e-6, rtol=2e-5)
+
+
 @pytest.mark.parametrize("shape", [(16, 64), (128, 96), (64, 512), (3, 33)])
 @pytest.mark.parametrize("bits", [4, 8])
 def test_act_quant_kernel_matches_ref(shape, bits, key):

@@ -53,9 +53,16 @@ def test_page_pool_allocator(cfg):
 
 
 def test_page_pool_rejects_unsupported():
-    mla = get_config("deepseek-v3-671b").reduced()
-    with pytest.raises(NotImplementedError):
-        PagePool(mla, num_pages=4, page_size=4, max_seq=16)
+    """Only encoder-decoder models fall outside the paged runtime now —
+    MLA latent caches and SSM state pools are first-class adapters."""
+    encdec = get_config("whisper-medium").reduced()
+    with pytest.raises(NotImplementedError, match="ServeEngine"):
+        PagePool(encdec, num_pages=4, page_size=4, max_seq=16)
+    # previously-rejected families construct adapter-backed pools
+    for arch in ("deepseek-v3-671b", "mamba2-370m", "zamba2-7b"):
+        pool = PagePool(get_config(arch).reduced(), num_pages=4, page_size=4,
+                        max_seq=16, n_slots=2)
+        assert pool.nbytes == pool.predicted_nbytes
 
 
 # --------------------------------------------------------------------------- #
@@ -229,13 +236,24 @@ def test_act_quant_threaded_through_builders(cfg, params):
 def test_engine_construction_leaves_no_global_hook(cfg, params):
     from repro.serve import ServeEngine
     eng = ServeEngine(cfg, params, batch_slots=1, max_seq=16, a_bits=8,
-                      kv_bits=4)
+                      kv_bits=4, page_size=8)
     assert get_act_quant() is None
-    # the threaded hook is actually applied at trace time (the old global
+    # the wrapper forwards decoder-only families to the paged engine, and the
+    # threaded hook is actually applied at trace time (the old global
     # set/clear around jit construction never fired — tracing is lazy)
-    toks = jnp.asarray(np.arange(4)[None] % cfg.vocab_size, jnp.int32)
-    with_aq = eng._prefill(params, toks)[0]
+    assert eng._paged is not None
     eng16 = ServeEngine(cfg, params, batch_slots=1, max_seq=16, a_bits=16,
-                        kv_bits=4)
-    without = eng16._prefill(params, toks)[0]
-    assert float(jnp.max(jnp.abs(with_aq - without))) > 1e-4
+                        kv_bits=4, page_size=8)
+
+    def tail_logits(e):
+        pool = e._paged.pool
+        toks = jnp.asarray(np.arange(8)[None] % cfg.vocab_size, jnp.int32)
+        table = jnp.asarray(pool.block_table_row(0)[None])  # null pages only
+        from repro.models import model as M
+        carry = M.init_prefill_carry(cfg, kv_bits=4)
+        logits, _, _ = e._paged._prefill(params, toks, pool.state, table,
+                                         jnp.int32(0), carry, jnp.int32(8), 1)
+        return logits
+    diff = jnp.max(jnp.abs(tail_logits(eng) - tail_logits(eng16)))
+    assert float(diff) > 1e-4
+    assert get_act_quant() is None              # nothing leaked globally
