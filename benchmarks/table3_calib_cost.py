@@ -15,7 +15,17 @@ Three measurements:
   * batched-vs-serial rotation agreement, verified in float64 where
     float-noise amplification over the trajectory does not mask algorithmic
     equality (in float32 both paths are the same algorithm, but chaotic loss
-    landscapes amplify 1e-7 lowering differences over tens of steps).
+    landscapes amplify 1e-7 lowering differences over tens of steps),
+  * sharded-vs-single-device: the token-sharded engine (mesh over every
+    local device on the 'data' axis; latents replicated, loss/grad psum'd
+    per step) on the same R2 workload — cold/warm wall-clock plus rotation
+    max-diff against the single-device engine.  On a 1-device box this
+    measures pure shard_map overhead; with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` it is a PARITY
+    row, not a perf row (8 virtual devices oversubscribe the host cores and
+    every shard redundantly runs the replicated QR) — the perf reading needs
+    real accelerators, where the matmul term (the one that scales with
+    calibration-set size N) is what shards.
 """
 from __future__ import annotations
 
@@ -80,6 +90,37 @@ def _compare(L, N, n, tag) -> list:
     return rows
 
 
+def _engine_sharded(xs, z0s, mesh):
+    res = calibrate_rotations_batched(xs, z0s, whip, steps=STEPS, lr=LR,
+                                      mesh=mesh)
+    jax.block_until_ready(res.rotation)
+    return res
+
+
+def _compare_sharded(L, N, n, tag) -> list:
+    """Token-sharded engine vs single-device on the same workload."""
+    from repro.launch.mesh import make_calib_mesh
+    mesh = make_calib_mesh()
+    ndev = len(jax.devices())
+    xs, z0s = _workload(L, N, n)
+    single = _engine(xs, z0s)
+
+    t0 = time.time()
+    _engine_sharded(xs, z0s, mesh)
+    t_cold = time.time() - t0
+    t0 = time.time()
+    res = _engine_sharded(xs, z0s, mesh)
+    t_warm = time.time() - t0
+
+    d = float(jnp.max(jnp.abs(res.rotation - single.rotation)))
+    return [
+        (f"table3,sharded_devices,{tag}", ndev, "devices"),
+        (f"table3,engine_sharded_cold,{tag}", t_cold, "s"),
+        (f"table3,engine_sharded_warm,{tag}", t_warm, "s"),
+        (f"table3,sharded_vs_single_maxdiff,{tag}", d, "abs"),
+    ]
+
+
 def _equivalence(L=4, N=512, n=64) -> list:
     """Batched == serial (same engine), checked in f64 (see module doc)."""
     from jax.experimental import enable_x64
@@ -115,10 +156,12 @@ def run(smoke: bool = False) -> list:
 
     if smoke:
         rows += _compare(2, 256, 64, "smoke")
+        rows += _compare_sharded(2, 256, 64, "smoke")
         return rows
 
     # multi-site R2 workloads: acceptance shape + realistic head-dim shape
     rows += _compare(8, 2048, 256, "L8xN2048xn256")
     rows += _compare(8, 2048, 64, "L8xN2048xn64")
+    rows += _compare_sharded(8, 2048, 256, "L8xN2048xn256")
     rows += _equivalence()
     return rows

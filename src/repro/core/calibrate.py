@@ -36,19 +36,23 @@ def calibrate_rotation(x: jax.Array, n: int, key, objective: str = "whip",
                        steps: int = 100, lr: float = 5e-2,
                        callback: Optional[Callable] = None,
                        orth: str = "cholqr",
-                       return_history: bool = False):
+                       return_history: bool = False, mesh=None,
+                       compressed_grads: bool = False):
     """Optimize one rotation on captured activations x [N, n].
 
     Returns the rotation, or ``(rotation, loss_history)`` when
     ``return_history`` — the history never leaves the device until read.
+    ``mesh`` runs the token-sharded engine (see ``repro.core.qr_orth``).
     """
     obj = objectives.OBJECTIVES[objective]
     z0 = random_hadamard(n, key)           # paper App. K: Hadamard init
     if method == "cayley":
-        res = calibrate_scan(x, z0, obj, method="cayley", steps=steps, lr=lr)
+        res = calibrate_scan(x, z0, obj, method="cayley", steps=steps, lr=lr,
+                             mesh=mesh, compressed_grads=compressed_grads)
     else:
         res = calibrate_scan(x, z0, obj, method="qr", optimizer=optimizer,
-                             steps=steps, lr=lr, orth=orth)
+                             steps=steps, lr=lr, orth=orth, mesh=mesh,
+                             compressed_grads=compressed_grads)
     if callback is not None:
         qr_orth._replay(callback, res, res.rotation)
     if return_history:
@@ -60,20 +64,22 @@ def calibrate_rotations(xs: jax.Array, n: int, key,
                         objective: str = "whip", method: str = "qr",
                         optimizer: str = "sgd", steps: int = 100,
                         lr: float = 5e-2, orth: str = "cholqr",
-                        return_history: bool = False):
+                        return_history: bool = False, mesh=None,
+                        compressed_grads: bool = False):
     """Optimize all L sites of xs [L, N, n] in one compiled vmapped scan.
 
     Per-site inits use ``jax.random.split(key, L)`` — identical to the serial
     path in ``calibrate_model(r2_batched=False)``, so the two are
     interchangeable.  Returns [L, n, n] rotations (plus [L, steps] histories
-    when ``return_history``).
+    when ``return_history``).  ``mesh`` shards the token axis over the mesh's
+    data group (``repro.core.qr_orth`` mesh contract).
     """
     obj = objectives.OBJECTIVES[objective]
     layer_keys = jax.random.split(key, xs.shape[0])
     z0s = jnp.stack([random_hadamard(n, k) for k in layer_keys])
     res = qr_orth.calibrate_rotations_batched(
         xs, z0s, obj, method=method, optimizer=optimizer, steps=steps, lr=lr,
-        orth=orth)
+        orth=orth, mesh=mesh, compressed_grads=compressed_grads)
     if return_history:
         return res.rotation, res.loss_history
     return res.rotation
@@ -90,19 +96,26 @@ def calibrate_model(cfg: ModelConfig, params: dict, tokens: jax.Array,
                     lr_r2: float = 1e-3, sample_frac: float = 0.1,
                     use_r2: bool = True, r2_batched: bool = True,
                     verbose: bool = False,
-                    history_out: Optional[dict] = None) -> Dict:
+                    history_out: Optional[dict] = None, mesh=None,
+                    compressed_grads: bool = False) -> Dict:
     """Full DartQuant calibration: returns a rotation pack for fuse_rotations.
 
     All per-layer R2 sites are optimized in one compiled call (vmapped scan)
     unless ``r2_batched=False``; pass a dict as ``history_out`` to receive
-    per-site loss histories keyed by site name.
+    per-site loss histories keyed by site name.  With ``mesh=``, captured
+    activations stay token-sharded over the mesh's data axes and every site
+    runs on the token-sharded engine (``repro.core.qr_orth`` mesh contract).
     """
     if key is None:
         key = jax.random.PRNGKey(0)
+    # independent streams: token sampling must not correlate with the
+    # rotation inits (R1's Hadamard init used to share the raw key with
+    # capture's sampler)
+    k_cap, k_rot = jax.random.split(key)
     t0 = time.time()
     acts = capture_activations(cfg, params, tokens, frames=frames,
-                               sample_frac=sample_frac, key=key)
-    ks = iter(jax.random.split(key, 64))
+                               sample_frac=sample_frac, key=k_cap, mesh=mesh)
+    ks = iter(jax.random.split(k_rot, 64))
     pack: Dict = {}
 
     def record(name, history):
@@ -113,13 +126,14 @@ def calibrate_model(cfg: ModelConfig, params: dict, tokens: jax.Array,
         pack["r1"], h = calibrate_rotation(
             acts["r1"], cfg.d_model, next(ks), objective=objective,
             method=method, optimizer=optimizer, steps=steps, lr=lr_r1,
-            return_history=True)
+            return_history=True, mesh=mesh, compressed_grads=compressed_grads)
         record("r1", h)
         if "r1_enc" in acts:
             pack["r1_enc"], h = calibrate_rotation(
                 acts["r1_enc"], cfg.d_model, next(ks), objective=objective,
                 method=method, optimizer=optimizer, steps=steps, lr=lr_r1,
-                return_history=True)
+                return_history=True, mesh=mesh,
+                compressed_grads=compressed_grads)
             record("r1_enc", h)
     if use_r2 and "r2" in acts:
         hd = _r2_dim(cfg)
@@ -129,7 +143,8 @@ def calibrate_model(cfg: ModelConfig, params: dict, tokens: jax.Array,
             pack["r2_shared"], h = calibrate_rotation(
                 pooled, hd, next(ks), objective=objective, method=method,
                 optimizer=optimizer, steps=steps, lr=lr_r2,
-                return_history=True)
+                return_history=True, mesh=mesh,
+                compressed_grads=compressed_grads)
             record("r2_shared", h)
         else:
             k_r2 = next(ks)
@@ -137,7 +152,8 @@ def calibrate_model(cfg: ModelConfig, params: dict, tokens: jax.Array,
                 pack["r2"], h = calibrate_rotations(
                     acts["r2"], hd, k_r2, objective=objective, method=method,
                     optimizer=optimizer, steps=steps, lr=lr_r2,
-                    return_history=True)
+                    return_history=True, mesh=mesh,
+                    compressed_grads=compressed_grads)
                 record("r2", h)
             else:
                 layer_keys = jax.random.split(k_r2, acts["r2"].shape[0])
@@ -146,7 +162,8 @@ def calibrate_model(cfg: ModelConfig, params: dict, tokens: jax.Array,
                     r, h = calibrate_rotation(
                         acts["r2"][i], hd, layer_keys[i], objective=objective,
                         method=method, optimizer=optimizer, steps=steps,
-                        lr=lr_r2, return_history=True)
+                        lr=lr_r2, return_history=True, mesh=mesh,
+                        compressed_grads=compressed_grads)
                     r2_list.append(r)
                     h_list.append(h)
                 pack["r2"] = jnp.stack(r2_list, axis=0)

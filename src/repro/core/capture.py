@@ -58,8 +58,14 @@ def _v_out(cfg: ModelConfig, attn_p: dict, h: jax.Array) -> jax.Array:
 def capture_activations(cfg: ModelConfig, params: dict, tokens: jax.Array,
                         frames: Optional[jax.Array] = None,
                         sample_frac: float = 0.1,
-                        key=None) -> Dict[str, jax.Array]:
-    """Returns {'r1': [N,D], 'r2': [L,Nv,hd] (if attn), 'r1_enc': [N,D] (enc-dec)}."""
+                        key=None, mesh=None) -> Dict[str, jax.Array]:
+    """Returns {'r1': [N,D], 'r2': [L,Nv,hd] (if attn), 'r1_enc': [N,D] (enc-dec)}.
+
+    With ``mesh=``, the pooled activations are returned token-sharded over the
+    mesh's data axes (``repro.dist.place_calib_acts``) instead of concentrated
+    on one device, so the calibration engine consumes them in place — each
+    pool is trimmed to the shard multiple (at most shards-1 sampled tokens
+    dropped)."""
     if key is None:
         key = jax.random.PRNGKey(0)
     B, S = tokens.shape
@@ -150,4 +156,7 @@ def capture_activations(cfg: ModelConfig, params: dict, tokens: jax.Array,
         out["r2"] = jnp.stack(r2_pool, axis=0)
     if r1e_pool:
         out["r1_enc"] = jnp.concatenate(r1e_pool, axis=0)
+    if mesh is not None:
+        from repro.dist.sharding import place_calib_acts
+        out = place_calib_acts(out, mesh)
     return out

@@ -36,6 +36,32 @@ Orthogonalization backends (``orth=``):
   "qr"      LAPACK QR + autodiff — bit-compatible with the legacy host loop's
             math; used by the compatibility shims and equivalence tests.
 
+Token-sharded calibration (mesh contract)
+-----------------------------------------
+Pass ``mesh=`` to either entry point and the scan runs under ``shard_map``
+over the mesh's data group — every axis except 'model' (so the production
+mesh's 'pod' axis composes in, exactly like ``repro.dist.Sharding``):
+
+  * activations shard their TOKEN axis N over the data group
+    (``repro.dist.calib_specs``: ``x`` -> P(data, None), ``xs`` ->
+    P(None, data, None)); calibration-set size scales with the mesh instead
+    of one device's memory,
+  * rotation latents, optimizer state, and ``lr`` REPLICATE (P()) — every
+    shard steps the identical latent,
+  * each step, the objective value and its latent gradient are psum'd over
+    the data group (one collective per step; ``compressed_grads=True`` swaps
+    the gradient psum for the int8+error-feedback reduction in
+    ``repro.dist.collectives.psum_compressed``),
+  * uneven N is padded to the shard multiple and masked out of the loss, so
+    results are identical to the single-device path up to f32 reduction
+    order; the ``CalibResult`` contract (rotation, loss history, aux
+    metrics) is unchanged.
+
+The sharded objective/metric contract: the objective must be a mean of
+independent per-token scores (true of every entry in
+``repro.core.whip.OBJECTIVES``) — per-shard partial means are combined with
+a single psum.
+
 The legacy host loops are preserved verbatim as ``calibrate_qr_legacy`` /
 ``calibrate_cayley_legacy`` for benchmarks (cost baseline) and equivalence
 tests; ``calibrate_qr`` / ``calibrate_cayley`` keep their old signatures but
@@ -51,6 +77,11 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import jax.scipy.linalg as jsl
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.collectives import psum_compressed
+from repro.dist.sharding import calib_data_axes, calib_group_size, calib_specs
 
 
 # --------------------------------------------------------------------------- #
@@ -155,6 +186,14 @@ def _opt_init(method: str, optimizer: str, z0: jax.Array):
     return jnp.zeros_like(z0)       # SGD / Cayley momentum buffer
 
 
+def _make_update(method, optimizer, lr):
+    if method == "cayley":
+        return lambda p, state, g: cayley_sgd_step(p, state, g, lr)
+    if optimizer == "adam":
+        return lambda p, state, g: adam_update(p, state, g, lr)
+    return lambda p, state, g: sgd_update(p, state, g, lr)
+
+
 def _scan_core(x, z0, lr, objective, method, optimizer, steps, orth, metrics):
     """One site: full optimization inside a single lax.scan."""
     orth_fn = (lambda r: r) if method == "cayley" else ORTH_FNS[orth]
@@ -163,15 +202,7 @@ def _scan_core(x, z0, lr, objective, method, optimizer, steps, orth, metrics):
         o = x @ orth_fn(p).astype(x.dtype)
         return objective(o), o
 
-    if method == "cayley":
-        def update(p, state, g):
-            return cayley_sgd_step(p, state, g, lr)
-    elif optimizer == "adam":
-        def update(p, state, g):
-            return adam_update(p, state, g, lr)
-    else:
-        def update(p, state, g):
-            return sgd_update(p, state, g, lr)
+    update = _make_update(method, optimizer, lr)
 
     def step(carry, _):
         p, state = carry
@@ -202,6 +233,118 @@ def _scan_batched(xs, z0s, lr, objective, method, optimizer, steps, orth,
     return jax.vmap(lambda x, z: f(x, z))(xs, z0s)
 
 
+# --------------------------------------------------------------------------- #
+# Token-sharded engine (see module docstring: "Token-sharded calibration")
+# --------------------------------------------------------------------------- #
+def _per_token(fn, o):
+    """Per-row scores of a mean-of-per-token-scores objective/metric."""
+    return jax.vmap(lambda row: fn(row[None, :]))(o)
+
+
+def _scan_core_sharded(x, w, z0, lr, objective, method, optimizer, steps,
+                       orth, metrics, axes, n_valid, compressed):
+    """Per-shard scan body: ``x`` [N_local, n] local tokens, ``w`` [N_local]
+    validity weights (0 on padding rows), ``z0``/``lr`` replicated.
+
+    Each step computes the LOCAL partial loss sum(scores * w) / n_valid, then
+    psums loss, metrics, and the latent gradient over ``axes`` — every shard
+    applies the identical update, so latents stay replicated by construction.
+    """
+    orth_fn = (lambda r: r) if method == "cayley" else ORTH_FNS[orth]
+
+    def fwd(p):
+        o = x @ orth_fn(p).astype(x.dtype)
+        local = jnp.sum(_per_token(objective, o) * w) / n_valid
+        return local, o
+
+    update = _make_update(method, optimizer, lr)
+
+    def step(carry, _):
+        if compressed:
+            p, state, err = carry
+        else:
+            p, state = carry
+        (local, o), g = jax.value_and_grad(fwd, has_aux=True)(p)
+        outs = {"loss": jax.lax.psum(local, axes)}
+        for name, fn in metrics:
+            outs[name] = jax.lax.psum(
+                jnp.sum(_per_token(fn, o) * w) / n_valid, axes)
+        if compressed:
+            g, err = psum_compressed(g, err, axes)
+            g = g.astype(p.dtype)
+        else:
+            g = jax.lax.psum(g, axes)
+        p, state = update(p, state, g)
+        return ((p, state, err) if compressed else (p, state)), outs
+
+    carry0 = (z0, _opt_init(method, optimizer, z0))
+    if compressed:
+        carry0 = carry0 + (jnp.zeros_like(z0, jnp.float32),)
+    final, hist = jax.lax.scan(step, carry0, None, length=steps)
+    loss_history = hist.pop("loss")
+    return CalibResult(orth_fn(final[0]), loss_history, hist)
+
+
+@partial(jax.jit, static_argnums=tuple(range(4, 14)))
+def _scan_one_sharded(x, w, z0, lr, objective, method, optimizer, steps,
+                      orth, metrics, mesh, axes, n_valid, compressed):
+    s = calib_specs(mesh, axes)
+
+    def body(x_l, w_l, z_l, lr_l):
+        return _scan_core_sharded(x_l, w_l, z_l, lr_l, objective, method,
+                                  optimizer, steps, orth, metrics, axes,
+                                  n_valid, compressed)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(s["x"], s["mask"], s["latent"], P()),
+                     out_specs=P(), check_rep=False)(x, w, z0, lr)
+
+
+@partial(jax.jit, static_argnums=tuple(range(4, 14)))
+def _scan_batched_sharded(xs, w, z0s, lr, objective, method, optimizer,
+                          steps, orth, metrics, mesh, axes, n_valid,
+                          compressed):
+    s = calib_specs(mesh, axes)
+
+    def body(xs_l, w_l, z0s_l, lr_l):
+        f = lambda x_l, z_l: _scan_core_sharded(
+            x_l, w_l, z_l, lr_l, objective, method, optimizer, steps, orth,
+            metrics, axes, n_valid, compressed)
+        return jax.vmap(f)(xs_l, z0s_l)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(s["xs"], s["mask"], s["latent"], P()),
+                     out_specs=P(), check_rep=False)(xs, w, z0s, lr)
+
+
+def _pad_tokens(x, k: int, axis: int):
+    """Pad the token axis to a multiple of ``k``; returns (x, weights, N)."""
+    n = x.shape[axis]
+    if n == 0:
+        raise ValueError("sharded calibration needs at least one token "
+                         f"(got shape {x.shape})")
+    pad = -n % k
+    w = jnp.ones((n,), x.dtype)
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+        w = jnp.pad(w, ((0, pad),))
+    return x, w, n
+
+
+def _place_sharded(mesh, axes, x, w, z0, lr):
+    """device_put engine inputs per the calib_specs rules (no-op reshards for
+    activations that arrive pre-distributed from ``capture_activations``)."""
+    specs = calib_specs(mesh, axes)
+    ns = lambda s: NamedSharding(mesh, s)
+    x = jax.device_put(x, ns(specs["xs" if x.ndim == 3 else "x"]))
+    w = jax.device_put(w, ns(specs["mask"]))
+    z0 = jax.device_put(z0, ns(specs["latent"]))
+    lr = jax.device_put(lr, ns(P()))
+    return x, w, z0, lr
+
+
 def _norm_metrics(metrics) -> Tuple:
     if not metrics:
         return ()
@@ -213,34 +356,65 @@ def _norm_metrics(metrics) -> Tuple:
 def calibrate_scan(x: jax.Array, z0: jax.Array, objective: Callable, *,
                    method: str = "qr", optimizer: str = "sgd",
                    steps: int = 100, lr: float = 2e-3, orth: str = "cholqr",
-                   metrics=()) -> CalibResult:
+                   metrics=(), mesh=None, data_axes=None,
+                   compressed_grads: bool = False) -> CalibResult:
     """Fully-jitted calibration of one rotation site.
 
     x [N, n] activations, z0 [n, n] latent init (rotation init for Cayley).
     Compiles once per (shapes, objective, method, optimizer, steps, orth,
     metrics) — ``lr`` is traced, so sweeping it does not retrigger
     compilation.  See the module docstring for the loss-history contract.
+
+    ``lr`` and all latent/optimizer math live in ``z0``'s dtype (f32 even for
+    bf16/fp16 activations); the rotation is cast to ``x.dtype`` only at the
+    ``x @ R`` product.
+
+    With ``mesh=``, the token axis shards over the mesh's data group
+    (``data_axes`` overrides which axes; default = every non-'model' axis)
+    and loss/gradient psum per step — see "Token-sharded calibration" in the
+    module docstring.  ``compressed_grads`` routes the gradient psum through
+    the int8 error-feedback collective.
     """
-    return _scan_one(x, z0, jnp.asarray(lr, x.dtype), objective, method,
-                     optimizer, steps, orth, _norm_metrics(metrics))
+    lr_a = jnp.asarray(lr, z0.dtype)
+    if mesh is None:
+        return _scan_one(x, z0, lr_a, objective, method, optimizer, steps,
+                         orth, _norm_metrics(metrics))
+    axes = tuple(data_axes) if data_axes else calib_data_axes(mesh)
+    x, w, n_valid = _pad_tokens(x, calib_group_size(mesh, axes), axis=0)
+    x, w, z0, lr_a = _place_sharded(mesh, axes, x, w, z0, lr_a)
+    return _scan_one_sharded(x, w, z0, lr_a, objective, method, optimizer,
+                             steps, orth, _norm_metrics(metrics), mesh, axes,
+                             n_valid, bool(compressed_grads))
 
 
 def calibrate_rotations_batched(xs: jax.Array, z0s: jax.Array,
                                 objective: Callable, *, method: str = "qr",
                                 optimizer: str = "sgd", steps: int = 100,
                                 lr: float = 2e-3, orth: str = "cholqr",
-                                metrics=()) -> CalibResult:
+                                metrics=(), mesh=None, data_axes=None,
+                                compressed_grads: bool = False) -> CalibResult:
     """Optimize all L sites of xs [L, N, n] in ONE compiled vmapped scan.
 
     Replaces ``calibrate_model``'s serial per-layer R2 loop: one jit entry,
     one compilation, batched matmuls across sites.  Results carry a leading
     L axis; per-site trajectories are independent (no cross-site coupling).
+
+    With ``mesh=``, the token axis (axis 1) shards over the mesh's data group
+    and the L site axis replicates — same contract as ``calibrate_scan``.
     """
     assert xs.ndim == 3 and z0s.ndim == 3 and xs.shape[0] == z0s.shape[0], \
         (xs.shape, z0s.shape)
-    return _scan_batched(xs, z0s, jnp.asarray(lr, xs.dtype), objective,
-                         method, optimizer, steps, orth,
-                         _norm_metrics(metrics))
+    lr_a = jnp.asarray(lr, z0s.dtype)
+    if mesh is None:
+        return _scan_batched(xs, z0s, lr_a, objective, method, optimizer,
+                             steps, orth, _norm_metrics(metrics))
+    axes = tuple(data_axes) if data_axes else calib_data_axes(mesh)
+    xs, w, n_valid = _pad_tokens(xs, calib_group_size(mesh, axes), axis=1)
+    xs, w, z0s, lr_a = _place_sharded(mesh, axes, xs, w, z0s, lr_a)
+    return _scan_batched_sharded(xs, w, z0s, lr_a, objective, method,
+                                 optimizer, steps, orth,
+                                 _norm_metrics(metrics), mesh, axes, n_valid,
+                                 bool(compressed_grads))
 
 
 # --------------------------------------------------------------------------- #

@@ -4,5 +4,6 @@ Single-host safe: importing this package never touches jax device state; the
 ``Sharding`` helper only binds to a mesh the caller constructed.
 """
 from repro.dist.collectives import (all_reduce_compressed_tree, compress_grad,
-                                    init_error_feedback)
-from repro.dist.sharding import Sharding
+                                    init_error_feedback, psum_compressed)
+from repro.dist.sharding import (Sharding, calib_data_axes, calib_group_size,
+                                 calib_specs, place_calib_acts)

@@ -10,6 +10,19 @@ quantizes locally, the int8 payloads are all-reduced (summed in f32 after
 dequant — a real deployment would sum int32 payloads; the math is identical
 for the mean), and the result is averaged over the data axis.  ~4x smaller
 reduction payload than f32 gradients.
+
+Two modes:
+  * replicated (default, legacy): every shard holds the SAME full gradient;
+    the psum averages n identical compressed copies — a broadcast-consistency
+    primitive, not a real reduction.
+  * sharded (``sharded=True``): leaves carry a leading per-shard axis of size
+    ``mesh.shape[axis]`` sharded over ``axis`` — each shard's slice is its OWN
+    local gradient.  Quantization and error feedback stay per-shard (the error
+    buffer never crosses devices), only the int8 payload is reduced.
+
+``psum_compressed`` is the in-``shard_map`` primitive both modes build on; the
+token-sharded calibration engine (``repro.core.qr_orth``) calls it directly
+for its per-step whip-gradient psum when ``compressed_grads=True``.
 """
 from __future__ import annotations
 
@@ -37,16 +50,36 @@ def init_error_feedback(grads):
     return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
 
 
-def all_reduce_compressed_tree(grads, errs, mesh, axis: str = "data"):
+def psum_compressed(g: jax.Array, err: jax.Array, axis):
+    """SUM-reduce a local gradient over ``axis`` with an int8 payload.
+
+    Must be called inside a ``shard_map`` body: ``g`` is this shard's local
+    gradient, ``err`` its local error-feedback buffer.  Returns
+    ``(g_reduced, new_err)`` — the reduced gradient is replicated, the new
+    error buffer stays local (it is this shard's quantization residual).
+    """
+    q, scale, new_err = compress_grad(g, err)
+    return jax.lax.psum(q.astype(jnp.float32) * scale, axis), new_err
+
+
+def all_reduce_compressed_tree(grads, errs, mesh, axis: str = "data", *,
+                               sharded: bool = False):
     """Mean-all-reduce a gradient pytree over ``axis`` with int8 payloads.
 
-    Returns ``(reduced_grads, new_errs)``.  Inputs are taken replicated over
-    the mesh (each shard holds its local gradient tensor); the quantization
-    happens per shard, the reduction on the compressed representation.
+    Returns ``(reduced_grads, new_errs)``.
+
+    ``sharded=False`` (legacy): inputs are replicated over the mesh; the psum
+    averages ``n`` identical compressed copies.
+
+    ``sharded=True``: every leaf carries a leading per-shard axis of size
+    ``mesh.shape[axis]``, sharded over ``axis`` (shard i's slice is its local
+    gradient).  Reduced gradients come back replicated (leading axis dropped);
+    error buffers keep the leading axis and stay sharded — feed them back on
+    the next call so per-shard quantization error cancels over time.
     """
     n = int(mesh.shape[axis])
 
-    def reduce_one(g, e):
+    def reduce_replicated(g, e):
         q, scale, new_e = compress_grad(g, e)
 
         def red(qv, sv):
@@ -56,6 +89,22 @@ def all_reduce_compressed_tree(grads, errs, mesh, axis: str = "data"):
                         out_specs=P(), check_rep=False)(q, scale)
         return out, new_e
 
+    def reduce_sharded(g, e):
+        assert g.shape[0] == n, (g.shape, n)
+
+        def red(gl, el):
+            out, new_e = psum_compressed(gl[0], el[0], axis)
+            return out / n, new_e[None]
+
+        nd = g.ndim - 1
+        return shard_map(red, mesh=mesh,
+                         in_specs=(P(axis, *([None] * nd)),
+                                   P(axis, *([None] * nd))),
+                         out_specs=(P(*([None] * nd)),
+                                    P(axis, *([None] * nd))),
+                         check_rep=False)(g, e)
+
+    reduce_one = reduce_sharded if sharded else reduce_replicated
     flat, tree = jax.tree.flatten(grads)
     flat_e = jax.tree.leaves(errs)
     outs, new_errs = [], []

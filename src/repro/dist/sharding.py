@@ -16,15 +16,86 @@ cover every architecture in ``repro.configs`` without per-model tables:
 Any mesh with a 'model' axis and one or more data-like axes works; the 'pod'
 axis of the multi-pod production mesh composes into the data group
 automatically.
+
+Calibration sharding (``calib_specs`` / ``place_calib_acts``) follows the same
+convention without needing a ``ModelConfig``: captured activations shard their
+token axis over the data group ('pod' x 'data'), rotation latents and
+optimizer state replicate.  These are the rules the token-sharded calibration
+engine (``repro.core.qr_orth``) places its inputs with.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+
+
+# --------------------------------------------------------------------------- #
+# Calibration specs: token axis over the data group, latents replicated
+# --------------------------------------------------------------------------- #
+def calib_data_axes(mesh) -> Tuple[str, ...]:
+    """The data group of a mesh: every axis except 'model' (pod composes in)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def calib_group_size(mesh, data_axes: Optional[Tuple[str, ...]] = None) -> int:
+    """Number of token shards = product of the data-group axis sizes."""
+    axes = tuple(data_axes) if data_axes else calib_data_axes(mesh)
+    k = 1
+    for a in axes:
+        k *= int(mesh.shape[a])
+    return k
+
+
+def calib_specs(mesh, data_axes: Optional[Tuple[str, ...]] = None
+                ) -> Dict[str, P]:
+    """PartitionSpec rules for the token-sharded calibration engine.
+
+      x      [N, n]     single-site activations, tokens over the data group
+      xs     [L, N, n]  batched sites: sites replicated, tokens sharded
+      mask   [N]        token-validity weights (padding rows are 0)
+      latent [n, n]     rotation latent / optimizer state — replicated
+    """
+    axes = tuple(data_axes) if data_axes else calib_data_axes(mesh)
+    d = axes[0] if len(axes) == 1 else axes
+    return {
+        "x": P(d, None),
+        "xs": P(None, d, None),
+        "mask": P(d),
+        "latent": P(),
+    }
+
+
+def place_calib_acts(acts: Dict[str, jax.Array], mesh,
+                     data_axes: Optional[Tuple[str, ...]] = None
+                     ) -> Dict[str, jax.Array]:
+    """device_put captured activation pools token-sharded over the data group.
+
+    2-D pools ([N, n]) shard axis 0, 3-D pools ([L, N, n]) shard axis 1.
+    ``NamedSharding`` needs the token axis divisible by the group size, so
+    pools are TRIMMED (never padded — padding would look like real tokens to
+    consumers) to the nearest multiple: at most ``group - 1`` randomly-sampled
+    tokens are dropped per pool, harmless at calibration-set scale.
+    """
+    k = calib_group_size(mesh, data_axes)
+    specs = calib_specs(mesh, data_axes)
+
+    def put(name, v):
+        axis = 1 if v.ndim == 3 else 0
+        if v.shape[axis] < k:
+            raise ValueError(
+                f"calibration pool {name!r} has {v.shape[axis]} tokens, "
+                f"fewer than the {k} shards of the data group — shrink the "
+                f"mesh or capture more tokens")
+        n = v.shape[axis] - v.shape[axis] % k
+        v = jax.lax.slice_in_dim(v, 0, n, axis=axis)
+        s = specs["xs"] if v.ndim == 3 else specs["x"]
+        return jax.device_put(v, NamedSharding(mesh, s))
+
+    return {name: put(name, v) for name, v in acts.items()}
 
 
 class Sharding:

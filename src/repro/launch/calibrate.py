@@ -47,8 +47,27 @@ def main(argv=None):
     ap.add_argument("--a-bits", type=int, default=4)
     ap.add_argument("--serial-r2", action="store_true",
                     help="legacy serial per-layer R2 loop (debug/compare)")
+    ap.add_argument("--mesh", default=None, metavar="N|auto",
+                    help="token-sharded calibration on a data mesh: 'auto' "
+                         "puts every local device on the 'data' axis, an "
+                         "integer N builds an (N, 1) ('data','model') mesh. "
+                         "Mesh contract: captured activations shard their "
+                         "token axis over the data axes ('pod' x 'data' on "
+                         "the production mesh); rotation latents and "
+                         "optimizer state replicate; the whip loss and its "
+                         "gradient are psum'd once per step. Eval/serving "
+                         "stays single-device.")
+    ap.add_argument("--compressed-grads", action="store_true",
+                    help="int8+error-feedback payload for the sharded "
+                         "gradient psum (needs --mesh)")
     ap.add_argument("--ckpt", default=None, help="params checkpoint to load")
     args = ap.parse_args(argv)
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_calib_mesh
+        mesh = make_calib_mesh(None if args.mesh == "auto" else int(args.mesh))
+        print(f"calibrating token-sharded on mesh {dict(mesh.shape)}")
 
     cfg = get_config(args.arch).reduced()
     key = jax.random.PRNGKey(0)
@@ -73,7 +92,8 @@ def main(argv=None):
                            objective=args.objective, method=args.method,
                            optimizer=args.optimizer, steps=args.steps,
                            r2_batched=not args.serial_r2,
-                           history_out=histories, verbose=True)
+                           history_out=histories, verbose=True, mesh=mesh,
+                           compressed_grads=args.compressed_grads)
     for site, h in histories.items():
         h = jnp.asarray(h)
         first, last = h[..., 0], h[..., -1]

@@ -20,3 +20,13 @@ def make_host_mesh():
     """All available devices as a 1D data mesh (tests / tiny runs)."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_calib_mesh(data: int | None = None):
+    """Mesh for token-sharded calibration: ``data`` devices on the 'data'
+    axis (default: every local device = the host mesh), trivial 'model'
+    axis.  Calibration only shards tokens, so the production mesh works too
+    — the engine uses its data group ('pod' x 'data') and ignores 'model'."""
+    if data is None:
+        return make_host_mesh()
+    return jax.make_mesh((data, 1), ("data", "model"))

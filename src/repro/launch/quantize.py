@@ -38,9 +38,18 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rotation", choices=["dart", "hadamard"], default="dart",
                     help="dart = calibrated QR-Orth; hadamard = QuaRot baseline")
+    ap.add_argument("--mesh", default=None, metavar="N|auto",
+                    help="token-sharded calibration over a data mesh "
+                         "('auto' = all local devices); tokens shard, "
+                         "latents replicate — see repro.launch.calibrate")
     ap.add_argument("--full", action="store_true",
                     help="use the full config instead of the reduced smoke one")
     args = ap.parse_args(argv)
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_calib_mesh
+        mesh = make_calib_mesh(None if args.mesh == "auto" else int(args.mesh))
 
     cfg = get_config(args.arch)
     if not args.full:
@@ -55,7 +64,8 @@ def main(argv=None):
     if args.rotation == "dart":
         calib = jnp.asarray(calibration_batch(cfg, args.calib_seqs,
                                               args.calib_len))
-        pack = calibrate_model(cfg, params, calib, key=key, steps=args.steps)
+        pack = calibrate_model(cfg, params, calib, key=key, steps=args.steps,
+                               mesh=mesh)
     else:
         pack = random_pack(cfg, key)
     cfg, params = fuse_rotations(cfg, params, pack)
@@ -65,7 +75,8 @@ def main(argv=None):
     art = QuantArtifact(
         cfg=cfg, params=packed, rotations=rotation_spec(pack),
         meta={"arch": args.arch, "rotation": args.rotation,
-              "steps": args.steps, "calib_s": round(calib_s, 3)})
+              "steps": args.steps, "calib_s": round(calib_s, 3),
+              "calib_mesh": args.mesh})
     save_artifact(args.out, art)
 
     proj, proj_fp16 = projection_weight_bytes(packed)

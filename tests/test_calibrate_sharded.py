@@ -1,0 +1,214 @@
+"""Token-sharded calibration parity — run in subprocesses with 8 placeholder
+CPU devices so the main test process keeps a single device.
+
+Strict (f64) parity pins algorithmic equality of the sharded and
+single-device engines; f32 runs pin the acceptance-level "f32-noise
+tolerance" contract on short trajectories (long f32 trajectories amplify
+reduction-order noise chaotically — see test_calibration_engine's module
+doc).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _run(code: str):
+    # JAX_PLATFORMS must survive into the subprocess: images that ship libtpu
+    # hang for minutes probing for TPU hardware otherwise.
+    return subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+             "HOME": os.environ.get("HOME", "/root")},
+        timeout=560)
+
+
+PRELUDE = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.qr_orth import calibrate_scan, calibrate_rotations_batched, \\
+    cholqr_rotation
+from repro.core.whip import whip, quant_error
+from repro.core.rotations import random_hadamard
+mesh = jax.make_mesh((8, 1), ("data", "model"))
+key = jax.random.PRNGKey(0)
+
+def toy(key, n=32, N=256, dtype=jnp.float32):
+    x = jax.random.laplace(key, (N, n)).astype(dtype) * 0.5
+    oc = jax.random.choice(jax.random.fold_in(key, 1), n, (3,), replace=False)
+    x = x.at[:, oc].multiply(8.0)
+    return x / jnp.std(x)
+"""
+
+
+def test_sharded_scan_matches_single_device():
+    """1-device vs 8-device calibrate_scan: strict in f64, f32-noise in f32."""
+    code = PRELUDE + textwrap.dedent("""
+        from jax.experimental import enable_x64
+        with enable_x64():
+            x = toy(key, dtype=jnp.float64)
+            z0 = random_hadamard(32, key).astype(jnp.float64)
+            one = calibrate_scan(x, z0, whip, steps=25, lr=0.05)
+            shd = calibrate_scan(x, z0, whip, steps=25, lr=0.05, mesh=mesh)
+            np.testing.assert_allclose(np.asarray(shd.rotation),
+                                       np.asarray(one.rotation), atol=1e-10)
+            np.testing.assert_allclose(np.asarray(shd.loss_history),
+                                       np.asarray(one.loss_history),
+                                       rtol=1e-12)
+        x = toy(key)
+        z0 = random_hadamard(32, key)
+        one = calibrate_scan(x, z0, whip, steps=10, lr=0.05)
+        shd = calibrate_scan(x, z0, whip, steps=10, lr=0.05, mesh=mesh)
+        np.testing.assert_allclose(np.asarray(shd.rotation),
+                                   np.asarray(one.rotation), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(shd.loss_history),
+                                   np.asarray(one.loss_history), rtol=1e-5)
+        print("OK scan parity")
+    """)
+    r = _run(code)
+    assert "OK scan parity" in r.stdout, r.stdout + r.stderr
+
+
+def test_sharded_batched_matches_single_device():
+    """Acceptance workload [L=8, N=2048, n=256]: 8-device batched engine ==
+    single-device rotations + full loss histories (f32-noise tolerance)."""
+    code = PRELUDE + textwrap.dedent("""
+        L, N, n = 8, 2048, 256
+        xs = jnp.stack([toy(jax.random.fold_in(key, i), n=n, N=N)
+                        for i in range(L)])
+        z0s = jnp.stack([random_hadamard(n, k)
+                         for k in jax.random.split(key, L)])
+        one = calibrate_rotations_batched(xs, z0s, whip, steps=5, lr=0.01)
+        shd = calibrate_rotations_batched(xs, z0s, whip, steps=5, lr=0.01,
+                                          mesh=mesh)
+        assert shd.rotation.shape == (L, n, n)
+        assert shd.loss_history.shape == (L, 5)
+        np.testing.assert_allclose(np.asarray(shd.rotation),
+                                   np.asarray(one.rotation), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(shd.loss_history),
+                                   np.asarray(one.loss_history), rtol=1e-5)
+        for i in range(L):
+            r = np.asarray(shd.rotation[i])
+            np.testing.assert_allclose(r @ r.T, np.eye(n), atol=1e-3)
+        print("OK batched parity")
+    """)
+    r = _run(code)
+    assert "OK batched parity" in r.stdout, r.stdout + r.stderr
+
+
+def test_sharded_loss_history_contract_and_metrics():
+    """history[0] == loss at the init, metrics psum'd per step — the
+    CalibResult contract is unchanged under sharding."""
+    code = PRELUDE + textwrap.dedent("""
+        x = toy(key)
+        z0 = random_hadamard(32, key)
+        res = calibrate_scan(x, z0, whip, steps=12, lr=0.05, mesh=mesh,
+                             metrics=(("quant_err", quant_error),))
+        assert res.loss_history.shape == (12,)
+        assert res.aux["quant_err"].shape == (12,)
+        init = float(whip(x @ cholqr_rotation(z0)))
+        assert abs(float(res.loss_history[0]) - init) < 1e-4 * abs(init)
+        qe = float(quant_error(x @ cholqr_rotation(z0)))
+        assert abs(float(res.aux["quant_err"][0]) - qe) < 1e-3 * abs(qe)
+        assert bool(jnp.all(jnp.isfinite(res.loss_history)))
+        assert float(res.loss_history[-1]) < float(res.loss_history[0])
+        print("OK contract")
+    """)
+    r = _run(code)
+    assert "OK contract" in r.stdout, r.stdout + r.stderr
+
+
+def test_sharded_uneven_tokens():
+    """N=250 is not divisible by 8 shards: padding rows must be masked out of
+    the loss, matching the unpadded single-device run exactly (f64)."""
+    code = PRELUDE + textwrap.dedent("""
+        from jax.experimental import enable_x64
+        with enable_x64():
+            x = toy(key, N=250, dtype=jnp.float64)
+            z0 = random_hadamard(32, key).astype(jnp.float64)
+            one = calibrate_scan(x, z0, whip, steps=20, lr=0.05)
+            shd = calibrate_scan(x, z0, whip, steps=20, lr=0.05, mesh=mesh)
+            np.testing.assert_allclose(np.asarray(shd.rotation),
+                                       np.asarray(one.rotation), atol=1e-10)
+            np.testing.assert_allclose(np.asarray(shd.loss_history),
+                                       np.asarray(one.loss_history),
+                                       rtol=1e-12)
+        # batched uneven: token axis 1 padded+masked per site
+        L = 3
+        xs = jnp.stack([toy(jax.random.fold_in(key, i), N=250)
+                        for i in range(L)])
+        z0s = jnp.stack([random_hadamard(32, k)
+                         for k in jax.random.split(key, L)])
+        one = calibrate_rotations_batched(xs, z0s, whip, steps=10, lr=0.05)
+        shd = calibrate_rotations_batched(xs, z0s, whip, steps=10, lr=0.05,
+                                          mesh=mesh)
+        np.testing.assert_allclose(np.asarray(shd.rotation),
+                                   np.asarray(one.rotation), atol=1e-4)
+        print("OK uneven")
+    """)
+    r = _run(code)
+    assert "OK uneven" in r.stdout, r.stdout + r.stderr
+
+
+def test_sharded_compressed_grads():
+    """int8+error-feedback gradient psum: trajectory tracks the exact-psum
+    run and still optimizes the objective."""
+    code = PRELUDE + textwrap.dedent("""
+        x = toy(key)
+        z0 = random_hadamard(32, key)
+        exact = calibrate_scan(x, z0, whip, steps=25, lr=0.05, mesh=mesh)
+        comp = calibrate_scan(x, z0, whip, steps=25, lr=0.05, mesh=mesh,
+                              compressed_grads=True)
+        assert bool(jnp.all(jnp.isfinite(comp.loss_history)))
+        assert float(comp.loss_history[-1]) < float(comp.loss_history[0])
+        e = abs(float(comp.loss_history[-1]) - float(exact.loss_history[-1]))
+        assert e < 0.02 * abs(float(exact.loss_history[-1])), e
+        print("OK compressed")
+    """)
+    r = _run(code)
+    assert "OK compressed" in r.stdout, r.stdout + r.stderr
+
+
+def test_sharded_capture_and_calibrate_model():
+    """capture_activations(mesh=...) keeps pools token-sharded over the data
+    axes and calibrate_model runs every site on the sharded engine."""
+    code = PRELUDE + textwrap.dedent("""
+        from repro.configs import get_config
+        from repro.core import calibrate_model
+        from repro.core.capture import capture_activations
+        from repro.models import model as M
+        cfg = get_config("llama2-7b").reduced().replace(
+            n_layers=2, d_model=32, d_ff=64, n_heads=2, n_kv_heads=2,
+            head_dim=16, vocab_size=128)
+        params = M.init_params(cfg, key)
+        toks = jax.random.randint(key, (4, 64), 0, cfg.vocab_size)
+        acts = capture_activations(cfg, params, toks, key=key, mesh=mesh)
+        for name, v in acts.items():
+            ax = 1 if v.ndim == 3 else 0
+            assert v.shape[ax] % 8 == 0, (name, v.shape)
+            spec = v.sharding.spec
+            assert spec[ax] == "data", (name, spec)
+        hist = {}
+        pack = calibrate_model(cfg, params, toks, key=key, steps=5,
+                               history_out=hist, mesh=mesh)
+        assert pack["r2"].shape == (2, 16, 16)
+        for r in np.asarray(pack["r2"]):
+            np.testing.assert_allclose(r @ r.T, np.eye(16), atol=1e-4)
+        assert hist["r1"].shape == (5,) and hist["r2"].shape == (2, 5)
+        # a pool smaller than the shard count must fail loudly, not trim to
+        # zero rows and silently 'calibrate' nothing
+        from repro.dist.sharding import place_calib_acts
+        try:
+            place_calib_acts({"r1": jnp.ones((5, 8))}, mesh)
+            raise SystemExit("expected ValueError for 5 tokens on 8 shards")
+        except ValueError as e:
+            assert "fewer than" in str(e), e
+        print("OK capture+model")
+    """)
+    r = _run(code)
+    assert "OK capture+model" in r.stdout, r.stdout + r.stderr

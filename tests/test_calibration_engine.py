@@ -171,6 +171,41 @@ def test_calibrate_model_batched_matches_serial(key):
         np.testing.assert_allclose(r @ r.T, np.eye(16), atol=1e-4)
 
 
+def test_bf16_activations_match_f32(key):
+    """Low-precision activations must not degrade the optimizer math: latent,
+    optimizer state, and lr stay f32 (cast to x.dtype only at x @ R), so a
+    bf16-activation run tracks the f32 run to bf16 matmul noise."""
+    x = _toy(key)
+    z0 = random_hadamard(32, key)
+    # SGD: divergence scales with lr * per-step bf16 matmul noise.  (Adam is
+    # excluded by design: its g/sqrt(v) normalization turns sign flips of
+    # near-zero gradient entries into O(lr) jumps under ANY noise source.)
+    res32 = calibrate_scan(x, z0, whip, steps=10, lr=0.01)
+    res16 = calibrate_scan(x.astype(jnp.bfloat16), z0, whip, steps=10,
+                           lr=0.01)
+    assert res16.rotation.dtype == jnp.float32    # latent stays f32
+    np.testing.assert_allclose(np.asarray(res16.rotation),
+                               np.asarray(res32.rotation), atol=0.01)
+    assert float(orthogonality_error(res16.rotation)) < 1e-4
+    np.testing.assert_allclose(
+        np.asarray(res16.loss_history).astype(np.float32),
+        np.asarray(res32.loss_history), rtol=0.02)
+
+
+def test_single_device_mesh_matches_unsharded(key):
+    """mesh= with one device exercises the sharded path (pad/mask, shard_map,
+    per-step psum) in-process; it must agree with the plain engine."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    x = _toy(key, N=250)    # uneven N: exercises pad+mask with k=1
+    z0 = random_hadamard(32, key)
+    one = calibrate_scan(x, z0, whip, steps=10, lr=0.05)
+    shd = calibrate_scan(x, z0, whip, steps=10, lr=0.05, mesh=mesh)
+    np.testing.assert_allclose(np.asarray(shd.rotation),
+                               np.asarray(one.rotation), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(shd.loss_history),
+                               np.asarray(one.loss_history), rtol=1e-5)
+
+
 def test_batched_histories_decrease(key):
     L, n = 4, 32
     xs = jnp.stack([_toy(jax.random.fold_in(key, i), n=n) for i in range(L)])

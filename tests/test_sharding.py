@@ -110,6 +110,28 @@ def test_compressed_grad_allreduce():
     assert "OK compressed allreduce" in r.stdout, r.stdout + r.stderr
 
 
+def test_compressed_grad_allreduce_sharded():
+    code = PRELUDE + textwrap.dedent("""
+        from repro.dist.collectives import all_reduce_compressed_tree
+        # per-shard DISTINCT gradients: leading axis = shard index
+        k = 2   # mesh data axis size
+        g = {"w": jnp.stack([jnp.arange(32, dtype=jnp.float32).reshape(8, 4)
+                             * (i + 1) / 7.0 for i in range(k)])}
+        e = {"w": jnp.zeros_like(g["w"])}
+        out, errs = all_reduce_compressed_tree(g, e, mesh, axis="data",
+                                               sharded=True)
+        want = jnp.mean(g["w"], axis=0)      # true mean of per-shard grads
+        d = float(jnp.max(jnp.abs(out["w"] - want)))
+        assert out["w"].shape == (8, 4), out["w"].shape
+        assert d < 0.05, d
+        # error feedback keeps the per-shard leading axis (stays local)
+        assert errs["w"].shape == g["w"].shape
+        print("OK sharded compressed allreduce", d)
+    """)
+    r = _run(code)
+    assert "OK sharded compressed allreduce" in r.stdout, r.stdout + r.stderr
+
+
 def test_production_mesh_shapes():
     code = """
 import os
