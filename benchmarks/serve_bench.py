@@ -12,11 +12,29 @@ Measures on reduced configs:
     same capacity,
   * weight memory: packed-QTensor projection bytes vs the fp16 QDQ footprint
     they replace, artifact (hash-verified, mmap) load time, and decode
-    throughput of the packed-weight engine cold-booted from that artifact.
+    throughput of the packed-weight engine cold-booted from that artifact,
+  * shared-prompt traffic (the production shape: one system prompt, many
+    divergent suffixes) through the prefix cache, against a no-sharing
+    baseline with the index disabled.
+
+Scheduler counters reported by the shared-prompt section (each also appears
+in every paged engine's ``generate`` stats):
+
+  prefix_hit_rate   prompt tokens served from cached pages / prompt tokens
+                    submitted (prefix_hit_tokens / prompt_tokens)
+  cow_copies        shared pages copied-on-write at admission (the last,
+                    partially filled prefix page a sequence must append into)
+  prefill_tokens    tokens actually prefilled — cache hits excluded, so
+                    shared traffic prefills fewer tokens than the baseline
+  preemptions       sequences preempted (pages recycled, request requeued)
+                    when on-demand page growth found the pool exhausted
+  prefix_evictions  cached pages reclaimed LRU-style to satisfy allocation
 
 The legacy lockstep engine is no longer benchmarked: for decoder-only
 families ``ServeEngine`` is a thin wrapper over the paged engine (the
-lockstep loop survives only for enc-dec).
+lockstep loop survives only for enc-dec).  The single-traffic sections pin
+``prefix_cache=False`` so their warm re-runs measure real prefill work, not
+a 100% cache hit on the identical prompts.
 
 Warm numbers re-run ``generate`` with the jit cache hot — the serving regime:
 the paged engine's programs are keyed by engine geometry (slots, pages, page
@@ -58,7 +76,8 @@ def run(smoke: bool = False) -> list:
     rows = []
 
     paged = PagedServeEngine(cfg, params, batch_slots=slots, max_seq=max_seq,
-                             page_size=page, a_bits=8, kv_bits=4)
+                             page_size=page, a_bits=8, kv_bits=4,
+                             prefix_cache=False)
     t0 = time.time()
     stats = _serve(paged, cfg, n_req, plen, max_new)
     rows.append((f"serve,paged_total_cold,{tag}", time.time() - t0, "s"))
@@ -79,7 +98,8 @@ def run(smoke: bool = False) -> list:
     mla_cfg = get_config("deepseek-v3-671b").reduced()
     mla_params = M.init_params(mla_cfg, jax.random.PRNGKey(1))
     mla = PagedServeEngine(mla_cfg, mla_params, batch_slots=slots,
-                           max_seq=max_seq, page_size=page, kv_bits=4)
+                           max_seq=max_seq, page_size=page, kv_bits=4,
+                           prefix_cache=False)
     _serve(mla, mla_cfg, n_req, plen, max_new)              # compile
     stats = _serve(mla, mla_cfg, n_req, plen, max_new)      # warm
     rows.append((f"serve,mla_paged_decode,{tag}",
@@ -105,6 +125,63 @@ def run(smoke: bool = False) -> list:
                  stats["decode_tok_per_s"], "tok_per_s"))
     rows.append((f"serve,hybrid_cache_bytes_paged,{tag}",
                  stats["kv_cache_bytes"], "B"))
+
+    # ---- shared-prompt traffic: prefix cache + CoW vs no-sharing --------- #
+    # shared prefix deliberately ends mid-page: sharers must CoW the last,
+    # partially filled prefix page before appending their suffix into it
+    sp_len, suf_len = 3 * page + page // 2, max(2, page // 2)
+    sp_max_seq = sp_len + suf_len + max_new
+
+    def _shared_reqs():
+        rng = np.random.default_rng(7)
+        sys_prompt = rng.integers(0, cfg.vocab_size, sp_len)
+        return [Request(prompt=np.concatenate(
+                            [sys_prompt,
+                             rng.integers(0, cfg.vocab_size, suf_len)]),
+                        max_new=max_new) for _ in range(n_req)]
+
+    base_eng = PagedServeEngine(cfg, params, batch_slots=slots,
+                                max_seq=sp_max_seq, page_size=page, a_bits=8,
+                                kv_bits=4, prefix_cache=False)
+    base_reqs, base_stats = base_eng.generate(_shared_reqs())
+    shared_eng = PagedServeEngine(cfg, params, batch_slots=slots,
+                                  max_seq=sp_max_seq, page_size=page,
+                                  a_bits=8, kv_bits=4, prefix_cache=True)
+    shared_reqs, shared_stats = shared_eng.generate(_shared_reqs())
+    # sharing is an optimization, never a behaviour change
+    assert [r.out for r in shared_reqs] == [r.out for r in base_reqs]
+    assert shared_stats["prefix_hit_rate"] > 0
+    assert shared_stats["cow_copies"] >= 1
+    assert shared_stats["prefill_tokens"] < base_stats["prefill_tokens"]
+    rows.append((f"serve,prefix_hit_rate,{tag}",
+                 shared_stats["prefix_hit_rate"], "ratio"))
+    rows.append((f"serve,prefix_cow_copies,{tag}",
+                 shared_stats["cow_copies"], "pages"))
+    rows.append((f"serve,prefill_tokens_shared,{tag}",
+                 shared_stats["prefill_tokens"], "tok"))
+    rows.append((f"serve,prefill_tokens_baseline,{tag}",
+                 base_stats["prefill_tokens"], "tok"))
+    rows.append((f"serve,shared_decode,{tag}",
+                 shared_stats["decode_tok_per_s"], "tok_per_s"))
+    rows.append((f"serve,baseline_decode,{tag}",
+                 base_stats["decode_tok_per_s"], "tok_per_s"))
+
+    # over-committed pool: reserve-at-admission could at best run one of
+    # these sequences at a time; on-demand growth runs them concurrently and
+    # preempts-with-requeue when pages run dry.  Sized to one full prompt +
+    # one CoW page + one growth page (+ the null page): the second slot's
+    # first growth is guaranteed to find the pool dry and preempt.
+    oc_pages = -(-(sp_len + suf_len) // page) + 3
+    oc_eng = PagedServeEngine(cfg, params, batch_slots=2, max_seq=sp_max_seq,
+                              page_size=page, num_pages=oc_pages, a_bits=8,
+                              kv_bits=4, prefix_cache=True)
+    oc_reqs, oc_stats = oc_eng.generate(_shared_reqs())
+    assert all(r.done for r in oc_reqs)
+    assert [r.out for r in oc_reqs] == [r.out for r in base_reqs]
+    rows.append((f"serve,overcommit_preemptions,{tag}",
+                 oc_stats["preemptions"], "seqs"))
+    rows.append((f"serve,overcommit_evictions,{tag}",
+                 oc_stats["prefix_evictions"], "pages"))
 
     # quantize-once pipeline: weight memory + artifact cold-boot cost.
     # Rotation choice doesn't matter for bytes — use the Hadamard pack so the
@@ -132,7 +209,8 @@ def run(smoke: bool = False) -> list:
         art = load_artifact(td)                  # mmap + hash verification
         rows.append((f"serve,artifact_load,{tag}", time.time() - t0, "s"))
         cold = PagedServeEngine.from_artifact(art, batch_slots=slots,
-                                              max_seq=max_seq, page_size=page)
+                                              max_seq=max_seq, page_size=page,
+                                              prefix_cache=False)
         _serve(cold, cfg, n_req, plen, max_new)            # compile
         stats = _serve(cold, cfg, n_req, plen, max_new)    # warm
         rows.append((f"serve,paged_packed_decode,{tag}",

@@ -71,6 +71,16 @@ def main(argv=None):
                     help="restrict sampling to the top-k logits (0 = full)")
     ap.add_argument("--seed", type=int, default=None,
                     help="base PRNG seed for sampled decoding")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a shared system prompt of this many tokens "
+                         "to every request (exercises the prefix cache)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the prefix index (every prompt prefills "
+                         "from scratch)")
+    ap.add_argument("--assert-prefix-parity", action="store_true",
+                    help="re-serve the same requests with the prefix cache "
+                         "off and assert token-for-token parity, a nonzero "
+                         "hit rate and fewer prefilled tokens (CI smoke)")
     ap.add_argument("--no-quant", action="store_true")
     ap.add_argument("--qdq", action="store_true",
                     help="serve fake-quant (QDQ) fp weights instead of "
@@ -94,7 +104,7 @@ def main(argv=None):
         args.a_bits = 8 if args.a_bits is None else args.a_bits
         args.kv_bits = 4 if args.kv_bits is None else args.kv_bits
 
-    max_seq = args.prompt_len + args.max_new * 4
+    max_seq = args.prompt_len + args.shared_prefix + args.max_new * 4
     eng_kw = dict(batch_slots=args.slots, max_seq=max_seq)
     base_seed = 0 if args.seed is None else args.seed
 
@@ -104,16 +114,20 @@ def main(argv=None):
         from repro.artifacts import load_artifact
         art = load_artifact(args.artifact)
         cfg = art.cfg
-        if _use_paged(args, cfg):
-            eng = PagedServeEngine.from_artifact(
-                art, page_size=args.page_size, base_seed=base_seed, **eng_kw)
-        else:
+
+        def build(prefix_cache: bool):
+            if _use_paged(args, cfg):
+                return PagedServeEngine.from_artifact(
+                    art, page_size=args.page_size, base_seed=base_seed,
+                    prefix_cache=prefix_cache, **eng_kw)
             # the wrapper forwards decoder-only families to the paged engine,
             # so sampling/paging flags must flow through it too
-            eng = ServeEngine.from_artifact(
+            return ServeEngine.from_artifact(
                 art, page_size=args.page_size,
-                **(dict(base_seed=base_seed, **eng_kw)
+                **(dict(base_seed=base_seed, prefix_cache=prefix_cache,
+                        **eng_kw)
                    if M.supports_paged(cfg) else eng_kw))
+        eng = build(not args.no_prefix_cache)
         print(f"[serve] cold boot from {args.artifact} "
               f"(rotations: {art.rotations}, meta: {art.meta})")
     else:
@@ -140,30 +154,64 @@ def main(argv=None):
             rot = {"r3": online_hadamard, "r4": online_hadamard}
             print(f"calibrated + quantized (W4 "
                   f"{'QDQ' if args.qdq else 'packed'}, rotations fused)")
-        if _use_paged(args, cfg):
-            eng = PagedServeEngine(cfg, params, rot=rot,
-                                   page_size=args.page_size,
-                                   a_bits=args.a_bits, kv_bits=args.kv_bits,
-                                   base_seed=base_seed, **eng_kw)
-        else:
-            eng = ServeEngine(cfg, params, rot=rot, a_bits=args.a_bits,
-                              kv_bits=args.kv_bits, page_size=args.page_size,
-                              **(dict(base_seed=base_seed, **eng_kw)
-                                 if M.supports_paged(cfg) else eng_kw))
 
-    rng = np.random.default_rng(0)
-    # per-request keys derive from the engine base seed + sequence id, so
-    # requests sample independently yet replay deterministically
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, args.prompt_len),
-                    max_new=args.max_new, temperature=args.temperature,
-                    top_k=args.top_k)
-            for _ in range(args.requests)]
-    reqs, stats = eng.generate(reqs, verbose=True)
+        def build(prefix_cache: bool):
+            if _use_paged(args, cfg):
+                return PagedServeEngine(cfg, params, rot=rot,
+                                        page_size=args.page_size,
+                                        a_bits=args.a_bits,
+                                        kv_bits=args.kv_bits,
+                                        base_seed=base_seed,
+                                        prefix_cache=prefix_cache, **eng_kw)
+            return ServeEngine(cfg, params, rot=rot, a_bits=args.a_bits,
+                               kv_bits=args.kv_bits,
+                               page_size=args.page_size,
+                               **(dict(base_seed=base_seed,
+                                       prefix_cache=prefix_cache, **eng_kw)
+                                  if M.supports_paged(cfg) else eng_kw))
+        eng = build(not args.no_prefix_cache)
+
+    def make_requests():
+        rng = np.random.default_rng(0)
+        # one shared system prompt + per-request divergent suffix: the
+        # production traffic shape the prefix cache is for
+        sys_prompt = rng.integers(0, cfg.vocab_size, args.shared_prefix)
+        # per-request keys derive from the engine base seed + sequence id, so
+        # requests sample independently yet replay deterministically
+        return [Request(prompt=np.concatenate(
+                            [sys_prompt,
+                             rng.integers(0, cfg.vocab_size,
+                                          args.prompt_len)]).astype(np.int64),
+                        max_new=args.max_new, temperature=args.temperature,
+                        top_k=args.top_k)
+                for _ in range(args.requests)]
+
+    reqs, stats = eng.generate(make_requests(), verbose=True)
     done = sum(r.done for r in reqs)
     print(f"[{type(eng).__name__}] served {done}/{len(reqs)} requests; "
           f"{stats['decode_tok_per_s']:.1f} tok/s decode; "
           f"kv cache {stats['kv_cache_bytes']} B; "
           f"weights {stats['weight_bytes']} B")
+    if "prefix_hit_rate" in stats:
+        print(f"[serve] prefix hit rate {stats['prefix_hit_rate']:.2f} "
+              f"({stats['prefix_hit_tokens']}/{stats['prompt_tokens']} prompt "
+              f"tokens), {stats['cow_copies']} CoW copies, "
+              f"{stats['preemptions']} preemptions")
+
+    if args.assert_prefix_parity:
+        if "prefix_hit_rate" not in stats or args.no_prefix_cache:
+            ap.error("--assert-prefix-parity needs the paged engine with the "
+                     "prefix cache enabled")
+        base = build(prefix_cache=False)
+        base_reqs, base_stats = base.generate(make_requests())
+        assert [r.out for r in reqs] == [r.out for r in base_reqs], \
+            "prefix-cached outputs diverged from the uncached path"
+        assert stats["prefix_hit_rate"] > 0, "no prefix hits recorded"
+        assert stats["prefill_tokens"] < base_stats["prefill_tokens"], \
+            "prefix cache did not reduce prefilled tokens"
+        print(f"[serve] prefix parity OK: {len(reqs)} requests identical "
+              f"with the cache off; prefill tokens "
+              f"{stats['prefill_tokens']} vs {base_stats['prefill_tokens']}")
     return reqs, stats
 
 

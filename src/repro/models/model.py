@@ -681,6 +681,16 @@ def init_pool_slot(cfg: ModelConfig, pool: dict, phys_slot,
             for name in pool}
 
 
+def copy_pool_page(cfg: ModelConfig, pool: dict, src, dst,
+                   kv_bits: int = 4, state_bits: int = 8) -> dict:
+    """Duplicate one physical page across every page-bearing adapter
+    (copy-on-write at admission when a sequence must append into a shared,
+    partially filled prefix page).  Per-slot recurrent state is a no-op."""
+    ads = _paged_adapters(cfg, kv_bits, state_bits)
+    return {name: ads[name].copy_page(pool[name], src, dst)
+            for name in pool}
+
+
 # --------------------------------------------------------------------------- #
 # Empty cache factories (decode-shape dry-run: cache of seq_len, one new token)
 # --------------------------------------------------------------------------- #

@@ -9,4 +9,5 @@ from repro.serve.cache_adapters import (DecodeCtx, GQAPages, MLALatentPages,
                                         adapters_for)
 from repro.serve.engine import PagedServeEngine, Request, ServeEngine
 from repro.serve.page_pool import PagePool
+from repro.serve.prefix_index import PrefixIndex
 from repro.serve.scheduler import SeqState, TokenScheduler

@@ -138,6 +138,11 @@ class GQAPages:
     def commit(self, state: dict, carry, phys_slot) -> dict:
         return state
 
+    def copy_page(self, state: dict, src, dst) -> dict:
+        """Copy-on-write: duplicate one physical page (all layers, codes and
+        scale/zero meta alike — the copy is bit-exact by construction)."""
+        return {k: v.at[:, dst].set(v[:, src]) for k, v in state.items()}
+
     def write_decode(self, state_l: dict, k: jax.Array, v: jax.Array,
                      pages: jax.Array, offs: jax.Array) -> dict:
         """Quantize one token's k,v [N,H,hd] rows into pages[N]/offs[N]."""
@@ -213,6 +218,10 @@ class MLALatentPages:
 
     def commit(self, state: dict, carry, phys_slot) -> dict:
         return state
+
+    def copy_page(self, state: dict, src, dst) -> dict:
+        """Copy-on-write: duplicate one physical latent page (all layers)."""
+        return {k: v.at[:, dst].set(v[:, src]) for k, v in state.items()}
 
     def write_decode(self, state_l: dict, c_kv: jax.Array, k_rope: jax.Array,
                      pages: jax.Array, offs: jax.Array) -> dict:
@@ -345,6 +354,10 @@ class SSMStatePool:
                 "hq": state["hq"].at[:, phys_slot].set(hq),
                 "hs": state["hs"].at[:, phys_slot].set(hs),
                 "hz": state["hz"].at[:, phys_slot].set(hz)}
+
+    def copy_page(self, state: dict, src, dst) -> dict:
+        """Recurrent state is per-slot, not per-page: CoW doesn't apply."""
+        return state
 
     def attend_or_mix(self, p: dict, x: jax.Array, state_l: dict, carry_l,
                       ctx, *, window=0, shd=NO_SHARD, rot=None):

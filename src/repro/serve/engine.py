@@ -4,8 +4,11 @@
 quantized cache pool (``repro.serve.page_pool``) whose per-layer behaviour is
 supplied by cache adapters (``repro.serve.cache_adapters``) — GQA KV pages,
 MLA latent pages, SSM/conv state slots — a token-level continuous-batching
-scheduler (``repro.serve.scheduler``) with chunked prefill, and the Pallas
-paged-attention kernels (``repro.kernels.paged_attn``).  All jitted shapes
+scheduler (``repro.serve.scheduler``) with chunked prefill, prefix caching
+(shared prompts ride refcounted read-only pages with copy-on-write of the
+boundary page; only the divergent suffix is prefilled) and on-demand page
+growth with preemption-with-requeue, and the Pallas paged-attention kernels
+(``repro.kernels.paged_attn``).  All jitted shapes
 are fixed by the engine geometry (slots, page count, page size, chunk), so
 one engine compiles a handful of programs — the calibrate-on-deploy flow
 reuses them across repeat deployments.
@@ -103,7 +106,7 @@ class PagedServeEngine:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  a_bits: int = 16, kv_bits: int = 4, state_bits: int = 8,
-                 base_seed: int = 0):
+                 base_seed: int = 0, prefix_cache: bool = True):
         if kv_bits not in (4, 8, 16):
             raise ValueError("paged cache stores quantized KV (kv_bits 4/8) "
                              "or raw fp16 pages (kv_bits 16)")
@@ -127,7 +130,8 @@ class PagedServeEngine:
             num_pages = batch_slots * -(-max_seq // page_size) + 1
         self.pool = PagePool(cfg, num_pages=num_pages, page_size=page_size,
                              max_seq=max_seq, kv_bits=kv_bits,
-                             state_bits=state_bits, n_slots=batch_slots)
+                             state_bits=state_bits, n_slots=batch_slots,
+                             prefix_cache=prefix_cache)
         self._has_state = any(not a.needs_pages
                               for a in self.pool.adapters.values())
 
@@ -149,6 +153,8 @@ class PagedServeEngine:
         self._commit = jax.jit(S.build_paged_commit(cfg, **qkw),
                                donate_argnums=pool_donate)
         self._init_slot = jax.jit(S.build_paged_init_slot(cfg, **qkw),
+                                  donate_argnums=pool_donate)
+        self._copy_page = jax.jit(S.build_paged_copy_page(cfg, **qkw),
                                   donate_argnums=pool_donate)
         self._sample = jax.jit(_build_sampler(cfg.vocab_size))
         # greedy fast path: the default serving mode (and the test oracle)
@@ -176,10 +182,19 @@ class PagedServeEngine:
         return int(tok[0])
 
     def _prefill_seq(self, seq: SeqState) -> int:
-        """Chunked prefill of one admitted prompt into its reserved pages
-        (fp32 recurrent carry across chunks, committed to the state slot at
-        the end); returns the first generated token (prompt-tail sample)."""
+        """Chunked prefill of one admitted prompt into its pages, starting
+        past the prefix-cache hit (``seq.cached_len`` tokens already sit in
+        shared pages; the boundary page is CoW-copied first, so every write
+        below lands in a private page).  Chunk attention reads the whole
+        page prefix, so the cached tokens are attended without being
+        recomputed.  Returns the first generated token (prompt-tail
+        sample); the fp32 recurrent carry is committed to the state slot at
+        the end (state families never take the cached shortcut)."""
         cfg = self.cfg
+        for src, dst in seq.cow_ops:
+            self.pool.state = self._copy_page(
+                self.pool.state, jnp.int32(src), jnp.int32(dst))
+        seq.cow_ops = []
         prompt = np.asarray(seq.req.prompt, np.int32)
         C = self.prefill_chunk
         table = jnp.asarray(self.pool.block_table_row(seq.seq_id)[None])
@@ -188,7 +203,7 @@ class PagedServeEngine:
         carry = M.init_prefill_carry(cfg, kv_bits=self.kv_bits,
                                      state_bits=self.state_bits)
         tail_logits = None
-        for s0 in range(0, len(prompt), C):
+        for s0 in range(seq.cached_len, len(prompt), C):
             chunk = prompt[s0:s0 + C]
             toks = np.zeros((1, C), np.int32)
             toks[0, :len(chunk)] = chunk
@@ -219,8 +234,14 @@ class PagedServeEngine:
         n_prefill = n_decode = 0
 
         while sched.has_work():
-            admitted = sched.admit()
-            for seq in admitted:
+            # admit one request at a time: each admission's prefix match must
+            # see the pages the *previous* admission just prefilled and
+            # registered, so a batch sharing a prompt hits within one wave
+            while True:
+                admitted = sched.admit(limit=1)
+                if not admitted:
+                    break
+                seq = admitted[0]
                 t0 = time.time()
                 if self._has_state:
                     # admission hygiene: the previous occupant's state slot
@@ -229,13 +250,20 @@ class PagedServeEngine:
                         self.pool.state, jnp.int32(seq.slot + 1))
                 first = self._prefill_seq(seq)
                 prefill_s += time.time() - t0
-                n_prefill += len(seq.req.prompt)
+                n_prefill += len(seq.req.prompt) - seq.cached_len
+                # register before record_prefill: a max_new=1 request frees
+                # its refcounts there, which would park the pages cache-free
+                # only if they are already in the index
+                sched.register_prefix(seq)
                 sched.record_prefill(seq, first)
             if sched.n_running == 0:
-                if not admitted:
+                if sched.has_work():
                     sched.check_progress()   # stall: queued work can't fit
                 continue   # admitted requests all finished at prefill
                            # (max_new=1) — their slots/pages are free again
+            # on-demand growth (may preempt-and-requeue a victim): every
+            # surviving sequence has a page under its next write position
+            sched.ensure_capacity()
             (tokens, tables, positions, lengths, state_slots,
              (temps, top_ks, keys)) = sched.batch_inputs()
             t0 = time.time()
@@ -257,9 +285,13 @@ class PagedServeEngine:
         cfg = self.cfg
         stats = {
             "prefill_s": prefill_s,
+            # tokens actually prefilled: prefix-cache hits are excluded, so
+            # this is smaller than prompt_tokens under shared-prompt traffic
+            "prefill_tokens": n_prefill,
             "prefill_tok_per_s": n_prefill / max(prefill_s, 1e-9),
             "decode_s": decode_s,
             "decode_tok_per_s": n_decode / max(decode_s, 1e-9),
+            **sched.counters(),
             # actual paged footprint, not a dense-cache estimate
             "kv_cache_bytes": self.pool.nbytes,
             "cache_bytes_by_kind": self.pool.nbytes_by_kind,

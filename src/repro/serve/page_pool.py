@@ -1,4 +1,4 @@
-"""Paged serving cache: a fixed pool of token pages + per-slot state slots.
+"""Paged serving cache: a refcounted pool of token pages + per-slot state.
 
 Memory for *attention* caches is allocated in fixed-size pages of
 ``page_size`` tokens (vLLM-style): packed int4/int8 GQA KV codes or MLA
@@ -19,23 +19,49 @@ their writes can never clobber a live sequence.  The host-side allocator
 hands out pages 1..P-1 and keeps per-sequence block tables; state slots map
 1:1 to scheduler slots (slot i -> physical i+1).
 
+Pages are *refcounted* so shared-prompt traffic can map one physical page
+into many sequences (``prefix_cache=True`` plus a ``PrefixIndex`` over page
+contents).  Every page 1..P-1 is in exactly one of three states:
+
+    free         in ``_free``: unreferenced, not indexed — allocatable
+    cached-free  in ``_cached_free``: unreferenced but still in the prefix
+                 index — matchable, reclaimed LRU-last when ``_free`` runs dry
+    referenced   ``_ref[p] >= 1``: mapped by that many live sequences;
+                 refcount 1 with a single mapper = privately owned,
+                 refcount >= 2 = shared read-only
+
+The conservation invariant (property-tested) is
+
+    len(_free) + len(_cached_free) + len(_ref) == num_pages - 1
+
+``admit_seq`` maps a new sequence onto the pool: the longest indexed prompt
+prefix rides existing pages (refcount bump), the last partially-filled
+prefix page is copied-on-write (the sequence must append into it), and only
+the divergent suffix gets fresh pages.  Admission reserves *prompt* pages
+only; decode-time pages come from ``grow_seq`` on demand (the scheduler
+preempts a victim when growth fails).  Prefix caching is enabled only when
+every adapter is page-backed — recurrent-state families (SSM/hybrid) must
+recompute their prefix to rebuild slot state, so skipping prefill would be
+wrong, not just slow.
+
 ``nbytes`` is the bytes actually held on device — the serve engine reports it
 instead of a dense-cache estimate.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.serve.cache_adapters import adapters_for
+from repro.serve.prefix_index import PrefixIndex
 
 
 class PagePool:
     def __init__(self, cfg: ModelConfig, *, num_pages: int, page_size: int,
                  max_seq: int, kv_bits: int = 4, state_bits: int = 8,
-                 n_slots: int = 1):
+                 n_slots: int = 1, prefix_cache: bool = False):
         self.adapters = adapters_for(cfg, kv_bits=kv_bits,
                                      state_bits=state_bits)
         if num_pages < 2:
@@ -49,17 +75,38 @@ class PagePool:
         self.has_pages = any(a.needs_pages for a in self.adapters.values())
         self.max_pages_per_seq = -(-max_seq // page_size) if self.has_pages \
             else 1
+        # prefix caching needs every cache page-backed: a matched prefix skips
+        # prefill, and recurrent families need that prefill to rebuild slot
+        # state — for them the index must stay off, not just miss.
+        pageable = self.has_pages and all(
+            a.needs_pages for a in self.adapters.values())
+        self.prefix: Optional[PrefixIndex] = \
+            PrefixIndex(page_size) if (prefix_cache and pageable) else None
         self.state: Dict[str, dict] = {
             name: (ad.init_state(num_pages, page_size) if ad.needs_pages
                    else ad.init_state(n_slots))
             for name, ad in self.adapters.items()}
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._cached_free: Dict[int, None] = {}     # refcount-0, still indexed
+        self._ref: Dict[int, int] = {}              # page -> live refcount
         self._owned: Dict[int, List[int]] = {}      # seq_id -> physical pages
+        self.cow_copies = 0
+        self.evictions = 0
 
     # ---------------------------------------------------------------- alloc
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        """Allocatable pages: truly free + cached-but-unreferenced (the
+        latter are reclaimed by evicting their prefix-index entry)."""
+        return len(self._free) + len(self._cached_free)
+
+    @property
+    def owned_pages(self) -> int:
+        return sum(1 for c in self._ref.values() if c == 1)
+
+    @property
+    def shared_pages(self) -> int:
+        return sum(1 for c in self._ref.values() if c >= 2)
 
     def pages_for(self, n_tokens: int) -> int:
         """Pages a sequence of ``n_tokens`` needs; 0 for pure-recurrent
@@ -70,26 +117,159 @@ class PagePool:
 
     def can_alloc(self, n_tokens: int) -> bool:
         n = self.pages_for(n_tokens)
-        return n <= len(self._free) and n <= self.max_pages_per_seq
+        return n <= self.free_pages and n <= self.max_pages_per_seq
+
+    def _take_page(self) -> int:
+        """Pop a free page, evicting from the prefix index if necessary.
+        Eviction prefers leaf nodes (keeps ancestor chains matchable) and
+        then least-recently-matched; the evicted node's whole subtree leaves
+        the index — its refcount-0 pages become plain free."""
+        if self._free:
+            return self._free.pop()
+        if self._cached_free:
+            page = min(self._cached_free,
+                       key=lambda p: (self.prefix.node_for(p).has_children,
+                                      self.prefix.node_for(p).last_use))
+            for dropped in self.prefix.remove(page):
+                if dropped in self._cached_free:
+                    del self._cached_free[dropped]
+                    if dropped != page:
+                        self._free.append(dropped)
+            self.evictions += 1
+            return page
+        raise MemoryError(f"pool exhausted: 0 of {self.num_pages - 1} free")
+
+    def _ref_page(self, page: int) -> None:
+        self._ref[page] = self._ref.get(page, 0) + 1
+        if self._ref[page] == 1:
+            # a cached-free page coming back live is no longer reclaimable
+            self._cached_free.pop(page, None)
+
+    def _unref_page(self, page: int) -> None:
+        count = self._ref.get(page, 0)
+        if count <= 0:
+            raise ValueError(f"page {page} freed with refcount 0")
+        if count == 1:
+            del self._ref[page]
+            if self.prefix is not None and page in self.prefix:
+                self._cached_free[page] = None      # retained for future hits
+            else:
+                self._free.append(page)
+        else:
+            self._ref[page] = count - 1
 
     def alloc_seq(self, seq_id: int, n_tokens: int) -> List[int]:
-        """Reserve pages covering ``n_tokens`` for a new sequence."""
+        """Reserve pages covering ``n_tokens`` for a new sequence (no prefix
+        mapping — ``admit_seq`` is the sharing-aware entry point)."""
         if seq_id in self._owned:
             raise ValueError(f"seq {seq_id} already holds pages")
         n = self.pages_for(n_tokens)
         if n > self.max_pages_per_seq:
             raise ValueError(f"seq of {n_tokens} tokens exceeds max_seq")
-        if n > len(self._free):
-            raise MemoryError(f"pool exhausted: want {n}, free {len(self._free)}")
-        pages = [self._free.pop() for _ in range(n)]
+        if n > self.free_pages:
+            raise MemoryError(f"pool exhausted: want {n}, free {self.free_pages}")
+        pages = []
+        for _ in range(n):
+            p = self._take_page()
+            self._ref_page(p)
+            pages.append(p)
         self._owned[seq_id] = pages
         return pages
 
+    def admit_seq(self, seq_id: int, prompt: Sequence[int]) \
+            -> Optional[Tuple[int, List[Tuple[int, int]]]]:
+        """Map a new sequence onto the pool with prefix sharing.
+
+        Matches the prompt against the prefix index; fully matched pages are
+        mapped read-only (refcount bump), a partially matched boundary page
+        is scheduled for copy-on-write (the sequence appends into it), and
+        the remaining prompt pages are allocated fresh.  Only *prompt* pages
+        are reserved — decode growth is on-demand via ``grow_seq``.
+
+        Returns ``(cached_len, copy_ops)`` — the engine prefills only
+        ``prompt[cached_len:]`` after applying each ``(src, dst)`` device
+        page copy — or ``None`` when the fresh pages don't fit right now.
+        Copy ops must be applied before the next pool mutation (the source
+        page is only pinned for the duration of this call).
+        """
+        if seq_id in self._owned:
+            raise ValueError(f"seq {seq_id} already holds pages")
+        n_total = self.pages_for(len(prompt))
+        if n_total > self.max_pages_per_seq:
+            raise ValueError(f"seq of {len(prompt)} tokens exceeds max_seq")
+        T = self.page_size
+        matched_pages: List[int] = []
+        matched = 0
+        if self.prefix is not None:
+            matched_pages, matched = self.prefix.match(prompt)
+        # the prompt tail must be prefilled even on a full match: sampling the
+        # first output token needs the tail logits
+        usable = min(matched, len(prompt) - 1) if len(prompt) else 0
+        w = usable // T                 # logical index of the first written page
+        shared = matched_pages[:w]      # fully used, stay read-only
+        cow_src = matched_pages[w] if usable % T != 0 else None
+        # pin matched pages *before* taking fresh ones — _take_page eviction
+        # must never reclaim the pages this admission is about to map
+        for p in shared:
+            self._ref_page(p)
+        if cow_src is not None:
+            self._ref_page(cow_src)
+        if n_total - w > self.free_pages:
+            for p in shared:            # roll back: admission doesn't fit yet
+                self._unref_page(p)
+            if cow_src is not None:
+                self._unref_page(cow_src)
+            return None
+        pages = list(shared)
+        copy_ops: List[Tuple[int, int]] = []
+        try:
+            if cow_src is not None:
+                dst = self._take_page()
+                self._ref_page(dst)
+                pages.append(dst)
+                copy_ops.append((cow_src, dst))
+                self.cow_copies += 1
+            for _ in range(n_total - len(pages)):
+                p = self._take_page()
+                self._ref_page(p)
+                pages.append(p)
+        finally:
+            if cow_src is not None:
+                self._unref_page(cow_src)   # pinned only across allocation
+        self._owned[seq_id] = pages
+        return usable, copy_ops
+
+    def grow_seq(self, seq_id: int) -> bool:
+        """Append one on-demand page to a running sequence.  Returns False
+        when the pool is exhausted (the scheduler then preempts a victim)."""
+        pages = self._owned[seq_id]
+        if len(pages) >= self.max_pages_per_seq:
+            raise ValueError(f"seq {seq_id} already at the max_seq page cap")
+        if self.free_pages == 0:
+            return False
+        p = self._take_page()
+        self._ref_page(p)
+        pages.append(p)
+        return True
+
+    def seq_page_count(self, seq_id: int) -> int:
+        return len(self._owned[seq_id])
+
+    def register_prefix(self, seq_id: int, prompt: Sequence[int]) -> int:
+        """Index this sequence's prompt pages (post-prefill, content valid).
+        The partially filled tail page is registered too — its registered
+        offsets are never rewritten (decode appends land past them)."""
+        if self.prefix is None:
+            return 0
+        return self.prefix.register(prompt, self._owned[seq_id], len(prompt))
+
     def free_seq(self, seq_id: int) -> None:
         # strict pop: a double free / unknown id is a scheduler bug that must
-        # surface here, not later as cross-request page reuse (alloc_seq
-        # records every admitted sequence, pageless families included)
-        self._free.extend(self._owned.pop(seq_id))
+        # surface here, not later as cross-request page reuse (admission
+        # records every sequence, pageless families included).  Unref'd pages
+        # still in the prefix index park in _cached_free for future hits.
+        for page in self._owned.pop(seq_id):
+            self._unref_page(page)
 
     # ---------------------------------------------------------- block tables
     def block_table_row(self, seq_id: int) -> np.ndarray:

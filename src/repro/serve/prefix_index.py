@@ -1,0 +1,164 @@
+"""Radix/trie prefix index over page contents (vLLM-style prefix caching).
+
+The index maps chains of page-granular token chunks to the physical pages
+that already hold their (quantized) KV/latent rows, so admission can map a
+request's shared prompt prefix onto existing read-only pages instead of
+re-prefilling and re-storing identical content.  The quantized-page layout
+makes each shared page 4x the effective tokens per byte of a vLLM-style
+fp16 page.
+
+Structure: a trie whose edges are token tuples.  A *full* node holds exactly
+``page_size`` tokens and may have children (the chain continues); a *partial*
+node holds the tail of some registered prompt (< page_size tokens) and is
+always a leaf.  Matching walks full nodes exactly, then closes with the
+longest common prefix against any sibling (full or partial) — a sharer may
+use a strict prefix of a cached page because attention reads are
+length-masked: offsets past the match are never read.
+
+Content contract (enforced by the pool/scheduler, not here):
+
+  * a registered page's offsets ``[0, len(node.tokens))`` hold the KV of
+    exactly those tokens at those absolute positions and are never
+    rewritten — the registering sequence's later decode writes land only at
+    offsets >= ``len(node.tokens)`` (disjoint, never read through the index);
+  * a sequence that must *write* inside the registered range (the last,
+    partially-filled prefix page) copies the page first (CoW, handled at
+    admission by ``PagePool.admit_seq``);
+  * eviction removes a node *and its subtree* — children become unreachable
+    from the root, so a stale parent can never vouch for them.
+
+The index is pure host logic; physical page 0 (the null page) never appears.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class _Node:
+    __slots__ = ("tokens", "page", "children", "parent", "last_use")
+
+    def __init__(self, tokens: tuple, page: int, parent: Optional["_Node"],
+                 last_use: int):
+        self.tokens = tokens
+        self.page = page
+        self.children: Dict[tuple, "_Node"] = {}
+        self.parent = parent
+        self.last_use = last_use
+
+    @property
+    def has_children(self) -> bool:
+        return bool(self.children)
+
+
+class PrefixIndex:
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self.root: Dict[tuple, _Node] = {}
+        self.by_page: Dict[int, _Node] = {}     # physical page -> its node
+        self._tick = 0
+
+    def __len__(self) -> int:
+        return len(self.by_page)
+
+    def __contains__(self, page: int) -> bool:
+        return page in self.by_page
+
+    def node_for(self, page: int) -> Optional[_Node]:
+        return self.by_page.get(page)
+
+    # ------------------------------------------------------------------ match
+    def match(self, tokens: Sequence[int]) -> Tuple[List[int], int]:
+        """Longest indexed prefix of ``tokens``.
+
+        Returns ``(pages, matched)``: the physical pages covering the first
+        ``matched`` tokens, in logical order.  All pages but the last are
+        fully matched ``page_size`` chunks; the last may be a partial match
+        (the caller reads only the matched offsets).
+        """
+        toks = [int(t) for t in tokens]
+        T = self.page_size
+        self._tick += 1
+        pages: List[int] = []
+        matched = 0
+        children = self.root
+        while matched < len(toks):
+            rem = toks[matched:]
+            node = None
+            if len(rem) >= T:
+                node = children.get(tuple(rem[:T]))
+            if node is not None:                # exact full-page hop
+                node.last_use = self._tick
+                pages.append(node.page)
+                matched += T
+                children = node.children
+                continue
+            # close with the longest common prefix against any sibling —
+            # partial use of a cached page is safe (length-masked reads)
+            best, best_c = None, 0
+            for key, child in children.items():
+                c = 0
+                for a, b in zip(key, rem):
+                    if a != b:
+                        break
+                    c += 1
+                if c > best_c:
+                    best, best_c = child, c
+            if best is not None:
+                best.last_use = self._tick
+                pages.append(best.page)
+                matched += best_c
+            break
+        return pages, matched
+
+    # --------------------------------------------------------------- register
+    def register(self, tokens: Sequence[int], pages: Sequence[int],
+                 n_tokens: int) -> int:
+        """Index ``pages`` as holding ``tokens[:n_tokens]`` (page-chunked).
+
+        Existing nodes are deduplicated (the first registrant's page stays
+        authoritative); descent continues only through full nodes.  Returns
+        the number of newly indexed pages.
+        """
+        toks = [int(t) for t in tokens[:n_tokens]]
+        T = self.page_size
+        self._tick += 1
+        children = self.root
+        parent: Optional[_Node] = None
+        added = 0
+        for i, page in enumerate(pages):
+            chunk = tuple(toks[i * T:(i + 1) * T])
+            if not chunk:
+                break
+            node = children.get(chunk)
+            if node is None:
+                if page in self.by_page:        # already indexed elsewhere
+                    break
+                node = _Node(chunk, int(page), parent, self._tick)
+                children[chunk] = node
+                self.by_page[int(page)] = node
+                added += 1
+            node.last_use = self._tick
+            if len(chunk) < T:
+                break                           # partial tail: always a leaf
+            children = node.children
+            parent = node
+        return added
+
+    # ----------------------------------------------------------------- evict
+    def remove(self, page: int) -> List[int]:
+        """Drop the node holding ``page`` and its whole subtree (children of
+        an evicted page are unreachable from the root and must not linger).
+        Returns every page released from the index, ``page`` included."""
+        node = self.by_page.get(page)
+        if node is None:
+            return []
+        siblings = node.parent.children if node.parent is not None else self.root
+        siblings.pop(node.tokens, None)
+        dropped: List[int] = []
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            self.by_page.pop(n.page, None)
+            dropped.append(n.page)
+            stack.extend(n.children.values())
+        return dropped

@@ -1,14 +1,30 @@
 """Token-level continuous-batching scheduler over the paged cache pool.
 
-Request lifecycle: WAITING -(admit: pages reserved, chunked prefill)->
-RUNNING -(max_new tokens)-> FINISHED.  Admission happens between any two
+Request lifecycle: WAITING -(admit: prompt pages mapped/allocated, chunked
+prefill of the uncached suffix)-> RUNNING -(on-demand page growth, possible
+PREEMPTION back to WAITING)-> FINISHED.  Admission happens between any two
 decode steps (token granularity, not request granularity): whenever a slot
-frees up and the pool has pages for ``len(prompt) + max_new`` tokens, the
-head-of-line request is admitted and prefilled *into its own pages* — a
-refilled slot can never inherit the previous occupant's stale KV, which is
-the legacy engine's refill bug fixed by construction.  Recurrent-state
-families (SSM/hybrid) reserve no pages; their fixed-size state slot is keyed
-by the scheduler slot (physical slot = slot + 1, 0 is the null slot).
+frees up and the pool can cover the head-of-line request's *prompt*, it is
+admitted — the longest prefix already in the pool's prefix index rides
+existing read-only pages (refcount bump + copy-on-write of the last,
+partially filled prefix page), and only the divergent suffix is prefilled
+into fresh pages.  A refilled slot can never inherit the previous occupant's
+stale KV: every written page is either freshly allocated or a private CoW
+copy.  Recurrent-state families (SSM/hybrid) reserve no pages for their
+recurrent state; their fixed-size slot is keyed by the scheduler slot
+(physical slot = slot + 1, 0 is the null slot) and prefix caching is
+disabled for them (a skipped prefill would skip the recurrence itself).
+
+Decode-time memory is grown on demand: admission reserves prompt pages only,
+and ``ensure_capacity`` (called before every decode step) appends one page
+whenever a sequence's next write position crosses a page boundary.  When the
+pool is exhausted, the lowest-progress running sequence is *preempted*: its
+pages are recycled, its partial output discarded, and the request re-enters
+the head of the waiting queue to be recomputed later (deterministic replay —
+the PRNG seed is pinned at first admission).  The highest-progress sequence
+is never preempted for a lower one, so the workload always makes progress;
+a sequence that can neither grow nor find a victim is a genuine stall and
+raises through ``check_progress``.
 
 Sampling is per request: greedy by default (``temperature=0``, the test
 oracle), or temperature/top-k with a per-request PRNG key derived from
@@ -24,7 +40,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +69,8 @@ class SeqState:
     pos: int = 0            # tokens written to the paged cache so far
     last_token: int = 0     # next decode input
     key_data: Optional[np.ndarray] = None   # raw PRNG key data, [2] uint32
+    cached_len: int = 0     # prompt tokens already in shared pages
+    cow_ops: List[Tuple[int, int]] = field(default_factory=list)
 
 
 class TokenScheduler:
@@ -64,6 +82,13 @@ class TokenScheduler:
         self.running: List[Optional[SeqState]] = [None] * slots
         self.finished: List[SeqState] = []
         self._next_id = 0
+        # serving counters (pool counters are engine-lifetime cumulative, so
+        # snapshot them to report per-scheduler deltas)
+        self.preemptions = 0
+        self.prefix_hit_tokens = 0
+        self.prompt_tokens = 0
+        self._cow0 = pool.cow_copies
+        self._evict0 = pool.evictions
 
     # ----------------------------------------------------------------- state
     @property
@@ -74,57 +99,162 @@ class TokenScheduler:
         return bool(self.waiting) or self.n_running > 0
 
     def add(self, requests: List[Request]) -> None:
+        for req in requests:
+            if req.max_new < 1:
+                raise ValueError(
+                    f"max_new must be >= 1, got {req.max_new} (prefill "
+                    f"always samples one token at the prompt tail)")
+            if req.done or req.out:
+                raise ValueError(
+                    "request was already served (done or non-empty out); "
+                    "submit a fresh Request instead of reusing one")
         self.waiting.extend(requests)
 
+    def counters(self) -> Dict[str, float]:
+        """Serving counters for this scheduler's lifetime (one ``generate``
+        call): prefix hits, CoW copies, cache evictions, preemptions."""
+        return {
+            "prompt_tokens": self.prompt_tokens,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_hit_rate": (self.prefix_hit_tokens
+                                / max(1, self.prompt_tokens)),
+            "cow_copies": self.pool.cow_copies - self._cow0,
+            "prefix_evictions": self.pool.evictions - self._evict0,
+            "preemptions": self.preemptions,
+        }
+
     # ------------------------------------------------------------- admission
-    def admit(self) -> List[SeqState]:
+    def admit(self, limit: Optional[int] = None) -> List[SeqState]:
         """Fill free slots from the waiting queue while pages last.  Returns
-        the newly admitted sequences; the engine must prefill each before the
-        next decode step."""
+        the newly admitted sequences; the engine must apply each sequence's
+        ``cow_ops`` and prefill ``prompt[cached_len:]`` before the next
+        decode step (and before the next ``admit`` call — an admission may
+        map pages whose contents the pending prefill is about to write)."""
         admitted = []
         for slot in range(self.slots):
+            if limit is not None and len(admitted) >= limit:
+                break
             if self.running[slot] is not None or not self.waiting:
                 continue
             req = self.waiting[0]
-            need = len(req.prompt) + req.max_new
-            if not self.pool.can_alloc(need):
+            if self.pool.pages_for(len(req.prompt) + req.max_new) \
+                    > self.pool.max_pages_per_seq:
+                break       # can never run; surfaces via check_progress
+            res = self.pool.admit_seq(self._next_id, req.prompt)
+            if res is None:
                 break                     # FCFS: no skip-ahead past the head
+            cached_len, cow_ops = res
             self.waiting.popleft()
-            seq = SeqState(req, self._next_id, slot)
-            seed = req.seed if req.seed is not None \
-                else (self.base_seed + seq.seq_id)
-            key = jax.random.PRNGKey(seed)
+            seq = SeqState(req, self._next_id, slot, cached_len=cached_len,
+                           cow_ops=cow_ops)
+            self._next_id += 1
+            # pin the seed at first admission so a preempted request replays
+            # the same sample stream after requeue (its seq_id will differ)
+            if req.seed is None:
+                req.seed = self.base_seed + seq.seq_id
+            key = jax.random.PRNGKey(req.seed)
             if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
                 key = jax.random.key_data(key)      # typed-key impls
             seq.key_data = np.asarray(key, np.uint32)
-            self._next_id += 1
-            self.pool.alloc_seq(seq.seq_id, need)
             self.running[slot] = seq
+            self.prefix_hit_tokens += cached_len
+            self.prompt_tokens += len(req.prompt)
             admitted.append(seq)
         return admitted
 
-    def check_progress(self) -> None:
-        """Deadlock guard: work is queued but nothing runs and nothing fits."""
+    def check_progress(self, growth_stalled: Optional[SeqState] = None) -> None:
+        """Deadlock guard.  Two stall shapes, both fatal:
+
+        *admission stall* — work is queued but nothing runs and the head
+        request cannot fit; *growth stall* — a mid-decode sequence crossed a
+        page boundary with zero free pages and no preemptible victim (it is
+        the only running sequence, so preemption cannot help)."""
+        if growth_stalled is not None:
+            seq = growth_stalled
+            raise MemoryError(
+                f"growth stall: seq {seq.seq_id} at {seq.pos} tokens needs "
+                f"page {seq.pos // self.pool.page_size + 1}; pool has "
+                f"{self.pool.free_pages} free of {self.pool.num_pages - 1} "
+                f"and no preemptible victim (n_running={self.n_running})")
         if self.has_work() and self.n_running == 0:
             req = self.waiting[0]
             need = self.pool.pages_for(len(req.prompt) + req.max_new)
+            prompt_need = self.pool.pages_for(len(req.prompt))
             detail = (f"exceeds the per-seq cap of "
                       f"{self.pool.max_pages_per_seq} pages (max_seq)"
                       if need > self.pool.max_pages_per_seq else
-                      f"pool has {self.pool.free_pages} free of "
+                      f"prompt alone needs {prompt_need} pages; pool has "
+                      f"{self.pool.free_pages} free of "
                       f"{self.pool.num_pages - 1}")
             raise MemoryError(
                 f"request of {len(req.prompt)}+{req.max_new} tokens needs "
                 f"{need} pages; {detail}")
 
+    # ------------------------------------------------------------ capacity
+    def ensure_capacity(self) -> None:
+        """On-demand page growth before a decode step: every running
+        sequence gets the page covering its next write position, preempting
+        the lowest-progress victim when the pool runs dry.  Processing order
+        is descending progress, so the sequences closest to finishing grow
+        first and are never preempted for a younger one."""
+        if not self.pool.has_pages:
+            return
+        order = sorted((s for s in self.running if s is not None),
+                       key=lambda s: -s.pos)
+        for seq in order:
+            if self.running[seq.slot] is not seq:
+                continue                # already preempted this round
+            need = seq.pos // self.pool.page_size + 1
+            while self.pool.seq_page_count(seq.seq_id) < need:
+                if self.pool.grow_seq(seq.seq_id):
+                    continue
+                victim = self._pick_victim(seq)
+                if victim is None:
+                    self.check_progress(growth_stalled=seq)
+                self.preempt(victim)
+                if victim is seq:
+                    break
+
+    def _pick_victim(self, grower: SeqState) -> Optional[SeqState]:
+        """Lowest-progress running sequence (ties -> youngest).  When every
+        other sequence has made at least as much progress, the grower itself
+        is the cheapest recomputation — self-preempt.  None = no victim at
+        all (the grower runs alone): a genuine stall."""
+        others = [s for s in self.running
+                  if s is not None and s is not grower]
+        if not others:
+            return None
+        victim = min(others, key=lambda s: (s.pos, -s.seq_id))
+        return victim if victim.pos < grower.pos else grower
+
+    def preempt(self, victim: SeqState) -> None:
+        """Recycle the victim's pages and requeue it at the head of the line
+        (recomputation-style preemption: partial output is discarded and the
+        pinned seed replays the identical sample stream on re-admission)."""
+        self.pool.free_seq(victim.seq_id)
+        self.running[victim.slot] = None
+        req = victim.req
+        req.out.clear()
+        req.done = False
+        self.waiting.appendleft(req)
+        self.preemptions += 1
+
     # ------------------------------------------------------------ progress
     def record_prefill(self, seq: SeqState, first_token: int) -> None:
-        """Prompt fully in pages; ``first_token`` sampled at the prompt tail."""
+        """Prompt fully in pages; ``first_token`` sampled at the prompt tail.
+        ``add()`` guarantees max_new >= 1, so the appended token can never
+        overshoot the budget."""
         seq.pos = len(seq.req.prompt)
         seq.last_token = first_token
         seq.req.out.append(first_token)
         if len(seq.req.out) >= seq.req.max_new:
             self._finish(seq)
+
+    def register_prefix(self, seq: SeqState) -> None:
+        """Index the sequence's prompt pages — call after its prefill ran
+        (contents valid) and before ``record_prefill`` (which may free the
+        pages of a max_new=1 request)."""
+        self.pool.register_prefix(seq.seq_id, seq.req.prompt)
 
     def state_slot(self, seq: SeqState) -> int:
         """Physical state slot for a running sequence (0 is the null slot)."""

@@ -146,6 +146,17 @@ def build_paged_init_slot(cfg: ModelConfig, kv_bits: int = 4,
     return init_slot
 
 
+def build_paged_copy_page(cfg: ModelConfig, kv_bits: int = 4,
+                          state_bits: int = 8):
+    """Device copy-on-write: duplicate one physical page across every
+    page-bearing adapter sub-state (src/dst are traced scalars, so one
+    compiled program serves every CoW admission)."""
+    def copy_page(pool, src, dst):
+        return M.copy_pool_page(cfg, pool, src, dst, kv_bits=kv_bits,
+                                state_bits=state_bits)
+    return copy_page
+
+
 # --------------------------------------------------------------------------- #
 # ShapeDtypeStruct stand-ins (no allocation) per shape cell
 # --------------------------------------------------------------------------- #

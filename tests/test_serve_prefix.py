@@ -1,0 +1,243 @@
+"""Prefix cache, copy-on-write pages, on-demand growth and preemption.
+
+The two acceptance properties: (1) sharing is invisible — N requests with a
+common prompt prefix produce token-for-token the outputs of the same
+requests served with the index disabled, while hitting the cache and CoW-ing
+the boundary page; (2) refcount conservation — free + owned + shared pages
+always partition the pool under random admit/grow/share/free interleavings.
+Plus the scheduler correctness fixes that ride along: max_new validation,
+stale-Request rejection, and the growth-stall deadlock guard.
+"""
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                     # degraded-env fallback
+    sys.path.insert(0, "tests")
+    from _hyp_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve import (PagedServeEngine, PagePool, PrefixIndex, Request,
+                         TokenScheduler)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama2-7b").reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _shared_requests(cfg, n, sp_len, suf_len, max_new, seed=7):
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, cfg.vocab_size, sp_len)
+    return [Request(prompt=np.concatenate(
+                        [sys_prompt, rng.integers(0, cfg.vocab_size, suf_len)]),
+                    max_new=max_new) for _ in range(n)]
+
+
+# --------------------------------------------------------------------------- #
+# PrefixIndex: trie matching, registration, subtree eviction
+# --------------------------------------------------------------------------- #
+def test_prefix_index_match_register_evict():
+    idx = PrefixIndex(4)
+    # page 7 holds the full chunk (1,2,3,4); page 8 the partial tail (5,6)
+    assert idx.register([1, 2, 3, 4, 5, 6], [7, 8], 6) == 2
+    assert idx.match([1, 2, 3, 4, 5, 6, 9]) == ([7, 8], 6)
+    assert idx.match([1, 2, 3, 4, 9]) == ([7], 4)
+    # partial common prefix against a full node: usable up to the divergence
+    assert idx.match([1, 2, 9, 9, 9]) == ([7], 2)
+    assert idx.match([9, 9]) == ([], 0)
+    # re-registering the same content dedupes (first registrant stays)
+    assert idx.register([1, 2, 3, 4], [11], 4) == 0
+    assert idx.match([1, 2, 3, 4]) == ([7], 4)
+    # a longer partial tail coexists with the shorter one (full page dedupes)
+    assert idx.register([1, 2, 3, 4, 5, 6, 7], [7, 9], 7) == 1
+    assert idx.match([1, 2, 3, 4, 5, 6, 7, 8])[1] == 7
+    # evicting the root page drops its whole subtree
+    dropped = idx.remove(7)
+    assert sorted(dropped) == [7, 8, 9]
+    assert idx.match([1, 2, 3, 4]) == ([], 0)
+    assert len(idx) == 0
+
+
+def test_pool_admission_shares_and_cows(cfg):
+    pool = PagePool(cfg, num_pages=10, page_size=4, max_seq=32, kv_bits=4,
+                    prefix_cache=True)
+    a = np.arange(10)                           # 3 pages: 4 + 4 + 2
+    cached, cow = pool.admit_seq(0, a)
+    assert (cached, cow) == (0, [])             # cold: nothing to share
+    pool.register_prefix(0, a)
+    pages_a = list(pool._owned[0])
+    # same 10 tokens + divergent suffix: 2 full pages shared, tail CoW'd
+    b = np.concatenate([a, [99, 98]])
+    cached, cow = pool.admit_seq(1, b)
+    assert cached == 10
+    assert cow == [(pages_a[2], pool._owned[1][2])]
+    assert pool._owned[1][:2] == pages_a[:2]    # read-only mapping
+    assert pool.shared_pages == 2 and pool.cow_copies == 1
+    # identical prompt: usable capped at len-1 (tail logits must be computed)
+    cached, _ = pool.admit_seq(2, np.array(a))
+    assert cached == 9
+    pool.free_seq(0), pool.free_seq(1), pool.free_seq(2)
+    # unreferenced-but-indexed pages park as cached-free, still allocatable
+    assert pool.free_pages == 9 and len(pool._cached_free) > 0
+    with pytest.raises(KeyError):
+        pool.free_seq(0)                        # double free still raises
+
+
+# --------------------------------------------------------------------------- #
+# Property: refcount conservation under random interleavings
+# --------------------------------------------------------------------------- #
+def _check_conservation(pool):
+    from collections import Counter
+    assert (len(pool._free) + len(pool._cached_free) + len(pool._ref)
+            == pool.num_pages - 1)
+    assert (pool.free_pages + pool.owned_pages + pool.shared_pages
+            == pool.num_pages - 1)
+    # refcounts mirror the owner map exactly, and no page sits in two states
+    counts = Counter(p for pages in pool._owned.values() for p in pages)
+    assert dict(counts) == pool._ref
+    free, cached = set(pool._free), set(pool._cached_free)
+    assert not (free & cached) and not ((free | cached) & set(pool._ref))
+    assert 0 not in free | cached | set(pool._ref)      # null page untouched
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_pool_refcount_conservation(seed):
+    """free + owned + shared == num_pages - 1 after every admit / grow /
+    CoW / preempt / finish, with prompts drawn from a tiny vocab so shared
+    prefixes (and thus refcount bumps + CoW) occur constantly."""
+    import random
+    rng = random.Random(seed)
+    cfg = get_config("llama2-7b").reduced()
+    pool = PagePool(cfg, num_pages=8, page_size=4, max_seq=16, kv_bits=4,
+                    prefix_cache=True)
+    active = {}
+    next_id = 0
+    for _ in range(60):
+        op = rng.choice(["admit", "admit", "grow", "free"])
+        if op == "admit":
+            prompt = [rng.randrange(3) for _ in range(rng.randint(1, 12))]
+            res = pool.admit_seq(next_id, prompt)
+            if res is not None:
+                active[next_id] = prompt
+                if rng.random() < 0.7:
+                    pool.register_prefix(next_id, prompt)
+                next_id += 1
+        elif op == "grow" and active:
+            sid = rng.choice(list(active))
+            if pool.seq_page_count(sid) < pool.max_pages_per_seq:
+                pool.grow_seq(sid)              # False (exhausted) is fine
+        elif op == "free" and active:
+            sid = rng.choice(list(active))
+            pool.free_seq(sid)
+            del active[sid]
+        _check_conservation(pool)
+    for sid in list(active):
+        pool.free_seq(sid)
+    _check_conservation(pool)
+    assert pool.free_pages == pool.num_pages - 1
+    with pytest.raises((KeyError, ValueError)):
+        pool.free_seq(-1)
+
+
+# --------------------------------------------------------------------------- #
+# Scheduler satellite fixes: max_new validation + stale-Request rejection
+# --------------------------------------------------------------------------- #
+def test_add_rejects_max_new_zero_and_stale_requests(cfg):
+    pool = PagePool(cfg, num_pages=4, page_size=4, max_seq=16, kv_bits=4)
+    sched = TokenScheduler(pool, slots=1)
+    with pytest.raises(ValueError, match="max_new"):
+        sched.add([Request(prompt=np.arange(4), max_new=0)])
+    with pytest.raises(ValueError, match="max_new"):
+        sched.add([Request(prompt=np.arange(4), max_new=-3)])
+    done_req = Request(prompt=np.arange(4), max_new=2, done=True)
+    with pytest.raises(ValueError, match="already served"):
+        sched.add([done_req])
+    stale = Request(prompt=np.arange(4), max_new=2, out=[5, 6])
+    with pytest.raises(ValueError, match="already served"):
+        sched.add([stale])
+    assert not sched.waiting                    # nothing half-enqueued
+    sched.add([Request(prompt=np.arange(4), max_new=1)])   # boundary: valid
+    assert len(sched.waiting) == 1
+
+
+# --------------------------------------------------------------------------- #
+# Shared-prefix parity: sharing is an optimization, never a behaviour change
+# --------------------------------------------------------------------------- #
+def test_shared_prefix_parity_token_for_token(cfg, params):
+    """5 requests sharing an 18-token system prompt over 2 slots: outputs
+    must equal the prefix-cache-off run exactly, with a nonzero hit rate, at
+    least one CoW copy (the prefix ends mid-page) and fewer prefilled
+    tokens."""
+    kw = dict(batch_slots=2, max_seq=32, page_size=8, kv_bits=4)
+    mk = lambda: _shared_requests(cfg, 5, sp_len=18, suf_len=3, max_new=6)
+    off = PagedServeEngine(cfg, params, prefix_cache=False, **kw)
+    off_reqs, off_stats = off.generate(mk())
+    on = PagedServeEngine(cfg, params, prefix_cache=True, **kw)
+    on_reqs, on_stats = on.generate(mk())
+    assert all(r.done for r in on_reqs)
+    for i, (r_on, r_off) in enumerate(zip(on_reqs, off_reqs)):
+        assert r_on.out == r_off.out, f"request {i} diverged under sharing"
+    assert on_stats["prefix_hit_rate"] > 0
+    assert on_stats["cow_copies"] >= 1
+    assert on_stats["prefill_tokens"] < off_stats["prefill_tokens"]
+    assert off_stats["prefix_hit_tokens"] == 0  # the baseline really is off
+
+
+def test_prefix_cache_disabled_for_recurrent_state():
+    """SSM/hybrid families must not skip prefill (slot state is recomputed
+    from the full prompt): the index stays off even when requested."""
+    for arch in ("mamba2-370m", "zamba2-7b"):
+        pool = PagePool(get_config(arch).reduced(), num_pages=4, page_size=4,
+                        max_seq=16, n_slots=2, prefix_cache=True)
+        assert pool.prefix is None
+
+
+# --------------------------------------------------------------------------- #
+# On-demand growth: preemption-with-requeue + the growth-stall guard
+# --------------------------------------------------------------------------- #
+def test_preemption_requeue_completes_overcommitted_workload(cfg, params):
+    """Pool sized to one full prompt + a CoW page + one growth page: two
+    slots cannot both grow, so the younger sequence is preempted, requeued
+    and replayed — and every output still matches a roomy no-sharing run.
+    Reserve-at-admission could never run these two concurrently at all."""
+    sp_len, suf_len, max_new, page = 20, 4, 8, 8
+    mk = lambda: _shared_requests(cfg, 4, sp_len, suf_len, max_new, seed=11)
+    roomy = PagedServeEngine(cfg, params, batch_slots=2, max_seq=32,
+                             page_size=page, kv_bits=4, prefix_cache=False)
+    ref_reqs, _ = roomy.generate(mk())
+    num_pages = -(-(sp_len + suf_len) // page) + 3          # 5 usable
+    tight = PagedServeEngine(cfg, params, batch_slots=2, max_seq=32,
+                             page_size=page, kv_bits=4, prefix_cache=True,
+                             num_pages=num_pages)
+    # over-committed by reserve-at-admission standards: two concurrent
+    # full reservations can never fit this pool
+    full = tight.pool.pages_for(sp_len + suf_len + max_new)
+    assert 2 * full > num_pages - 1
+    reqs, stats = tight.generate(mk())
+    assert all(r.done for r in reqs)
+    assert stats["preemptions"] >= 1
+    for i, (r, ref) in enumerate(zip(reqs, ref_reqs)):
+        assert r.out == ref.out, f"request {i} diverged after preemption"
+
+
+def test_growth_stall_raises_not_deadlocks(cfg, params):
+    """A lone mid-decode sequence that crosses a page boundary with zero
+    free pages has no preemptible victim: loud MemoryError (the extended
+    check_progress guard), not an infinite decode loop."""
+    eng = PagedServeEngine(cfg, params, batch_slots=1, max_seq=32,
+                           page_size=8, num_pages=3, kv_bits=4)
+    reqs = [Request(prompt=np.arange(8) % cfg.vocab_size, max_new=24)]
+    with pytest.raises(MemoryError, match="growth stall"):
+        eng.generate(reqs)
