@@ -86,6 +86,11 @@ def run(smoke: bool = False) -> list:
                  stats["decode_tok_per_s"], "tok_per_s"))
     rows.append((f"serve,paged_prefill,{tag}",
                  stats["prefill_tok_per_s"], "tok_per_s"))
+    # latency distributions from the engine's registry histograms (warm +
+    # cold runs both contribute; the p99 carries the compile)
+    for q in (50, 95, 99):
+        rows.append((f"serve,ttft_p{q},{tag}", stats[f"ttft_p{q}"], "s"))
+        rows.append((f"serve,itl_p{q},{tag}", stats[f"itl_p{q}"], "s"))
     rows.append((f"serve,kv_bytes_paged,{tag}", stats["kv_cache_bytes"], "B"))
     rows.append((f"serve,kv_bytes_dense_est,{tag}",
                  stats["kv_cache_bytes_dense"], "B"))

@@ -13,15 +13,34 @@ pages, SSM (mamba2) and hybrid (zamba2) on int8 state slots — one token-level
 continuous-batching scheduler for all of them (swap --arch below to try one;
 the legacy lockstep engine survives only for encoder-decoder models).
 
+Both steps write observability artifacts (``repro.obs``): the quantize pass
+snapshots per-site calibration losses + QDQ health, the serve pass snapshots
+TTFT/ITL histograms, page occupancy and prefix-cache counters — the metrics
+summary printed at the end comes straight from those Prometheus textfiles.
+
     PYTHONPATH=src python examples/serve_quantized.py
 """
+import os
 import tempfile
 
 from repro.launch.quantize import main as quantize
 from repro.launch.serve import main as serve
 
 with tempfile.TemporaryDirectory() as artifact_dir:
+    calib_prom = os.path.join(artifact_dir, "calibrate.prom")
+    serve_prom = os.path.join(artifact_dir, "serve.prom")
     quantize(["--arch", "llama2-7b", "--steps", "20", "--a-bits", "8",
-              "--kv-bits", "4", "--out", artifact_dir])
+              "--kv-bits", "4", "--out", artifact_dir,
+              "--metrics-out", calib_prom])
     serve(["--artifact", artifact_dir, "--requests", "8", "--slots", "4",
-           "--prompt-len", "12", "--max-new", "12", "--page-size", "8"])
+           "--prompt-len", "12", "--max-new", "12", "--page-size", "8",
+           "--metrics-out", serve_prom])
+
+    print("\n--- metrics snapshot (Prometheus textfile excerpts) ---")
+    for label, path in (("quantize", calib_prom), ("serve", serve_prom)):
+        with open(path) as f:
+            lines = [ln.rstrip() for ln in f
+                     if not ln.startswith("#") and "_bucket" not in ln]
+        print(f"[{label}] {len(lines)} series:")
+        for ln in lines:
+            print(f"  {ln}")

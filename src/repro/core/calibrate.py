@@ -37,7 +37,8 @@ def calibrate_rotation(x: jax.Array, n: int, key, objective: str = "whip",
                        callback: Optional[Callable] = None,
                        orth: str = "cholqr",
                        return_history: bool = False, mesh=None,
-                       compressed_grads: bool = False):
+                       compressed_grads: bool = False,
+                       obs=None, site: Optional[str] = None):
     """Optimize one rotation on captured activations x [N, n].
 
     Returns the rotation, or ``(rotation, loss_history)`` when
@@ -48,11 +49,13 @@ def calibrate_rotation(x: jax.Array, n: int, key, objective: str = "whip",
     z0 = random_hadamard(n, key)           # paper App. K: Hadamard init
     if method == "cayley":
         res = calibrate_scan(x, z0, obj, method="cayley", steps=steps, lr=lr,
-                             mesh=mesh, compressed_grads=compressed_grads)
+                             mesh=mesh, compressed_grads=compressed_grads,
+                             obs=obs, site=site)
     else:
         res = calibrate_scan(x, z0, obj, method="qr", optimizer=optimizer,
                              steps=steps, lr=lr, orth=orth, mesh=mesh,
-                             compressed_grads=compressed_grads)
+                             compressed_grads=compressed_grads,
+                             obs=obs, site=site)
     if callback is not None:
         qr_orth._replay(callback, res, res.rotation)
     if return_history:
@@ -65,7 +68,8 @@ def calibrate_rotations(xs: jax.Array, n: int, key,
                         optimizer: str = "sgd", steps: int = 100,
                         lr: float = 5e-2, orth: str = "cholqr",
                         return_history: bool = False, mesh=None,
-                        compressed_grads: bool = False):
+                        compressed_grads: bool = False,
+                        obs=None, site: Optional[str] = None):
     """Optimize all L sites of xs [L, N, n] in one compiled vmapped scan.
 
     Per-site inits use ``jax.random.split(key, L)`` — identical to the serial
@@ -79,7 +83,8 @@ def calibrate_rotations(xs: jax.Array, n: int, key,
     z0s = jnp.stack([random_hadamard(n, k) for k in layer_keys])
     res = qr_orth.calibrate_rotations_batched(
         xs, z0s, obj, method=method, optimizer=optimizer, steps=steps, lr=lr,
-        orth=orth, mesh=mesh, compressed_grads=compressed_grads)
+        orth=orth, mesh=mesh, compressed_grads=compressed_grads,
+        obs=obs, site=site)
     if return_history:
         return res.rotation, res.loss_history
     return res.rotation
@@ -97,7 +102,7 @@ def calibrate_model(cfg: ModelConfig, params: dict, tokens: jax.Array,
                     use_r2: bool = True, r2_batched: bool = True,
                     verbose: bool = False,
                     history_out: Optional[dict] = None, mesh=None,
-                    compressed_grads: bool = False) -> Dict:
+                    compressed_grads: bool = False, obs=None) -> Dict:
     """Full DartQuant calibration: returns a rotation pack for fuse_rotations.
 
     All per-layer R2 sites are optimized in one compiled call (vmapped scan)
@@ -112,9 +117,15 @@ def calibrate_model(cfg: ModelConfig, params: dict, tokens: jax.Array,
     # rotation inits (R1's Hadamard init used to share the raw key with
     # capture's sampler)
     k_cap, k_rot = jax.random.split(key)
-    t0 = time.time()
+    t0 = time.perf_counter()
     acts = capture_activations(cfg, params, tokens, frames=frames,
                                sample_frac=sample_frac, key=k_cap, mesh=mesh)
+    if obs is not None:
+        jax.block_until_ready(acts)
+        obs.metrics.gauge(
+            "calib_capture_seconds",
+            help="activation capture + token sampling wall time").set(
+                time.perf_counter() - t0)
     ks = iter(jax.random.split(k_rot, 64))
     pack: Dict = {}
 
@@ -126,14 +137,15 @@ def calibrate_model(cfg: ModelConfig, params: dict, tokens: jax.Array,
         pack["r1"], h = calibrate_rotation(
             acts["r1"], cfg.d_model, next(ks), objective=objective,
             method=method, optimizer=optimizer, steps=steps, lr=lr_r1,
-            return_history=True, mesh=mesh, compressed_grads=compressed_grads)
+            return_history=True, mesh=mesh, compressed_grads=compressed_grads,
+            obs=obs, site="r1")
         record("r1", h)
         if "r1_enc" in acts:
             pack["r1_enc"], h = calibrate_rotation(
                 acts["r1_enc"], cfg.d_model, next(ks), objective=objective,
                 method=method, optimizer=optimizer, steps=steps, lr=lr_r1,
                 return_history=True, mesh=mesh,
-                compressed_grads=compressed_grads)
+                compressed_grads=compressed_grads, obs=obs, site="r1_enc")
             record("r1_enc", h)
     if use_r2 and "r2" in acts:
         hd = _r2_dim(cfg)
@@ -144,7 +156,8 @@ def calibrate_model(cfg: ModelConfig, params: dict, tokens: jax.Array,
                 pooled, hd, next(ks), objective=objective, method=method,
                 optimizer=optimizer, steps=steps, lr=lr_r2,
                 return_history=True, mesh=mesh,
-                compressed_grads=compressed_grads)
+                compressed_grads=compressed_grads, obs=obs,
+                site="r2_shared")
             record("r2_shared", h)
         else:
             k_r2 = next(ks)
@@ -153,7 +166,7 @@ def calibrate_model(cfg: ModelConfig, params: dict, tokens: jax.Array,
                     acts["r2"], hd, k_r2, objective=objective, method=method,
                     optimizer=optimizer, steps=steps, lr=lr_r2,
                     return_history=True, mesh=mesh,
-                    compressed_grads=compressed_grads)
+                    compressed_grads=compressed_grads, obs=obs, site="r2")
                 record("r2", h)
             else:
                 layer_keys = jax.random.split(k_r2, acts["r2"].shape[0])
@@ -163,15 +176,20 @@ def calibrate_model(cfg: ModelConfig, params: dict, tokens: jax.Array,
                         acts["r2"][i], hd, layer_keys[i], objective=objective,
                         method=method, optimizer=optimizer, steps=steps,
                         lr=lr_r2, return_history=True, mesh=mesh,
-                        compressed_grads=compressed_grads)
+                        compressed_grads=compressed_grads, obs=obs,
+                        site=f"r2[{i}]")
                     r2_list.append(r)
                     h_list.append(h)
                 pack["r2"] = jnp.stack(r2_list, axis=0)
                 record("r2", jnp.stack(h_list, axis=0))
     pack["r4"] = True
+    dt = time.perf_counter() - t0
+    if obs is not None:
+        obs.metrics.gauge(
+            "calib_total_seconds",
+            help="capture + all rotation sites wall time").set(dt)
     if verbose:
-        print(f"calibration done in {time.time() - t0:.1f}s "
-              f"(sites: {list(pack)})")
+        print(f"calibration done in {dt:.1f}s (sites: {list(pack)})")
     return pack
 
 

@@ -357,7 +357,8 @@ def calibrate_scan(x: jax.Array, z0: jax.Array, objective: Callable, *,
                    method: str = "qr", optimizer: str = "sgd",
                    steps: int = 100, lr: float = 2e-3, orth: str = "cholqr",
                    metrics=(), mesh=None, data_axes=None,
-                   compressed_grads: bool = False) -> CalibResult:
+                   compressed_grads: bool = False,
+                   obs=None, site: Optional[str] = None) -> CalibResult:
     """Fully-jitted calibration of one rotation site.
 
     x [N, n] activations, z0 [n, n] latent init (rotation init for Cayley).
@@ -369,6 +370,10 @@ def calibrate_scan(x: jax.Array, z0: jax.Array, objective: Callable, *,
     bf16/fp16 activations); the rotation is cast to ``x.dtype`` only at the
     ``x @ R`` product.
 
+    With ``obs=`` (a ``repro.obs.Obs``) the loss/metric histories stream
+    into its registry under ``site=`` labels (plus one ``calib_site`` span
+    when tracing); ``obs=None`` publishes nothing.
+
     With ``mesh=``, the token axis shards over the mesh's data group
     (``data_axes`` overrides which axes; default = every non-'model' axis)
     and loss/gradient psum per step — see "Token-sharded calibration" in the
@@ -377,14 +382,20 @@ def calibrate_scan(x: jax.Array, z0: jax.Array, objective: Callable, *,
     """
     lr_a = jnp.asarray(lr, z0.dtype)
     if mesh is None:
-        return _scan_one(x, z0, lr_a, objective, method, optimizer, steps,
-                         orth, _norm_metrics(metrics))
-    axes = tuple(data_axes) if data_axes else calib_data_axes(mesh)
-    x, w, n_valid = _pad_tokens(x, calib_group_size(mesh, axes), axis=0)
-    x, w, z0, lr_a = _place_sharded(mesh, axes, x, w, z0, lr_a)
-    return _scan_one_sharded(x, w, z0, lr_a, objective, method, optimizer,
-                             steps, orth, _norm_metrics(metrics), mesh, axes,
-                             n_valid, bool(compressed_grads))
+        res = _scan_one(x, z0, lr_a, objective, method, optimizer, steps,
+                        orth, _norm_metrics(metrics))
+    else:
+        axes = tuple(data_axes) if data_axes else calib_data_axes(mesh)
+        x, w, n_valid = _pad_tokens(x, calib_group_size(mesh, axes), axis=0)
+        x, w, z0, lr_a = _place_sharded(mesh, axes, x, w, z0, lr_a)
+        res = _scan_one_sharded(x, w, z0, lr_a, objective, method, optimizer,
+                                steps, orth, _norm_metrics(metrics), mesh,
+                                axes, n_valid, bool(compressed_grads))
+    if obs is not None:
+        from repro.obs import record_calibration
+        record_calibration(obs, site or "rotation", res.loss_history,
+                           aux=res.aux)
+    return res
 
 
 def calibrate_rotations_batched(xs: jax.Array, z0s: jax.Array,
@@ -392,7 +403,9 @@ def calibrate_rotations_batched(xs: jax.Array, z0s: jax.Array,
                                 optimizer: str = "sgd", steps: int = 100,
                                 lr: float = 2e-3, orth: str = "cholqr",
                                 metrics=(), mesh=None, data_axes=None,
-                                compressed_grads: bool = False) -> CalibResult:
+                                compressed_grads: bool = False,
+                                obs=None,
+                                site: Optional[str] = None) -> CalibResult:
     """Optimize all L sites of xs [L, N, n] in ONE compiled vmapped scan.
 
     Replaces ``calibrate_model``'s serial per-layer R2 loop: one jit entry,
@@ -406,15 +419,21 @@ def calibrate_rotations_batched(xs: jax.Array, z0s: jax.Array,
         (xs.shape, z0s.shape)
     lr_a = jnp.asarray(lr, z0s.dtype)
     if mesh is None:
-        return _scan_batched(xs, z0s, lr_a, objective, method, optimizer,
-                             steps, orth, _norm_metrics(metrics))
-    axes = tuple(data_axes) if data_axes else calib_data_axes(mesh)
-    xs, w, n_valid = _pad_tokens(xs, calib_group_size(mesh, axes), axis=1)
-    xs, w, z0s, lr_a = _place_sharded(mesh, axes, xs, w, z0s, lr_a)
-    return _scan_batched_sharded(xs, w, z0s, lr_a, objective, method,
-                                 optimizer, steps, orth,
-                                 _norm_metrics(metrics), mesh, axes, n_valid,
-                                 bool(compressed_grads))
+        res = _scan_batched(xs, z0s, lr_a, objective, method, optimizer,
+                            steps, orth, _norm_metrics(metrics))
+    else:
+        axes = tuple(data_axes) if data_axes else calib_data_axes(mesh)
+        xs, w, n_valid = _pad_tokens(xs, calib_group_size(mesh, axes), axis=1)
+        xs, w, z0s, lr_a = _place_sharded(mesh, axes, xs, w, z0s, lr_a)
+        res = _scan_batched_sharded(xs, w, z0s, lr_a, objective, method,
+                                    optimizer, steps, orth,
+                                    _norm_metrics(metrics), mesh, axes,
+                                    n_valid, bool(compressed_grads))
+    if obs is not None:
+        from repro.obs import record_calibration
+        record_calibration(obs, site or "rotation", res.loss_history,
+                           aux=res.aux)
+    return res
 
 
 # --------------------------------------------------------------------------- #

@@ -6,6 +6,13 @@
 Loads/initializes a model (reduced config on CPU), captures activations on a
 calibration batch, optimizes R1/R2 with QR-Orth+Whip, fuses rotations, applies
 RTN/GPTQ weight quant, and reports before/after quant quality.
+
+Observability: ``--metrics-out metrics.prom`` snapshots per-site loss
+gauges and quantization-health histograms (clip rate, scale dynamic range —
+sampled at the QDQ hooks while quantizing); ``--trace-out span.jsonl``
+writes one ``calib_site`` span per rotation site with the full loss history;
+``--profile-dir d/`` captures a ``jax.profiler`` device trace of the
+calibration scans.
 """
 from __future__ import annotations
 
@@ -19,6 +26,8 @@ from repro.configs import get_config
 from repro.core import calibrate_model, fuse_rotations, random_pack
 from repro.data.pipeline import calibration_batch, batches
 from repro.models import model as M
+from repro.obs import JsonlSink, Obs, Tracer
+from repro.obs import quant_health
 from repro.quant import act_quant as act_quant_ctx, fake_quant_act, \
     quantize_params
 
@@ -61,7 +70,17 @@ def main(argv=None):
                     help="int8+error-feedback payload for the sharded "
                          "gradient psum (needs --mesh)")
     ap.add_argument("--ckpt", default=None, help="params checkpoint to load")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write calib_site spans (JSONL) here")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a Prometheus metrics snapshot here (also "
+                         "arms the QDQ quant-health taps)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace")
     args = ap.parse_args(argv)
+
+    tracer = Tracer(JsonlSink(args.trace_out)) if args.trace_out else None
+    obs = Obs(tracer=tracer, profile_dir=args.profile_dir)
 
     mesh = None
     if args.mesh:
@@ -88,12 +107,17 @@ def main(argv=None):
 
     t0 = time.time()
     histories = {}
-    pack = calibrate_model(cfg, params, calib, key=key,
-                           objective=args.objective, method=args.method,
-                           optimizer=args.optimizer, steps=args.steps,
-                           r2_batched=not args.serial_r2,
-                           history_out=histories, verbose=True, mesh=mesh,
-                           compressed_grads=args.compressed_grads)
+    obs.start_profile()
+    try:
+        pack = calibrate_model(cfg, params, calib, key=key,
+                               objective=args.objective, method=args.method,
+                               optimizer=args.optimizer, steps=args.steps,
+                               r2_batched=not args.serial_r2,
+                               history_out=histories, verbose=True, mesh=mesh,
+                               compressed_grads=args.compressed_grads,
+                               obs=obs)
+    finally:
+        obs.stop_profile()
     for site, h in histories.items():
         h = jnp.asarray(h)
         first, last = h[..., 0], h[..., -1]
@@ -103,7 +127,15 @@ def main(argv=None):
     fcfg, fused = fuse_rotations(cfg, params, pack)
     from repro.core.rotations import online_hadamard
     rot = {"r4": online_hadamard}
-    ppl_dart = eval_ppl(fcfg, quantize_params(fcfg, fused), toks, labels,
+    if args.metrics_out:
+        # arm the QDQ taps so the calibrated quantization pass reports
+        # clip-rate / scale-dynamic-range health into the same registry
+        with quant_health.sampling(obs.metrics):
+            qparams = quantize_params(fcfg, fused)
+            jax.block_until_ready(qparams)
+    else:
+        qparams = quantize_params(fcfg, fused)
+    ppl_dart = eval_ppl(fcfg, qparams, toks, labels,
                         a_bits=args.a_bits, rot=rot)
 
     hcfg, hfused = fuse_rotations(cfg, params, random_pack(cfg, key))
@@ -116,6 +148,13 @@ def main(argv=None):
     print(f"  QuaRot(Hadamard): {ppl_had:.3f}")
     print(f"  DartQuant      : {ppl_dart:.3f}  "
           f"(calibrated in {time.time()-t0:.1f}s)")
+
+    if args.metrics_out:
+        obs.metrics.write_prom(args.metrics_out)
+        print(f"[calibrate] metrics snapshot -> {args.metrics_out}")
+    if args.trace_out:
+        print(f"[calibrate] span log -> {args.trace_out}")
+    obs.close()
 
 
 if __name__ == "__main__":

@@ -20,6 +20,8 @@ from repro.configs import get_config
 from repro.core import calibrate_model, fuse_rotations, random_pack
 from repro.data.pipeline import calibration_batch
 from repro.models import model as M
+from repro.obs import JsonlSink, Obs, Tracer
+from repro.obs import quant_health
 from repro.quant import memory_bytes, pack_params, projection_weight_bytes
 
 
@@ -44,7 +46,17 @@ def main(argv=None):
                          "latents replicate — see repro.launch.calibrate")
     ap.add_argument("--full", action="store_true",
                     help="use the full config instead of the reduced smoke one")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write calib_site spans (JSONL) here")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a Prometheus metrics snapshot here (also "
+                         "arms the QDQ quant-health taps during packing)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace")
     args = ap.parse_args(argv)
+
+    tracer = Tracer(JsonlSink(args.trace_out)) if args.trace_out else None
+    obs = Obs(tracer=tracer, profile_dir=args.profile_dir)
 
     mesh = None
     if args.mesh:
@@ -61,17 +73,28 @@ def main(argv=None):
     params = M.init_params(cfg, key)
 
     t0 = time.time()
-    if args.rotation == "dart":
-        calib = jnp.asarray(calibration_batch(cfg, args.calib_seqs,
-                                              args.calib_len))
-        pack = calibrate_model(cfg, params, calib, key=key, steps=args.steps,
-                               mesh=mesh)
-    else:
-        pack = random_pack(cfg, key)
-    cfg, params = fuse_rotations(cfg, params, pack)
-    calib_s = time.time() - t0
+    obs.start_profile()
+    try:
+        if args.rotation == "dart":
+            calib = jnp.asarray(calibration_batch(cfg, args.calib_seqs,
+                                                  args.calib_len))
+            pack = calibrate_model(cfg, params, calib, key=key,
+                                   steps=args.steps, mesh=mesh, obs=obs)
+        else:
+            pack = random_pack(cfg, key)
+        cfg, params = fuse_rotations(cfg, params, pack)
+        calib_s = time.time() - t0
 
-    packed = pack_params(cfg, params)
+        if args.metrics_out:
+            # arm the QDQ taps: packing quantizes every projection weight,
+            # so the snapshot carries clip-rate / dynamic-range health
+            with quant_health.sampling(obs.metrics):
+                packed = pack_params(cfg, params)
+                jax.block_until_ready(packed)
+        else:
+            packed = pack_params(cfg, params)
+    finally:
+        obs.stop_profile()
     art = QuantArtifact(
         cfg=cfg, params=packed, rotations=rotation_spec(pack),
         meta={"arch": args.arch, "rotation": args.rotation,
@@ -85,6 +108,12 @@ def main(argv=None):
     print(f"[quantize] artifact -> {args.out}  "
           f"total {memory_bytes(packed)} B; projection weights {proj} B "
           f"({proj / max(proj_fp16, 1):.2f}x of fp16)")
+    if args.metrics_out:
+        obs.metrics.write_prom(args.metrics_out)
+        print(f"[quantize] metrics snapshot -> {args.metrics_out}")
+    if args.trace_out:
+        print(f"[quantize] span log -> {args.trace_out}")
+    obs.close()
     return art
 
 

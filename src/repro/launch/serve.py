@@ -22,6 +22,14 @@ only for encoder-decoder models (whisper); for everything else the legacy
 
 Sampling is per request: greedy by default; ``--temperature``/``--top-k``
 (with ``--seed``) enable stochastic decoding with a per-request PRNG key.
+
+Observability (``repro.obs``): ``--trace-out span.jsonl`` writes the
+per-request lifecycle span log, ``--metrics-out metrics.prom`` a Prometheus
+textfile snapshot (TTFT/ITL histograms, page occupancy, prefix-cache and
+preemption counters), ``--profile-dir d/`` a ``jax.profiler`` device trace
+viewable in TensorBoard/Perfetto.  All three default off; the disabled path
+serves bit-identical tokens.  Validate the artifacts with
+``python -m repro.obs.validate --trace span.jsonl --metrics metrics.prom``.
 """
 from __future__ import annotations
 
@@ -33,6 +41,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import model as M
+from repro.obs import JsonlSink, Obs, Tracer
 from repro.serve import PagedServeEngine, Request, ServeEngine
 
 
@@ -81,6 +90,13 @@ def main(argv=None):
                     help="re-serve the same requests with the prefix cache "
                          "off and assert token-for-token parity, a nonzero "
                          "hit rate and fewer prefilled tokens (CI smoke)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the request-lifecycle span log (JSONL) here")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a Prometheus textfile metrics snapshot here")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace into this "
+                         "directory (TensorBoard/Perfetto)")
     ap.add_argument("--no-quant", action="store_true")
     ap.add_argument("--qdq", action="store_true",
                     help="serve fake-quant (QDQ) fp weights instead of "
@@ -108,6 +124,11 @@ def main(argv=None):
     eng_kw = dict(batch_slots=args.slots, max_seq=max_seq)
     base_seed = 0 if args.seed is None else args.seed
 
+    # one Obs for the primary engine; the parity baseline below gets its own
+    # default Obs so its runs never pollute the traced artifacts
+    tracer = Tracer(JsonlSink(args.trace_out)) if args.trace_out else None
+    obs = Obs(tracer=tracer, profile_dir=args.profile_dir)
+
     if args.artifact:
         # cold boot: packed weights + rotation metadata from disk; zero calls
         # into core.calibrate/core.qr_orth
@@ -115,19 +136,19 @@ def main(argv=None):
         art = load_artifact(args.artifact)
         cfg = art.cfg
 
-        def build(prefix_cache: bool):
+        def build(prefix_cache: bool, obs=None):
             if _use_paged(args, cfg):
                 return PagedServeEngine.from_artifact(
                     art, page_size=args.page_size, base_seed=base_seed,
-                    prefix_cache=prefix_cache, **eng_kw)
+                    prefix_cache=prefix_cache, obs=obs, **eng_kw)
             # the wrapper forwards decoder-only families to the paged engine,
             # so sampling/paging flags must flow through it too
             return ServeEngine.from_artifact(
-                art, page_size=args.page_size,
+                art, page_size=args.page_size, obs=obs,
                 **(dict(base_seed=base_seed, prefix_cache=prefix_cache,
                         **eng_kw)
                    if M.supports_paged(cfg) else eng_kw))
-        eng = build(not args.no_prefix_cache)
+        eng = build(not args.no_prefix_cache, obs=obs)
         print(f"[serve] cold boot from {args.artifact} "
               f"(rotations: {art.rotations}, meta: {art.meta})")
     else:
@@ -155,21 +176,22 @@ def main(argv=None):
             print(f"calibrated + quantized (W4 "
                   f"{'QDQ' if args.qdq else 'packed'}, rotations fused)")
 
-        def build(prefix_cache: bool):
+        def build(prefix_cache: bool, obs=None):
             if _use_paged(args, cfg):
                 return PagedServeEngine(cfg, params, rot=rot,
                                         page_size=args.page_size,
                                         a_bits=args.a_bits,
                                         kv_bits=args.kv_bits,
                                         base_seed=base_seed,
-                                        prefix_cache=prefix_cache, **eng_kw)
+                                        prefix_cache=prefix_cache, obs=obs,
+                                        **eng_kw)
             return ServeEngine(cfg, params, rot=rot, a_bits=args.a_bits,
                                kv_bits=args.kv_bits,
-                               page_size=args.page_size,
+                               page_size=args.page_size, obs=obs,
                                **(dict(base_seed=base_seed,
                                        prefix_cache=prefix_cache, **eng_kw)
                                   if M.supports_paged(cfg) else eng_kw))
-        eng = build(not args.no_prefix_cache)
+        eng = build(not args.no_prefix_cache, obs=obs)
 
     def make_requests():
         rng = np.random.default_rng(0)
@@ -186,7 +208,11 @@ def main(argv=None):
                         top_k=args.top_k)
                 for _ in range(args.requests)]
 
-    reqs, stats = eng.generate(make_requests(), verbose=True)
+    obs.start_profile()
+    try:
+        reqs, stats = eng.generate(make_requests(), verbose=True)
+    finally:
+        obs.stop_profile()
     done = sum(r.done for r in reqs)
     print(f"[{type(eng).__name__}] served {done}/{len(reqs)} requests; "
           f"{stats['decode_tok_per_s']:.1f} tok/s decode; "
@@ -212,6 +238,13 @@ def main(argv=None):
         print(f"[serve] prefix parity OK: {len(reqs)} requests identical "
               f"with the cache off; prefill tokens "
               f"{stats['prefill_tokens']} vs {base_stats['prefill_tokens']}")
+
+    if args.metrics_out:
+        obs.metrics.write_prom(args.metrics_out)
+        print(f"[serve] metrics snapshot -> {args.metrics_out}")
+    if args.trace_out:
+        print(f"[serve] span log -> {args.trace_out}")
+    obs.close()
     return reqs, stats
 
 

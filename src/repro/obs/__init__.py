@@ -1,0 +1,32 @@
+"""``repro.obs`` — structured tracing + metrics across serve and calibration.
+
+  * ``MetricsRegistry`` (``metrics.py``): zero-dependency counters / gauges /
+    fixed-bucket histograms with percentile math; Prometheus textfile
+    snapshots via ``write_prom``.
+  * ``Tracer`` (``trace.py``): per-request lifecycle span events
+    (enqueue -> admit -> prefill_chunk* -> decode_step* -> preempt ->
+    finish) as JSONL through a pluggable sink.
+  * ``Obs`` (``obs.py``): the bundle the serve/calibration stacks carry —
+    always-on metrics, opt-in tracing, opt-in ``jax.profiler`` annotation.
+  * ``quant_health``: trace-time-gated QDQ taps (clip rate, scale dynamic
+    range) publishing through ``jax.debug.callback``.
+  * ``validate``: CLI checker for ``--trace-out`` / ``--metrics-out``
+    artifacts (the CI smoke's parser).
+
+The contract that everything here honors: the **disabled path is a no-op** —
+no host sync, no callback into jitted code, no event assembly.  Metrics
+counters are plain host ints and stay on unconditionally.
+"""
+from repro.obs.metrics import (Counter, DEFAULT_LATENCY_BUCKETS, Gauge,
+                               Histogram, MetricsRegistry)
+from repro.obs.obs import Obs, record_calibration
+from repro.obs.trace import (EVENT_FIELDS, EVENT_TYPES, JsonlSink, ListSink,
+                             Tracer, read_trace, validate_trace)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "DEFAULT_LATENCY_BUCKETS",
+    "Obs", "record_calibration",
+    "Tracer", "JsonlSink", "ListSink", "read_trace", "validate_trace",
+    "EVENT_TYPES", "EVENT_FIELDS",
+]

@@ -1,0 +1,264 @@
+"""Zero-dependency metrics registry: counters, gauges, histograms.
+
+One ``MetricsRegistry`` is the single metrics surface of a serve engine or a
+calibration run: the scheduler's admission/preemption counters, the page
+pool's occupancy gauges, the engines' step-timing histograms and the
+calibration engine's per-site loss gauges all publish here.  Everything is
+plain host-side Python arithmetic — no device work, no host sync, no
+dependency beyond the standard library — so collection is always on and
+effectively free; only *tracing* (``repro.obs.trace``) and *profiling*
+(``repro.obs.obs``) are opt-in.
+
+Metric families follow the Prometheus data model:
+
+  Counter     monotone float; ``inc(n)``.  Cumulative over the registry's
+              lifetime — per-call deltas are the caller's job (the scheduler
+              snapshots at construction for its ``counters()`` compat view).
+  Gauge       last-write value via ``set(v)``, or a live callable via
+              ``set_fn(fn)`` (evaluated at render/snapshot time — used for
+              page-pool occupancy and queue depth, which would otherwise
+              need a write on every mutation).
+  Histogram   fixed bucket boundaries chosen at creation; ``observe(v)``
+              updates bucket counts, sum, count, exact min/max.  Percentiles
+              (``percentile(q)``) interpolate linearly inside the selected
+              bucket, with the exact observed min/max clamping the open-ended
+              edge buckets — so p50/p95/p99 TTFT and inter-token latency come
+              straight from the registry with bounded error (one bucket
+              width), no sample retention.
+
+Metrics are keyed by ``(name, labels)``; re-requesting an existing key
+returns the same object (the idiomatic ``registry.counter("x").inc()`` call
+sites need no pre-registration), and a name can only ever hold one metric
+type.  ``render_prom()`` emits the Prometheus text exposition format —
+``write_prom(path)`` is the textfile-collector snapshot the launch CLIs
+write behind ``--metrics-out``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, Iterable, Optional, Tuple
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "DEFAULT_LATENCY_BUCKETS",
+]
+
+# log-spaced 100us .. 60s: covers a fused decode step on a TPU through a
+# cold-compile prefill on the CPU CI box
+DEFAULT_LATENCY_BUCKETS: Tuple[float, ...] = (
+    1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2,
+    0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0)
+
+Labels = Tuple[Tuple[str, str], ...]
+
+
+def _labels_key(labels: Optional[dict]) -> Labels:
+    if not labels:
+        return ()
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+def _fmt_labels(labels: Labels) -> str:
+    if not labels:
+        return ""
+    body = ",".join(f'{k}="{v}"' for k, v in labels)
+    return "{" + body + "}"
+
+
+class Counter:
+    """Monotone cumulative counter (floats allowed: seconds totals)."""
+    __slots__ = ("name", "labels", "value")
+
+    def __init__(self, name: str, labels: Labels = ()):
+        self.name = name
+        self.labels = labels
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        if n < 0:
+            raise ValueError(f"counter {self.name} cannot decrease (n={n})")
+        self.value += n
+
+
+class Gauge:
+    """Last-write gauge, or a live view over a callable (``set_fn``)."""
+    __slots__ = ("name", "labels", "_value", "_fn")
+
+    def __init__(self, name: str, labels: Labels = ()):
+        self.name = name
+        self.labels = labels
+        self._value = 0.0
+        self._fn: Optional[Callable[[], float]] = None
+
+    def set(self, v: float) -> None:
+        self._fn = None
+        self._value = float(v)
+
+    def set_fn(self, fn: Callable[[], float]) -> None:
+        """Collect-time gauge: ``fn`` is evaluated at read (replaces any
+        previous fn/value — a new scheduler re-binds the queue-depth gauge)."""
+        self._fn = fn
+
+    @property
+    def value(self) -> float:
+        return float(self._fn()) if self._fn is not None else self._value
+
+
+class Histogram:
+    """Fixed-boundary histogram with exact count/sum/min/max.
+
+    ``counts[i]`` holds observations in ``(bounds[i-1], bounds[i]]``;
+    ``counts[-1]`` is the overflow bucket above ``bounds[-1]``.
+    """
+    __slots__ = ("name", "labels", "bounds", "counts", "count", "sum",
+                 "_min", "_max")
+
+    def __init__(self, name: str, labels: Labels = (),
+                 buckets: Iterable[float] = DEFAULT_LATENCY_BUCKETS):
+        bounds = tuple(float(b) for b in buckets)
+        if not bounds or any(b2 <= b1 for b1, b2 in zip(bounds, bounds[1:])):
+            raise ValueError(f"bucket bounds must strictly increase: {bounds}")
+        self.name = name
+        self.labels = labels
+        self.bounds = bounds
+        self.counts = [0] * (len(bounds) + 1)
+        self.count = 0
+        self.sum = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.sum += v
+        self._min = min(self._min, v)
+        self._max = max(self._max, v)
+        for i, b in enumerate(self.bounds):
+            if v <= b:
+                self.counts[i] += 1
+                return
+        self.counts[-1] += 1
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else math.nan
+
+    def percentile(self, q: float) -> float:
+        """Estimated q-quantile (q in [0, 1]): linear interpolation inside
+        the bucket holding the target rank; exact min/max clamp the
+        open-ended edge buckets.  Error is bounded by one bucket width."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"q must be in [0, 1], got {q}")
+        if self.count == 0:
+            return math.nan
+        target = q * self.count
+        cum = 0
+        for i, c in enumerate(self.counts):
+            if c and cum + c >= target:
+                lo = self._min if i == 0 \
+                    else max(self.bounds[i - 1], self._min)
+                hi = self._max if i == len(self.bounds) \
+                    else min(self.bounds[i], self._max)
+                if hi < lo:
+                    hi = lo
+                return lo + (hi - lo) * ((target - cum) / c)
+            cum += c
+        return self._max
+
+
+class MetricsRegistry:
+    """The one metrics surface: name+labels -> Counter/Gauge/Histogram."""
+
+    def __init__(self):
+        self._metrics: Dict[Tuple[str, Labels], object] = {}
+        self._types: Dict[str, type] = {}
+        self._help: Dict[str, str] = {}
+
+    # ------------------------------------------------------------- accessors
+    def _get(self, cls, name: str, labels: Optional[dict], help: str = "",
+             **kw):
+        known = self._types.get(name)
+        if known is not None and known is not cls:
+            raise TypeError(f"metric {name!r} is a {known.__name__}, "
+                            f"requested as {cls.__name__}")
+        key = (name, _labels_key(labels))
+        m = self._metrics.get(key)
+        if m is None:
+            m = cls(name, key[1], **kw)
+            self._metrics[key] = m
+            self._types[name] = cls
+            if help:
+                self._help[name] = help
+        return m
+
+    def counter(self, name: str, labels: Optional[dict] = None,
+                help: str = "") -> Counter:
+        return self._get(Counter, name, labels, help)
+
+    def gauge(self, name: str, labels: Optional[dict] = None,
+              help: str = "") -> Gauge:
+        return self._get(Gauge, name, labels, help)
+
+    def histogram(self, name: str, labels: Optional[dict] = None,
+                  help: str = "",
+                  buckets: Iterable[float] = DEFAULT_LATENCY_BUCKETS
+                  ) -> Histogram:
+        return self._get(Histogram, name, labels, help, buckets=buckets)
+
+    def value(self, name: str, labels: Optional[dict] = None) -> float:
+        """Current value of a counter/gauge (KeyError when absent)."""
+        m = self._metrics[(name, _labels_key(labels))]
+        if isinstance(m, Histogram):
+            raise TypeError(f"{name!r} is a histogram; read its fields")
+        return m.value
+
+    def names(self):
+        return sorted({name for name, _ in self._metrics})
+
+    # -------------------------------------------------------------- exports
+    def snapshot(self) -> Dict[str, float]:
+        """Flat dict view (histograms expand to _count/_sum/_p50/p95/p99)."""
+        out: Dict[str, float] = {}
+        for (name, labels), m in sorted(self._metrics.items()):
+            tag = name + _fmt_labels(labels)
+            if isinstance(m, Histogram):
+                out[tag + "_count"] = m.count
+                out[tag + "_sum"] = m.sum
+                for q in (0.5, 0.95, 0.99):
+                    out[tag + f"_p{int(q * 100)}"] = m.percentile(q)
+            else:
+                out[tag] = m.value
+        return out
+
+    def render_prom(self) -> str:
+        """Prometheus text exposition format (textfile-collector snapshot)."""
+        by_name: Dict[str, list] = {}
+        for (name, _), m in sorted(self._metrics.items()):
+            by_name.setdefault(name, []).append(m)
+        lines = []
+        for name, ms in by_name.items():
+            kind = {Counter: "counter", Gauge: "gauge",
+                    Histogram: "histogram"}[type(ms[0])]
+            if name in self._help:
+                lines.append(f"# HELP {name} {self._help[name]}")
+            lines.append(f"# TYPE {name} {kind}")
+            for m in ms:
+                if isinstance(m, Histogram):
+                    cum = 0
+                    for b, c in zip(m.bounds, m.counts):
+                        cum += c
+                        lbl = _fmt_labels(m.labels + (("le", f"{b:g}"),))
+                        lines.append(f"{name}_bucket{lbl} {cum}")
+                    lbl = _fmt_labels(m.labels + (("le", "+Inf"),))
+                    lines.append(f"{name}_bucket{lbl} {m.count}")
+                    base = _fmt_labels(m.labels)
+                    lines.append(f"{name}_sum{base} {m.sum:g}")
+                    lines.append(f"{name}_count{base} {m.count}")
+                else:
+                    lines.append(
+                        f"{name}{_fmt_labels(m.labels)} {m.value:g}")
+        return "\n".join(lines) + "\n"
+
+    def write_prom(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.render_prom())

@@ -1,0 +1,115 @@
+"""The ``Obs`` bundle: one metrics registry + optional tracer + profiling.
+
+Every serve engine, page pool, scheduler and calibration run takes an
+``Obs`` (or creates a default one).  The three concerns have three costs:
+
+  * **metrics** are always on — pure host arithmetic into a
+    ``MetricsRegistry`` (no device work, no sync);
+  * **tracing** is on only when a ``Tracer`` is attached — otherwise no
+    event dict is ever built and no span-bracketing device fence runs;
+  * **profiling** is on only when ``profile_dir`` is set —
+    ``annotate(name)`` then wraps the jitted decode/prefill/calibrate calls
+    in ``jax.profiler.TraceAnnotation`` so the device trace lines up with
+    the host-side spans, and ``start_profile``/``stop_profile`` bracket the
+    run with ``jax.profiler.start_trace``/``stop_trace``.  With
+    ``profile_dir=None`` the annotation context is a cached ``nullcontext``
+    — nothing is inserted into or around compiled code.
+
+The disabled path is the default path and it is a no-op by construction:
+``Obs()`` has no tracer and no profile dir, so serving with it is
+bit-identical to (and as fast as) serving before this layer existed.
+"""
+from __future__ import annotations
+
+from contextlib import nullcontext
+from typing import Optional
+
+import numpy as np
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
+
+__all__ = ["Obs", "record_calibration"]
+
+_NULL_CTX = nullcontext()
+
+
+class Obs:
+    def __init__(self, metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None,
+                 profile_dir: Optional[str] = None):
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer
+        self.profile_dir = profile_dir
+        self._profiling = False
+
+    @property
+    def tracing(self) -> bool:
+        return self.tracer is not None
+
+    def emit(self, event: str, **fields) -> None:
+        """Emit a span event iff a tracer is attached (else: no-op)."""
+        if self.tracer is not None:
+            self.tracer.emit(event, **fields)
+
+    # ------------------------------------------------------------ profiling
+    def annotate(self, name: str):
+        """Context manager naming a region in the device trace; a cached
+        nullcontext when profiling is off (nothing enters compiled code)."""
+        if self.profile_dir is None:
+            return _NULL_CTX
+        import jax
+        return jax.profiler.TraceAnnotation(name)
+
+    def start_profile(self) -> None:
+        if self.profile_dir is not None and not self._profiling:
+            import jax
+            jax.profiler.start_trace(self.profile_dir)
+            self._profiling = True
+
+    def stop_profile(self) -> None:
+        if self._profiling:
+            import jax
+            jax.profiler.stop_trace()
+            self._profiling = False
+
+    def close(self) -> None:
+        self.stop_profile()
+        if self.tracer is not None:
+            self.tracer.close()
+
+
+def record_calibration(obs: Obs, site: str, loss_history, aux=None) -> None:
+    """Stream a calibration site's on-device loss/metric histories into the
+    registry (+ one ``calib_site`` span per site when tracing).
+
+    ``loss_history`` is ``CalibResult.loss_history`` — [steps] for a single
+    site or [L, steps] for the batched engine, in which case each layer
+    publishes as ``site[i]``.  Histories are pulled from the device here —
+    calibration is offline and the caller reads them anyway, so this is the
+    one place the obs layer is allowed to sync.
+    """
+    lh = np.asarray(loss_history, np.float64)
+    aux = {k: np.asarray(v, np.float64) for k, v in dict(aux or {}).items()}
+    m = obs.metrics
+    batched = lh.ndim == 2
+    for i, h in enumerate(lh if batched else lh[None]):
+        name = f"{site}[{i}]" if batched else site
+        lbl = {"site": name}
+        m.gauge("calib_loss_initial", lbl,
+                help="objective at step 0 (pre-update)").set(float(h[0]))
+        m.gauge("calib_loss_final", lbl,
+                help="objective at the last pre-update step").set(
+                    float(h[-1]))
+        m.counter("calib_steps_total", lbl,
+                  help="optimizer steps run for this site").inc(h.shape[0])
+        ev_aux = {}
+        for k, v in aux.items():
+            series = v[i] if batched else v
+            m.gauge("calib_metric_final", {**lbl, "metric": k}).set(
+                float(series[-1]))
+            ev_aux[f"{k}_final"] = float(series[-1])
+        if obs.tracing:
+            obs.emit("calib_site", site=name, steps=int(h.shape[0]),
+                     loss_initial=float(h[0]), loss_final=float(h[-1]),
+                     loss_history=[float(x) for x in h], **ev_aux)

@@ -1,0 +1,102 @@
+"""Quantization-health taps at the QDQ hooks in ``repro.quant.quantizers``.
+
+Two gauges of quantizer fit, sampled wherever codes are produced:
+
+  * **clip rate** — fraction of codes landing on the extreme code points
+    (``0``/``qmax`` asymmetric, ``-qmax-1``/``qmax`` symmetric).  A healthy
+    absmax/min-max quantizer pins a sliver of mass at the boundary; a
+    saturating one (massive activations the rotation failed to smooth, cf.
+    DFRot) pins a lot.
+  * **scale dynamic range** — ``log2(max(scale) / min(scale))`` across the
+    tensor's quantization groups.  Rotation calibration exists to shrink
+    exactly this spread; watching it at the QDQ hooks makes the paper's
+    distribution claims measurable in-repo.
+
+The tap is **armed at trace time**: ``quant_act``/``quant_weight`` call
+``tap(...)``, which returns immediately while ``_TAP`` is None — nothing is
+inserted into the traced program, so the disabled path (the default) adds no
+callback, no host sync, and no compiled-code difference.  When armed (the
+launch CLIs arm it behind ``--metrics-out``), the statistics are reduced to
+two scalars on device and shipped to the registry via ``jax.debug.callback``
+— jit/scan/vmap safe, paid only by runs that asked for it.  Programs traced
+while armed keep their callbacks; arm/disarm around a region rather than
+around long-lived engines.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional
+
+from repro.obs.metrics import MetricsRegistry
+
+__all__ = ["arm", "disarm", "armed", "tap", "sampling"]
+
+_TAP: Optional[MetricsRegistry] = None
+
+# clip rate lives in [0, 1]; dynamic range in log2 octaves
+CLIP_BUCKETS = (0.0, 1e-4, 1e-3, 1e-2, 0.05, 0.1, 0.25, 0.5, 1.0)
+DYNRANGE_BUCKETS = (0.5, 1.0, 2.0, 4.0, 6.0, 8.0, 12.0, 16.0, 24.0, 32.0)
+
+
+def arm(registry: MetricsRegistry) -> None:
+    """Publish QDQ health samples into ``registry`` for code traced from
+    now on (module-global: one registry at a time)."""
+    global _TAP
+    _TAP = registry
+
+
+def disarm() -> None:
+    global _TAP
+    _TAP = None
+
+
+def armed() -> bool:
+    return _TAP is not None
+
+
+@contextmanager
+def sampling(registry: MetricsRegistry):
+    """Arm the tap for a region (and any jit tracing inside it)."""
+    global _TAP
+    prev = _TAP
+    _TAP = registry
+    try:
+        yield registry
+    finally:
+        _TAP = prev
+
+
+def _record(kind: str, clip_rate, dyn_range):
+    reg = _TAP
+    if reg is None:        # disarmed after tracing: drop the sample
+        return
+    reg.histogram(f"quant_{kind}_clip_rate", buckets=CLIP_BUCKETS,
+                  help="fraction of codes at the extreme code points"
+                  ).observe(float(clip_rate))
+    reg.histogram(f"quant_{kind}_scale_dynamic_range_log2",
+                  buckets=DYNRANGE_BUCKETS,
+                  help="log2(max/min) of the tensor's quantization scales"
+                  ).observe(float(dyn_range))
+    reg.gauge(f"quant_{kind}_clip_rate_last").set(float(clip_rate))
+    reg.gauge(f"quant_{kind}_scale_dynamic_range_log2_last").set(
+        float(dyn_range))
+    reg.counter(f"quant_{kind}_samples_total").inc()
+
+
+def tap(kind: str, q, scale, bits: int, symmetric: bool) -> None:
+    """Sample one quantization event.  ``q`` are the (pre-cast) codes,
+    ``scale`` the per-group scales.  No-op unless armed at trace time."""
+    if _TAP is None:
+        return
+    import jax
+    import jax.numpy as jnp
+    if symmetric:
+        qmax = 2 ** (bits - 1) - 1
+        lo_code, hi_code = -qmax - 1, qmax
+    else:
+        lo_code, hi_code = 0, 2 ** bits - 1
+    clip = jnp.mean(((q <= lo_code) | (q >= hi_code))
+                    .astype(jnp.float32))
+    s = scale.astype(jnp.float32)
+    dyn = jnp.log2(jnp.max(s) / jnp.maximum(jnp.min(s), 1e-30))
+    jax.debug.callback(lambda c, d: _record(kind, c, d), clip, dyn)

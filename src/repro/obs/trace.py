@@ -1,0 +1,142 @@
+"""Structured request-lifecycle tracing: span events over a pluggable sink.
+
+The serve stack emits one event stream per engine describing every request's
+lifecycle — the span chain the scheduler and engine produce is
+
+    enqueue -> admit -> prefill_chunk* -> first_token
+            -> decode_step* -> (preempt -> admit -> ...)* -> finish
+
+Every event is a flat JSON object with the base fields
+
+    event     event type (one of ``EVENT_TYPES``)
+    t_wall    wall-clock seconds (``time.time()``; for humans/correlation)
+    t_mono    monotonic seconds (``time.perf_counter()``; for intervals)
+
+plus per-type payload fields (``EVENT_FIELDS``).  Requests are identified by
+``rid`` — assigned once at enqueue and *stable across preemption/requeue*,
+unlike ``seq_id`` which changes on re-admission — so one request's spans can
+always be stitched back together.  The ``finish`` event carries the derived
+latencies: TTFT, mean inter-token latency, queue time, pages held.
+
+Sinks are pluggable: ``JsonlSink`` appends one JSON object per line (the
+``--trace-out`` artifact), ``ListSink`` retains events in memory (tests).
+Tracing is strictly opt-in: with no tracer configured the serve stack never
+constructs an event dict, never formats JSON, and never syncs the device for
+a span — the disabled path is a no-op.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional, Set
+
+__all__ = ["Tracer", "JsonlSink", "ListSink", "EVENT_TYPES", "EVENT_FIELDS",
+           "read_trace", "validate_trace"]
+
+BASE_FIELDS: Set[str] = {"event", "t_wall", "t_mono"}
+
+# per-type payload contract (required keys; extra keys are allowed)
+EVENT_FIELDS: Dict[str, Set[str]] = {
+    "enqueue":       {"rid", "prompt_len", "max_new"},
+    "admit":         {"rid", "seq_id", "slot", "cached_len", "queue_s"},
+    "prefill_chunk": {"rid", "seq_id", "tokens", "duration_s"},
+    "first_token":   {"rid", "seq_id", "ttft_s"},
+    "decode_step":   {"n_running", "duration_s", "rids"},
+    "preempt":       {"rid", "seq_id", "pos", "pages_held"},
+    "finish":        {"rid", "seq_id", "n_tokens", "pages_held", "ttft_s",
+                      "queue_s", "itl_mean_s"},
+    "calib_site":    {"site", "steps", "loss_initial", "loss_final"},
+}
+EVENT_TYPES: Set[str] = set(EVENT_FIELDS)
+
+
+class ListSink:
+    """In-memory sink (tests / programmatic inspection)."""
+
+    def __init__(self):
+        self.events: List[dict] = []
+
+    def emit(self, event: dict) -> None:
+        self.events.append(event)
+
+    def close(self) -> None:
+        pass
+
+
+class JsonlSink:
+    """One JSON object per line, append-mode; flushed per event so a crashed
+    serving loop still leaves a parseable trace behind."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f = open(path, "w")
+
+    def emit(self, event: dict) -> None:
+        json.dump(event, self._f, separators=(",", ":"))
+        self._f.write("\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+class Tracer:
+    """Stamps base fields and forwards to the sink.  Construction is the
+    opt-in: code paths hold ``tracer=None`` when tracing is off and skip
+    event assembly entirely."""
+
+    def __init__(self, sink):
+        self.sink = sink
+
+    def emit(self, event: str, **fields) -> None:
+        if event not in EVENT_TYPES:
+            raise ValueError(f"unknown trace event {event!r}; "
+                             f"known: {sorted(EVENT_TYPES)}")
+        rec = {"event": event, "t_wall": time.time(),
+               "t_mono": time.perf_counter(), **fields}
+        self.sink.emit(rec)
+
+    def close(self) -> None:
+        self.sink.close()
+
+
+def read_trace(path: str) -> List[dict]:
+    """Parse a JSONL trace file back into event dicts."""
+    events = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                events.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{i + 1}: not valid JSON: {e}")
+    return events
+
+
+def validate_trace(events: List[dict],
+                   require: Optional[Set[str]] = None) -> None:
+    """Schema check: base fields present, event types known, per-type
+    required payload fields present.  ``require`` additionally asserts that
+    those event types occur at least once.  Raises ``ValueError``."""
+    if not events:
+        raise ValueError("trace is empty")
+    seen: Set[str] = set()
+    for i, ev in enumerate(events):
+        missing = BASE_FIELDS - ev.keys()
+        if missing:
+            raise ValueError(f"event {i}: missing base fields {missing}")
+        kind = ev["event"]
+        if kind not in EVENT_TYPES:
+            raise ValueError(f"event {i}: unknown type {kind!r}")
+        missing = EVENT_FIELDS[kind] - ev.keys()
+        if missing:
+            raise ValueError(f"event {i} ({kind}): missing fields {missing}")
+        seen.add(kind)
+    if require:
+        absent = set(require) - seen
+        if absent:
+            raise ValueError(f"trace has no {sorted(absent)} events "
+                             f"(saw {sorted(seen)})")

@@ -1,0 +1,111 @@
+"""Validate serve observability artifacts (the CI smoke's parser).
+
+  PYTHONPATH=src python -m repro.obs.validate \\
+      --trace /tmp/trace.jsonl --metrics /tmp/metrics.prom
+
+Checks that the JSONL span log parses and satisfies the event schema
+(``repro.obs.trace.EVENT_FIELDS``) with a complete request lifecycle
+present, and that the Prometheus snapshot parses and contains the serve
+stack's required metric families.  Exits non-zero with a reason on any
+failure — wiring it after a ``--trace-out``/``--metrics-out`` serve run
+turns "observability emits something" into a hard CI assertion.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Set
+
+from repro.obs.trace import read_trace, validate_trace
+
+# metric families every traced+metered serve run must publish
+REQUIRED_SERVE_METRICS = (
+    "serve_ttft_seconds",
+    "serve_itl_seconds",
+    "serve_decode_step_seconds",
+    "serve_prefill_seconds",
+    "serve_queue_seconds",
+    "serve_prompt_tokens_total",
+    "serve_prefix_hit_tokens_total",
+    "serve_preemptions_total",
+    "serve_cow_copies_total",
+    "serve_pages_free",
+    "serve_pages_shared",
+)
+# the lifecycle a non-empty serve trace must contain
+REQUIRED_SERVE_EVENTS = {"enqueue", "admit", "first_token", "decode_step",
+                         "finish"}
+
+
+def parse_prom(path: str) -> Set[str]:
+    """Parse a Prometheus text snapshot; returns the set of metric names
+    (histogram series collapse to their family name)."""
+    names: Set[str] = set()
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            if line.startswith("#"):
+                parts = line.split()
+                if len(parts) < 3 or parts[1] not in ("HELP", "TYPE"):
+                    raise ValueError(f"{path}:{i + 1}: bad comment line")
+                continue
+            body = line.split()
+            if len(body) != 2:
+                raise ValueError(f"{path}:{i + 1}: expected 'name value'")
+            float(body[1])                       # value must parse
+            name = body[0].split("{")[0]
+            for suffix in ("_bucket", "_sum", "_count"):
+                if name.endswith(suffix):
+                    name = name[: -len(suffix)]
+                    break
+            names.add(name)
+    if not names:
+        raise ValueError(f"{path}: no metrics found")
+    return names
+
+
+def check_trace(path: str) -> List[dict]:
+    events = read_trace(path)
+    validate_trace(events, require=REQUIRED_SERVE_EVENTS)
+    finishes = [e for e in events if e["event"] == "finish"]
+    bad = [e for e in finishes if e["ttft_s"] < 0 or e["n_tokens"] < 1]
+    if bad:
+        raise ValueError(f"finish events with impossible payloads: {bad[:3]}")
+    rids = {e["rid"] for e in events if "rid" in e}
+    unfinished = rids - {e["rid"] for e in finishes}
+    if unfinished:
+        raise ValueError(f"requests never finished: {sorted(unfinished)}")
+    return events
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace", default=None, help="JSONL span log to check")
+    ap.add_argument("--metrics", default=None,
+                    help="Prometheus textfile snapshot to check")
+    args = ap.parse_args(argv)
+    if not args.trace and not args.metrics:
+        ap.error("nothing to validate: pass --trace and/or --metrics")
+    try:
+        if args.trace:
+            events = check_trace(args.trace)
+            n_req = len({e["rid"] for e in events if "rid" in e})
+            print(f"[obs.validate] trace OK: {len(events)} events, "
+                  f"{n_req} requests, all finished")
+        if args.metrics:
+            names = parse_prom(args.metrics)
+            missing = [n for n in REQUIRED_SERVE_METRICS if n not in names]
+            if missing:
+                raise ValueError(f"metrics snapshot missing {missing}")
+            print(f"[obs.validate] metrics OK: {len(names)} families, "
+                  f"all {len(REQUIRED_SERVE_METRICS)} required present")
+    except (ValueError, OSError) as e:
+        print(f"[obs.validate] FAIL: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,6 +4,12 @@ Paper settings (§5): per-channel symmetric weights (GPTQ-reconstructed),
 per-token asymmetric activations, 4-bit KV.  ``fake_*`` variants are QDQ
 (quantize->dequantize) used for quality evaluation — bit-exact with the real
 integer path; the integer path lives in qlinear.py / kernels.
+
+Quantization-health taps: ``quant_weight`` / ``quant_act`` sample clip rate
+and scale dynamic range through ``repro.obs.quant_health.tap``.  The tap is
+gated at trace time — unless a registry is armed (``quant_health.sampling``),
+the call returns before touching any array, so the default path compiles to
+exactly the same program as before.
 """
 from __future__ import annotations
 
@@ -11,6 +17,8 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.obs import quant_health
 
 
 @jax.tree_util.register_pytree_node_class
@@ -80,12 +88,14 @@ def quant_weight(w: jax.Array, bits: int = 4, group: int = -1,
         amax = jnp.max(jnp.abs(wg), axis=-1, keepdims=True) * clip_ratio
         scale = jnp.maximum(amax / qmax, 1e-8)
         q = jnp.clip(jnp.round(wg / scale), -qmax - 1, qmax)
+        quant_health.tap("weight", q, scale, bits, symmetric=True)
         return QTensor(q.reshape(shp).astype(jnp.int8),
                        scale.reshape(shp[:-1] + (shp[-1] // group,)), None,
                        bits=bits, group=group, in_features=shp[-1])
     amax = jnp.max(jnp.abs(w), axis=-1, keepdims=True) * clip_ratio
     scale = jnp.maximum(amax / qmax, 1e-8)
     q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax)
+    quant_health.tap("weight", q, scale, bits, symmetric=True)
     return QTensor(q.astype(jnp.int8), scale, None, bits=bits,
                    in_features=w.shape[-1])
 
@@ -117,6 +127,7 @@ def quant_act(x: jax.Array, bits: int = 4) -> QTensor:
     hi = jnp.max(x, axis=-1, keepdims=True)
     scale = jnp.maximum((hi - lo) / qmax, 1e-8)
     q = jnp.clip(jnp.round((x - lo) / scale), 0, qmax)
+    quant_health.tap("act", q, scale, bits, symmetric=False)
     return QTensor(q.astype(jnp.uint8), scale, lo, bits=bits)
 
 

@@ -23,6 +23,15 @@ verbatim only for encoder-decoder models (which the paged runtime does not
 cover).  The lockstep slot refill is request-granular and does NOT prefill
 the refilled prompt — a known correctness bug the paged engine fixes by
 construction.
+
+Observability (``repro.obs``): both engines take an ``obs=`` bundle —
+metrics are always on (plain host counters/histograms: step-timing
+percentiles, token totals, the scheduler/pool counters all share one
+registry), per-request span tracing and ``jax.profiler`` annotation are
+opt-in.  Timing uses ``time.perf_counter`` (monotonic — wall-clock NTP steps
+must not corrupt prefill/decode intervals) and fences with
+``block_until_ready`` where a bracket would otherwise measure async dispatch
+instead of device time.
 """
 from __future__ import annotations
 
@@ -36,6 +45,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models.common import NO_SHARD
+from repro.obs import Obs
 from repro.quant import fake_quant_act, kv_bytes, make_kv_quant, memory_bytes
 from repro.serve.page_pool import PagePool
 from repro.serve.scheduler import Request, SeqState, TokenScheduler
@@ -106,7 +116,8 @@ class PagedServeEngine:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  a_bits: int = 16, kv_bits: int = 4, state_bits: int = 8,
-                 base_seed: int = 0, prefix_cache: bool = True):
+                 base_seed: int = 0, prefix_cache: bool = True,
+                 obs: Optional[Obs] = None):
         if kv_bits not in (4, 8, 16):
             raise ValueError("paged cache stores quantized KV (kv_bits 4/8) "
                              "or raw fp16 pages (kv_bits 16)")
@@ -128,10 +139,30 @@ class PagedServeEngine:
         if num_pages is None:
             # every slot can hold a full-length sequence, + the null page
             num_pages = batch_slots * -(-max_seq // page_size) + 1
+        # one Obs per engine: the pool's occupancy gauges, the scheduler's
+        # lifecycle counters/spans and the step-timing histograms below all
+        # publish into the same registry/tracer
+        self.obs = obs if obs is not None else Obs()
+        m = self.obs.metrics
+        self._h_prefill = m.histogram(
+            "serve_prefill_seconds",
+            help="per-sequence chunked-prefill duration (device-fenced)")
+        self._h_decode = m.histogram(
+            "serve_decode_step_seconds",
+            help="one batched decode step (all running slots)")
+        self._h_itl = m.histogram(
+            "serve_itl_seconds",
+            help="inter-token latency: decode-step time per running request")
+        self._c_prefill_s = m.counter("serve_prefill_seconds_total")
+        self._c_decode_s = m.counter("serve_decode_seconds_total")
+        self._c_prefill_tok = m.counter(
+            "serve_prefill_tokens_total",
+            help="tokens actually prefilled (prefix-cache hits excluded)")
+        self._c_decode_tok = m.counter("serve_decode_tokens_total")
         self.pool = PagePool(cfg, num_pages=num_pages, page_size=page_size,
                              max_seq=max_seq, kv_bits=kv_bits,
                              state_bits=state_bits, n_slots=batch_slots,
-                             prefix_cache=prefix_cache)
+                             prefix_cache=prefix_cache, obs=self.obs)
         self._has_state = any(not a.needs_pages
                               for a in self.pool.adapters.values())
 
@@ -203,16 +234,26 @@ class PagedServeEngine:
         carry = M.init_prefill_carry(cfg, kv_bits=self.kv_bits,
                                      state_bits=self.state_bits)
         tail_logits = None
+        tracing = self.obs.tracing
         for s0 in range(seq.cached_len, len(prompt), C):
             chunk = prompt[s0:s0 + C]
             toks = np.zeros((1, C), np.int32)
             toks[0, :len(chunk)] = chunk
             n_pages = min(-(-(s0 + C) // T), self.pool.max_pages_per_seq) \
                 if self.pool.has_pages else 1
-            logits, state, carry = self._prefill(
-                self.params, jnp.asarray(toks), self.pool.state, table,
-                jnp.int32(s0), carry, jnp.int32(len(chunk)), n_pages)
+            tc0 = time.perf_counter() if tracing else 0.0
+            with self.obs.annotate("serve.prefill_chunk"):
+                logits, state, carry = self._prefill(
+                    self.params, jnp.asarray(toks), self.pool.state, table,
+                    jnp.int32(s0), carry, jnp.int32(len(chunk)), n_pages)
             self.pool.state = state
+            if tracing:
+                # per-chunk spans need a per-chunk fence; the untraced path
+                # never syncs here (the tail sample syncs the whole prefill)
+                jax.block_until_ready(logits)
+                self.obs.emit("prefill_chunk", rid=seq.req.rid,
+                              seq_id=seq.seq_id, tokens=len(chunk),
+                              duration_s=time.perf_counter() - tc0)
             tail = len(prompt) - 1 - s0
             if 0 <= tail < C:
                 tail_logits = logits[0, tail]
@@ -228,10 +269,11 @@ class PagedServeEngine:
     def generate(self, requests: List[Request], verbose: bool = False):
         """Serve a request list with token-level continuous batching."""
         sched = TokenScheduler(self.pool, self.slots,
-                               base_seed=self.base_seed)
+                               base_seed=self.base_seed, obs=self.obs)
         sched.add(list(requests))
         prefill_s = decode_s = 0.0
         n_prefill = n_decode = 0
+        tracing = self.obs.tracing
 
         while sched.has_work():
             # admit one request at a time: each admission's prefix match must
@@ -242,15 +284,23 @@ class PagedServeEngine:
                 if not admitted:
                     break
                 seq = admitted[0]
-                t0 = time.time()
+                t0 = time.perf_counter()
                 if self._has_state:
                     # admission hygiene: the previous occupant's state slot
                     # must not linger (commit overwrites it anyway)
                     self.pool.state = self._init_slot(
                         self.pool.state, jnp.int32(seq.slot + 1))
                 first = self._prefill_seq(seq)
-                prefill_s += time.time() - t0
-                n_prefill += len(seq.req.prompt) - seq.cached_len
+                # the tail-token sample syncs the last chunk's executable but
+                # not the commit/copy programs — fence so dt is device time
+                jax.block_until_ready(self.pool.state)
+                dt = time.perf_counter() - t0
+                prefill_s += dt
+                n_tok = len(seq.req.prompt) - seq.cached_len
+                n_prefill += n_tok
+                self._h_prefill.observe(dt)
+                self._c_prefill_s.inc(dt)
+                self._c_prefill_tok.inc(n_tok)
                 # register before record_prefill: a max_new=1 request frees
                 # its refcounts there, which would park the pages cache-free
                 # only if they are already in the index
@@ -266,20 +316,36 @@ class PagedServeEngine:
             sched.ensure_capacity()
             (tokens, tables, positions, lengths, state_slots,
              (temps, top_ks, keys)) = sched.batch_inputs()
-            t0 = time.time()
-            logits, state = self._decode(
-                self.params, jnp.asarray(tokens), self.pool.state,
-                jnp.asarray(tables), jnp.asarray(positions),
-                jnp.asarray(lengths), jnp.asarray(state_slots))
-            self.pool.state = state
-            if temps.max() <= 0:
-                nxt = np.asarray(self._greedy(logits))
-            else:
-                nxt = np.asarray(self._sample(
-                    logits, jnp.asarray(temps), jnp.asarray(top_ks),
-                    jnp.asarray(keys), jnp.asarray(positions)))
-            decode_s += time.time() - t0
-            n_decode += sched.n_running
+            t0 = time.perf_counter()
+            with self.obs.annotate("serve.decode_step"):
+                logits, state = self._decode(
+                    self.params, jnp.asarray(tokens), self.pool.state,
+                    jnp.asarray(tables), jnp.asarray(positions),
+                    jnp.asarray(lengths), jnp.asarray(state_slots))
+                self.pool.state = state
+                if temps.max() <= 0:
+                    nxt = np.asarray(self._greedy(logits))
+                else:
+                    nxt = np.asarray(self._sample(
+                        logits, jnp.asarray(temps), jnp.asarray(top_ks),
+                        jnp.asarray(keys), jnp.asarray(positions)))
+            # np.asarray above already synced the sampled tokens, so dt is
+            # real device time — no extra fence needed
+            dt = time.perf_counter() - t0
+            decode_s += dt
+            n_run = sched.n_running
+            n_decode += n_run
+            self._h_decode.observe(dt)
+            self._c_decode_s.inc(dt)
+            self._c_decode_tok.inc(n_run)
+            # per-request inter-token latency: each running request got one
+            # token out of this step
+            for _ in range(n_run):
+                self._h_itl.observe(dt)
+            if tracing:
+                self.obs.emit("decode_step", n_running=n_run, duration_s=dt,
+                              rids=[s.req.rid for s in sched.running
+                                    if s is not None])
             sched.advance(nxt)
 
         cfg = self.cfg
@@ -292,6 +358,14 @@ class PagedServeEngine:
             "decode_s": decode_s,
             "decode_tok_per_s": n_decode / max(decode_s, 1e-9),
             **sched.counters(),
+            # latency distribution estimates straight from the registry
+            # histograms (cumulative over this engine's lifetime)
+            "ttft_p50": sched._h_ttft.percentile(0.50),
+            "ttft_p95": sched._h_ttft.percentile(0.95),
+            "ttft_p99": sched._h_ttft.percentile(0.99),
+            "itl_p50": self._h_itl.percentile(0.50),
+            "itl_p95": self._h_itl.percentile(0.95),
+            "itl_p99": self._h_itl.percentile(0.99),
             # actual paged footprint, not a dense-cache estimate
             "kv_cache_bytes": self.pool.nbytes,
             "cache_bytes_by_kind": self.pool.nbytes_by_kind,
@@ -316,13 +390,14 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, rot=None, mesh=None,
                  shd=NO_SHARD, batch_slots: int = 4, max_seq: int = 256,
                  a_bits: int = 16, kv_bits: int = 16,
-                 page_size: int = 16, **paged_kw):
+                 page_size: int = 16, obs: Optional[Obs] = None, **paged_kw):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.slots = batch_slots
         self.a_bits = a_bits
         self.kv_bits = kv_bits
+        self.obs = obs if obs is not None else Obs()
         self._paged: Optional[PagedServeEngine] = None
         if M.supports_paged(cfg):
             # lossless compat at kv_bits=16: raw fp16 pages + f32 state slots
@@ -331,7 +406,7 @@ class ServeEngine:
                 cfg, params, rot=rot, mesh=mesh, shd=shd,
                 batch_slots=batch_slots, max_seq=max_seq,
                 page_size=page_size, a_bits=a_bits, kv_bits=kv_bits,
-                **paged_kw)
+                obs=self.obs, **paged_kw)
             return
         rot = dict(rot or {})
         if kv_bits < 16 and rot.get("kv_quant") is None:
@@ -377,7 +452,7 @@ class ServeEngine:
         for i, r in enumerate(active):
             if r is not None:
                 toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
-        t0 = time.time()
+        t0 = time.perf_counter()
         logits, cache = self._prefill(self.params, jnp.asarray(toks))
 
         # grow the KV caches (seq on axis 2) to max_seq.  Only "kv*" subtrees:
@@ -392,13 +467,24 @@ class ServeEngine:
 
         cache = {k: (jax.tree.map(grow, v) if k.startswith("kv") else v)
                  for k, v in cache.items()}
-        prefill_s = time.time() - t0
+        # the pad/argmax above are async too: fence so prefill_s is the real
+        # device-side prefill duration, not dispatch time
+        jax.block_until_ready(cache)
+        prefill_s = time.perf_counter() - t0
+        self.obs.metrics.histogram(
+            "serve_prefill_seconds",
+            help="per-sequence chunked-prefill duration (device-fenced)"
+        ).observe(prefill_s)
 
         last = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
         pos = plen
         n_tokens = 0
-        t0 = time.time()
+        h_decode = self.obs.metrics.histogram(
+            "serve_decode_step_seconds",
+            help="one batched decode step (all running slots)")
+        t0 = time.perf_counter()
         while any(r is not None for r in active) and pos < self.max_seq:
+            ts = time.perf_counter()
             logits, cache = self._decode(self.params, last[:, None], cache,
                                          jnp.int32(pos))
             nxt = jnp.argmax(logits[:, 0, :cfg.vocab_size], axis=-1)
@@ -418,7 +504,8 @@ class ServeEngine:
                         nxt_np[i] = active[i].prompt[-1]
             last = jnp.asarray(nxt_np)
             pos += 1
-        decode_s = time.time() - t0
+            h_decode.observe(time.perf_counter() - ts)
+        decode_s = time.perf_counter() - t0
         stats = {
             "prefill_s": prefill_s,
             "decode_s": decode_s,

@@ -54,6 +54,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.obs import Obs
 from repro.serve.cache_adapters import adapters_for
 from repro.serve.prefix_index import PrefixIndex
 
@@ -61,7 +62,8 @@ from repro.serve.prefix_index import PrefixIndex
 class PagePool:
     def __init__(self, cfg: ModelConfig, *, num_pages: int, page_size: int,
                  max_seq: int, kv_bits: int = 4, state_bits: int = 8,
-                 n_slots: int = 1, prefix_cache: bool = False):
+                 n_slots: int = 1, prefix_cache: bool = False,
+                 obs: Optional[Obs] = None):
         self.adapters = adapters_for(cfg, kv_bits=kv_bits,
                                      state_bits=state_bits)
         if num_pages < 2:
@@ -90,8 +92,40 @@ class PagePool:
         self._cached_free: Dict[int, None] = {}     # refcount-0, still indexed
         self._ref: Dict[int, int] = {}              # page -> live refcount
         self._owned: Dict[int, List[int]] = {}      # seq_id -> physical pages
-        self.cow_copies = 0
-        self.evictions = 0
+        # one metrics surface (repro.obs): CoW/eviction counters live in the
+        # registry; occupancy/refcount states publish as collect-time gauges
+        self.obs = obs if obs is not None else Obs()
+        m = self.obs.metrics
+        self._c_cow = m.counter(
+            "serve_cow_copies_total",
+            help="shared pages copied-on-write at admission")
+        self._c_evict = m.counter(
+            "serve_prefix_evictions_total",
+            help="cached-free pages reclaimed from the prefix index")
+        m.gauge("serve_pages_total",
+                help="allocatable pages (null page excluded)").set(
+                    num_pages - 1)
+        m.gauge("serve_pages_free",
+                help="allocatable: truly free + cached-free").set_fn(
+                    lambda: self.free_pages)
+        m.gauge("serve_pages_cached_free",
+                help="refcount-0 pages parked in the prefix index").set_fn(
+                    lambda: len(self._cached_free))
+        m.gauge("serve_pages_owned",
+                help="pages mapped by exactly one sequence").set_fn(
+                    lambda: self.owned_pages)
+        m.gauge("serve_pages_shared",
+                help="read-only pages mapped by >= 2 sequences").set_fn(
+                    lambda: self.shared_pages)
+
+    # counters kept as attribute views for compat with pre-obs callers
+    @property
+    def cow_copies(self) -> int:
+        return int(self._c_cow.value)
+
+    @property
+    def evictions(self) -> int:
+        return int(self._c_evict.value)
 
     # ---------------------------------------------------------------- alloc
     @property
@@ -135,7 +169,7 @@ class PagePool:
                     del self._cached_free[dropped]
                     if dropped != page:
                         self._free.append(dropped)
-            self.evictions += 1
+            self._c_evict.inc()
             return page
         raise MemoryError(f"pool exhausted: 0 of {self.num_pages - 1} free")
 
@@ -228,7 +262,7 @@ class PagePool:
                 self._ref_page(dst)
                 pages.append(dst)
                 copy_ops.append((cow_src, dst))
-                self.cow_copies += 1
+                self._c_cow.inc()
             for _ in range(n_total - len(pages)):
                 p = self._take_page()
                 self._ref_page(p)

@@ -38,6 +38,7 @@ request cannot be starved by small ones slipping past it.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -46,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import Obs
 from repro.serve.page_pool import PagePool
 
 
@@ -58,6 +60,8 @@ class Request:
     seed: Optional[int] = None      # per-request PRNG seed (None -> seq id)
     out: List[int] = field(default_factory=list)
     done: bool = False
+    rid: Optional[int] = None       # trace id: assigned at enqueue, stable
+                                    # across preemption/requeue (seq_id isn't)
 
 
 @dataclass
@@ -74,7 +78,8 @@ class SeqState:
 
 
 class TokenScheduler:
-    def __init__(self, pool: PagePool, slots: int, base_seed: int = 0):
+    def __init__(self, pool: PagePool, slots: int, base_seed: int = 0,
+                 obs: Optional[Obs] = None):
         self.pool = pool
         self.slots = slots
         self.base_seed = base_seed
@@ -82,13 +87,65 @@ class TokenScheduler:
         self.running: List[Optional[SeqState]] = [None] * slots
         self.finished: List[SeqState] = []
         self._next_id = 0
-        # serving counters (pool counters are engine-lifetime cumulative, so
-        # snapshot them to report per-scheduler deltas)
-        self.preemptions = 0
-        self.prefix_hit_tokens = 0
-        self.prompt_tokens = 0
-        self._cow0 = pool.cow_copies
-        self._evict0 = pool.evictions
+        self._next_rid = 0
+        # one metrics surface (repro.obs): counters are registry-cumulative;
+        # ``counters()`` stays the per-scheduler-lifetime compat view by
+        # snapshotting the registry at construction.  Default to the pool's
+        # Obs so a bare TokenScheduler(pool, ...) shares its registry.
+        self.obs = obs if obs is not None else pool.obs
+        m = self.obs.metrics
+        self._c_preempt = m.counter(
+            "serve_preemptions_total",
+            help="sequences preempted (pages recycled, request requeued)")
+        self._c_prompt = m.counter(
+            "serve_prompt_tokens_total", help="prompt tokens submitted")
+        self._c_hit = m.counter(
+            "serve_prefix_hit_tokens_total",
+            help="prompt tokens served from cached prefix pages")
+        self._c_reject = m.counter(
+            "serve_admission_rejects_total",
+            help="requests rejected at add() (invalid max_new / reused)")
+        self._c_admission_stall = m.counter(
+            "serve_admission_stalls_total",
+            help="fatal stalls: queued head request can never fit")
+        self._c_growth_stall = m.counter(
+            "serve_growth_stalls_total",
+            help="fatal stalls: growth needed, no page, no victim")
+        self._h_queue = m.histogram(
+            "serve_queue_seconds", help="enqueue/requeue -> admission wait")
+        self._h_ttft = m.histogram(
+            "serve_ttft_seconds", help="enqueue -> first token latency")
+        m.gauge("serve_queue_depth",
+                help="requests waiting for admission").set_fn(
+                    lambda: len(self.waiting))
+        m.gauge("serve_running",
+                help="sequences in decode slots").set_fn(
+                    lambda: self.n_running)
+        base = lambda c: c.value
+        self._base = {c: base(c) for c in
+                      (self._c_preempt, self._c_prompt, self._c_hit,
+                       pool._c_cow, pool._c_evict)}
+        # per-request trace bookkeeping (rid-keyed; host-side only)
+        self._arrival: Dict[int, float] = {}    # first enqueue (TTFT basis)
+        self._queued_at: Dict[int, float] = {}  # latest (re)enqueue
+        self._ttft: Dict[int, float] = {}
+        self._queue_s: Dict[int, float] = {}    # latest admission's wait
+
+    def _delta(self, counter) -> int:
+        return int(counter.value - self._base[counter])
+
+    # compat attribute views (per-scheduler deltas, like the old plain ints)
+    @property
+    def preemptions(self) -> int:
+        return self._delta(self._c_preempt)
+
+    @property
+    def prompt_tokens(self) -> int:
+        return self._delta(self._c_prompt)
+
+    @property
+    def prefix_hit_tokens(self) -> int:
+        return self._delta(self._c_hit)
 
     # ----------------------------------------------------------------- state
     @property
@@ -101,26 +158,42 @@ class TokenScheduler:
     def add(self, requests: List[Request]) -> None:
         for req in requests:
             if req.max_new < 1:
+                # error paths count before raising: a serving loop that
+                # swallows the exception still shows up on dashboards
+                self._c_reject.inc()
                 raise ValueError(
                     f"max_new must be >= 1, got {req.max_new} (prefill "
                     f"always samples one token at the prompt tail)")
             if req.done or req.out:
+                self._c_reject.inc()
                 raise ValueError(
                     "request was already served (done or non-empty out); "
                     "submit a fresh Request instead of reusing one")
+        now = time.perf_counter()
+        for req in requests:
+            if req.rid is None:
+                req.rid = self._next_rid
+                self._next_rid += 1
+            self._arrival[req.rid] = now
+            self._queued_at[req.rid] = now
+            self.obs.emit("enqueue", rid=req.rid,
+                          prompt_len=len(req.prompt), max_new=req.max_new)
         self.waiting.extend(requests)
 
     def counters(self) -> Dict[str, float]:
         """Serving counters for this scheduler's lifetime (one ``generate``
-        call): prefix hits, CoW copies, cache evictions, preemptions."""
+        call): prefix hits, CoW copies, cache evictions, preemptions.
+        A thin compat view over the obs registry — values are the registry
+        counters minus their value at scheduler construction."""
+        prompt = self._delta(self._c_prompt)
+        hits = self._delta(self._c_hit)
         return {
-            "prompt_tokens": self.prompt_tokens,
-            "prefix_hit_tokens": self.prefix_hit_tokens,
-            "prefix_hit_rate": (self.prefix_hit_tokens
-                                / max(1, self.prompt_tokens)),
-            "cow_copies": self.pool.cow_copies - self._cow0,
-            "prefix_evictions": self.pool.evictions - self._evict0,
-            "preemptions": self.preemptions,
+            "prompt_tokens": prompt,
+            "prefix_hit_tokens": hits,
+            "prefix_hit_rate": hits / max(1, prompt),
+            "cow_copies": self._delta(self.pool._c_cow),
+            "prefix_evictions": self._delta(self.pool._c_evict),
+            "preemptions": self._delta(self._c_preempt),
         }
 
     # ------------------------------------------------------------- admission
@@ -157,8 +230,14 @@ class TokenScheduler:
                 key = jax.random.key_data(key)      # typed-key impls
             seq.key_data = np.asarray(key, np.uint32)
             self.running[slot] = seq
-            self.prefix_hit_tokens += cached_len
-            self.prompt_tokens += len(req.prompt)
+            self._c_hit.inc(cached_len)
+            self._c_prompt.inc(len(req.prompt))
+            now = time.perf_counter()
+            queue_s = now - self._queued_at.get(req.rid, now)
+            self._queue_s[req.rid] = queue_s
+            self._h_queue.observe(queue_s)
+            self.obs.emit("admit", rid=req.rid, seq_id=seq.seq_id, slot=slot,
+                          cached_len=cached_len, queue_s=queue_s)
             admitted.append(seq)
         return admitted
 
@@ -171,6 +250,7 @@ class TokenScheduler:
         the only running sequence, so preemption cannot help)."""
         if growth_stalled is not None:
             seq = growth_stalled
+            self._c_growth_stall.inc()
             raise MemoryError(
                 f"growth stall: seq {seq.seq_id} at {seq.pos} tokens needs "
                 f"page {seq.pos // self.pool.page_size + 1}; pool has "
@@ -186,6 +266,7 @@ class TokenScheduler:
                       f"prompt alone needs {prompt_need} pages; pool has "
                       f"{self.pool.free_pages} free of "
                       f"{self.pool.num_pages - 1}")
+            self._c_admission_stall.inc()
             raise MemoryError(
                 f"request of {len(req.prompt)}+{req.max_new} tokens needs "
                 f"{need} pages; {detail}")
@@ -231,13 +312,19 @@ class TokenScheduler:
         """Recycle the victim's pages and requeue it at the head of the line
         (recomputation-style preemption: partial output is discarded and the
         pinned seed replays the identical sample stream on re-admission)."""
+        req = victim.req
+        self.obs.emit("preempt", rid=req.rid, seq_id=victim.seq_id,
+                      pos=victim.pos,
+                      pages_held=self.pool.seq_page_count(victim.seq_id))
         self.pool.free_seq(victim.seq_id)
         self.running[victim.slot] = None
-        req = victim.req
         req.out.clear()
         req.done = False
+        # requeue restarts the queue-wait clock; the TTFT basis (_arrival)
+        # stays pinned at the first enqueue — replay latency is real latency
+        self._queued_at[req.rid] = time.perf_counter()
         self.waiting.appendleft(req)
-        self.preemptions += 1
+        self._c_preempt.inc()
 
     # ------------------------------------------------------------ progress
     def record_prefill(self, seq: SeqState, first_token: int) -> None:
@@ -247,6 +334,12 @@ class TokenScheduler:
         seq.pos = len(seq.req.prompt)
         seq.last_token = first_token
         seq.req.out.append(first_token)
+        rid = seq.req.rid
+        now = time.perf_counter()
+        ttft = now - self._arrival.get(rid, now)
+        self._ttft[rid] = ttft      # a preempted request re-observes: its
+        self._h_ttft.observe(ttft)  # replayed first token is real latency
+        self.obs.emit("first_token", rid=rid, seq_id=seq.seq_id, ttft_s=ttft)
         if len(seq.req.out) >= seq.req.max_new:
             self._finish(seq)
 
@@ -306,6 +399,17 @@ class TokenScheduler:
 
     def _finish(self, seq: SeqState) -> None:
         seq.req.done = True
+        rid = seq.req.rid
+        if self.obs.tracing:
+            now = time.perf_counter()
+            ttft = self._ttft.get(rid, 0.0)
+            decode_s = now - self._arrival.get(rid, now) - ttft
+            n_tok = len(seq.req.out)
+            self.obs.emit(
+                "finish", rid=rid, seq_id=seq.seq_id, n_tokens=n_tok,
+                pages_held=self.pool.seq_page_count(seq.seq_id),
+                ttft_s=ttft, queue_s=self._queue_s.get(rid, 0.0),
+                itl_mean_s=decode_s / max(1, n_tok - 1))
         self.pool.free_seq(seq.seq_id)
         self.running[seq.slot] = None
         self.finished.append(seq)

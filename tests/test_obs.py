@@ -1,0 +1,374 @@
+"""repro.obs: metrics math, span tracing, serve integration, QDQ taps.
+
+Acceptance properties: (1) histogram percentile estimates stay within one
+bucket width of the exact quantile and clamp to observed min/max; (2) the
+JSONL span log round-trips through ``read_trace``/``validate_trace`` and the
+request lifecycle holds a stable ``rid`` across preemption-and-requeue;
+(3) the registry is the single source of truth — ``TokenScheduler.counters()``
+and the pool's property views are bit-identical to the registry deltas on a
+shared-prefix workload; (4) the disabled path is a no-op — tokens served
+with tracing on are bit-identical to tokens served with observability off;
+(5) the quant-health taps publish when armed at trace time and insert
+nothing when disarmed.
+"""
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.obs import (DEFAULT_LATENCY_BUCKETS, JsonlSink, ListSink,
+                       MetricsRegistry, Obs, Tracer, read_trace,
+                       record_calibration, validate_trace)
+from repro.obs import quant_health
+from repro.obs.metrics import Histogram
+from repro.obs.validate import (REQUIRED_SERVE_EVENTS, check_trace,
+                                parse_prom)
+from repro.serve import PagedServeEngine, Request
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama2-7b").reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _shared_requests(cfg, n, sp_len, suf_len, max_new, seed=7):
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, cfg.vocab_size, sp_len)
+    return [Request(prompt=np.concatenate(
+                        [sys_prompt, rng.integers(0, cfg.vocab_size, suf_len)]),
+                    max_new=max_new) for _ in range(n)]
+
+
+# --------------------------------------------------------------------------- #
+# Histogram bucket + percentile math
+# --------------------------------------------------------------------------- #
+def test_histogram_buckets_and_exact_stats():
+    h = Histogram("t", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.0, 1.5, 3.0, 10.0):
+        h.observe(v)
+    # (..,1], (1,2], (2,4], (4,..) — boundary values land in the lower bucket
+    assert h.counts == [2, 1, 1, 1]
+    assert h.count == 5 and h.sum == pytest.approx(16.0)
+    assert h._min == 0.5 and h._max == 10.0
+    assert h.mean == pytest.approx(3.2)
+
+
+def test_histogram_percentile_within_bucket_width():
+    rng = np.random.default_rng(0)
+    samples = rng.lognormal(mean=-3.0, sigma=1.2, size=2000)
+    h = Histogram("lat", buckets=DEFAULT_LATENCY_BUCKETS)
+    for v in samples:
+        h.observe(v)
+    bounds = (0.0,) + DEFAULT_LATENCY_BUCKETS
+    for q in (0.5, 0.9, 0.95, 0.99):
+        exact = float(np.quantile(samples, q))
+        est = h.percentile(q)
+        # the estimate must land in the same or an adjacent bucket: its error
+        # is bounded by the width of the bucket holding the exact quantile
+        width = next(hi - lo for lo, hi in zip(bounds, bounds[1:])
+                     if exact <= hi)
+        assert abs(est - exact) <= width, (q, exact, est)
+    # edge clamping: p0/p100 return the exact observed extremes
+    assert h.percentile(0.0) == pytest.approx(h._min)
+    assert h.percentile(1.0) == pytest.approx(h._max)
+
+
+def test_histogram_percentile_degenerate():
+    h = Histogram("t", buckets=(1.0, 2.0))
+    assert math.isnan(h.percentile(0.5))        # empty
+    h.observe(1.5)
+    # single observation: every quantile is that observation
+    assert h.percentile(0.5) == pytest.approx(1.5)
+    assert h.percentile(0.99) == pytest.approx(1.5)
+    with pytest.raises(ValueError):
+        h.percentile(1.5)
+    with pytest.raises(ValueError):
+        Histogram("bad", buckets=(2.0, 1.0))    # non-increasing bounds
+
+
+def test_registry_types_and_prom_roundtrip(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("c_total", help="a counter").inc(3)
+    reg.counter("c_total").inc(0.5)             # same object, float ok
+    reg.gauge("g", {"site": "r1"}).set(2.5)
+    reg.gauge("g_live").set_fn(lambda: 7)
+    h = reg.histogram("h_seconds", buckets=(0.1, 1.0))
+    h.observe(0.05), h.observe(0.5), h.observe(5.0)
+    with pytest.raises(TypeError):
+        reg.gauge("c_total")                    # name is already a counter
+    with pytest.raises(ValueError):
+        reg.counter("c_total").inc(-1)          # counters are monotone
+
+    snap = reg.snapshot()
+    assert snap["c_total"] == pytest.approx(3.5)
+    assert snap['g{site="r1"}'] == 2.5
+    assert snap["g_live"] == 7
+    assert snap["h_seconds_count"] == 3
+
+    path = tmp_path / "m.prom"
+    reg.write_prom(str(path))
+    text = path.read_text()
+    # cumulative le-buckets + the +Inf catch-all
+    assert 'h_seconds_bucket{le="0.1"} 1' in text
+    assert 'h_seconds_bucket{le="1"} 2' in text
+    assert 'h_seconds_bucket{le="+Inf"} 3' in text
+    assert parse_prom(str(path)) == {"c_total", "g", "g_live", "h_seconds"}
+
+
+# --------------------------------------------------------------------------- #
+# Span tracing: schema, JSONL round-trip
+# --------------------------------------------------------------------------- #
+def test_tracer_schema_and_jsonl_roundtrip(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    tr = Tracer(JsonlSink(str(path)))
+    tr.emit("enqueue", rid=0, prompt_len=4, max_new=2)
+    tr.emit("admit", rid=0, seq_id=0, slot=0, cached_len=0, queue_s=0.0)
+    tr.emit("first_token", rid=0, seq_id=0, ttft_s=0.01)
+    tr.emit("finish", rid=0, seq_id=0, n_tokens=2, pages_held=1,
+            ttft_s=0.01, queue_s=0.0, itl_mean_s=0.002)
+    with pytest.raises(ValueError, match="unknown trace event"):
+        tr.emit("made_up_event", rid=0)
+    tr.close()
+
+    events = read_trace(str(path))
+    assert len(events) == 4
+    validate_trace(events, require={"enqueue", "finish"})
+    for ev in events:
+        assert {"event", "t_wall", "t_mono"} <= ev.keys()
+    # every line is standalone JSON (crash-parseable contract)
+    for line in path.read_text().splitlines():
+        json.loads(line)
+    # schema violations are loud
+    with pytest.raises(ValueError, match="missing fields"):
+        validate_trace([{"event": "finish", "t_wall": 0.0, "t_mono": 0.0}])
+    with pytest.raises(ValueError, match="no .*decode_step"):
+        validate_trace(events, require={"decode_step"})
+
+
+def test_obs_disabled_emit_is_noop():
+    obs = Obs()
+    assert not obs.tracing
+    obs.emit("enqueue", rid=0, prompt_len=1, max_new=1)   # swallowed
+    sink = ListSink()
+    obs2 = Obs(tracer=Tracer(sink))
+    obs2.emit("enqueue", rid=0, prompt_len=1, max_new=1)
+    assert len(sink.events) == 1
+
+
+# --------------------------------------------------------------------------- #
+# Serve integration: lifecycle under preemption, registry == counters(),
+# disabled-path bit-identity
+# --------------------------------------------------------------------------- #
+def test_span_lifecycle_stable_rid_across_preemption(cfg, params):
+    """Overcommitted pool (the test_serve_prefix workload): a request is
+    preempted and re-admitted, and its spans keep one rid across
+    admit -> preempt -> admit -> finish while seq_id changes."""
+    sp_len, suf_len, max_new, page = 20, 4, 8, 8
+    num_pages = -(-(sp_len + suf_len) // page) + 3
+    sink = ListSink()
+    obs = Obs(tracer=Tracer(sink))
+    eng = PagedServeEngine(cfg, params, batch_slots=2, max_seq=32,
+                           page_size=page, kv_bits=4, prefix_cache=True,
+                           num_pages=num_pages, obs=obs)
+    reqs, stats = eng.generate(
+        _shared_requests(cfg, 4, sp_len, suf_len, max_new, seed=11))
+    assert all(r.done for r in reqs)
+    assert stats["preemptions"] >= 1
+
+    events = sink.events
+    validate_trace(events, require=REQUIRED_SERVE_EVENTS | {"preempt",
+                                                            "prefill_chunk"})
+    preempted_rids = {e["rid"] for e in events if e["event"] == "preempt"}
+    assert preempted_rids
+    for rid in preempted_rids:
+        chain = [e for e in events
+                 if e.get("rid") == rid and e["event"] != "prefill_chunk"]
+        kinds = [e["event"] for e in chain]
+        # enqueue once, admitted at least twice around the preemption, and
+        # exactly one terminal finish
+        assert kinds[0] == "enqueue" and kinds[-1] == "finish"
+        assert kinds.count("admit") >= 2
+        assert kinds.count("finish") == 1
+        assert kinds.index("preempt") > kinds.index("admit")
+        # re-admission changed the sequence identity but not the rid
+        seq_ids = [e["seq_id"] for e in chain if "seq_id" in e]
+        assert len(set(seq_ids)) >= 2
+        fin = chain[-1]
+        assert fin["n_tokens"] == max_new
+        assert fin["ttft_s"] >= 0 and fin["queue_s"] >= 0
+    # decode_step events carry who was running
+    steps = [e for e in events if e["event"] == "decode_step"]
+    assert steps and all(len(e["rids"]) == e["n_running"] for e in steps)
+    # requests that finish report the pages they held before the free
+    assert all(e["pages_held"] > 0 for e in events if e["event"] == "finish")
+
+
+def test_registry_matches_legacy_counters(cfg, params):
+    """counters() is a compat view over the registry: on a shared-prefix
+    workload the dict values equal the registry counters bit-for-bit
+    (fresh engine, so lifetime == per-call deltas)."""
+    sp_len, suf_len, max_new, page = 18, 3, 4, 8
+    eng = PagedServeEngine(cfg, params, batch_slots=2, max_seq=32,
+                           page_size=page, kv_bits=4, prefix_cache=True)
+    reqs, stats = eng.generate(
+        _shared_requests(cfg, 5, sp_len, suf_len, max_new))
+    assert all(r.done for r in reqs)
+    m = eng.obs.metrics
+    assert stats["prompt_tokens"] == m.value("serve_prompt_tokens_total")
+    assert stats["prefix_hit_tokens"] == m.value(
+        "serve_prefix_hit_tokens_total")
+    assert stats["cow_copies"] == m.value("serve_cow_copies_total")
+    assert stats["prefix_evictions"] == m.value(
+        "serve_prefix_evictions_total")
+    assert stats["preemptions"] == m.value("serve_preemptions_total")
+    assert stats["prefix_hit_rate"] == pytest.approx(
+        stats["prefix_hit_tokens"] / stats["prompt_tokens"])
+    # pool property views ride the same counters
+    assert eng.pool.cow_copies == stats["cow_copies"]
+    # engine token counters agree with the stats the loop accumulated
+    assert stats["prefill_tokens"] == m.value("serve_prefill_tokens_total")
+    assert m.value("serve_decode_tokens_total") == sum(
+        len(r.out) - 1 for r in reqs)
+    # latency histograms saw every request / step
+    assert m.histogram("serve_ttft_seconds").count == len(reqs)
+    assert m.histogram("serve_itl_seconds").count == m.value(
+        "serve_decode_tokens_total")
+    # occupancy gauges are live views over a consistent pool
+    snap = m.snapshot()
+    assert snap["serve_pages_free"] + snap["serve_pages_owned"] \
+        + snap["serve_pages_shared"] == snap["serve_pages_total"]
+
+
+def test_tracing_does_not_change_tokens(cfg, params):
+    """The hard requirement: observability on vs off serves bit-identical
+    tokens (tracing adds fences and event assembly, never math)."""
+    sp_len, suf_len, max_new, page = 20, 4, 6, 8
+
+    def run(obs):
+        eng = PagedServeEngine(cfg, params, batch_slots=2, max_seq=32,
+                               page_size=page, kv_bits=4, prefix_cache=True,
+                               obs=obs)
+        reqs, _ = eng.generate(
+            _shared_requests(cfg, 4, sp_len, suf_len, max_new, seed=3))
+        return [r.out for r in reqs]
+
+    plain = run(None)                           # default Obs: no tracer
+    sink = ListSink()
+    traced = run(Obs(tracer=Tracer(sink)))
+    assert traced == plain
+    assert sink.events                          # tracing actually happened
+
+
+def test_scheduler_error_paths_count_before_raising(cfg, params):
+    eng = PagedServeEngine(cfg, params, batch_slots=1, max_seq=32,
+                           page_size=8, num_pages=3, kv_bits=4)
+    m = eng.obs.metrics
+    with pytest.raises(MemoryError, match="growth stall"):
+        eng.generate([Request(prompt=np.arange(8) % cfg.vocab_size,
+                              max_new=24)])
+    assert m.value("serve_growth_stalls_total") == 1
+
+    with pytest.raises(ValueError, match="max_new"):
+        eng.generate([Request(prompt=np.arange(4), max_new=0)])
+    assert m.value("serve_admission_rejects_total") == 1
+
+
+# --------------------------------------------------------------------------- #
+# Calibration-side: loss streaming + QDQ health taps
+# --------------------------------------------------------------------------- #
+def test_record_calibration_single_and_batched():
+    sink = ListSink()
+    obs = Obs(tracer=Tracer(sink))
+    record_calibration(obs, "r1", np.array([4.0, 3.0, 2.0]),
+                       aux={"kurtosis": np.array([9.0, 5.0, 3.0])})
+    record_calibration(obs, "r2", np.array([[2.0, 1.0], [6.0, 5.0]]))
+    m = obs.metrics
+    assert m.value("calib_loss_initial", {"site": "r1"}) == 4.0
+    assert m.value("calib_loss_final", {"site": "r1"}) == 2.0
+    assert m.value("calib_steps_total", {"site": "r1"}) == 3
+    assert m.value("calib_metric_final",
+                   {"site": "r1", "metric": "kurtosis"}) == 3.0
+    # batched history publishes one site per layer
+    assert m.value("calib_loss_final", {"site": "r2[0]"}) == 1.0
+    assert m.value("calib_loss_final", {"site": "r2[1]"}) == 5.0
+    spans = [e for e in sink.events if e["event"] == "calib_site"]
+    assert [e["site"] for e in spans] == ["r1", "r2[0]", "r2[1]"]
+    assert spans[0]["loss_history"] == [4.0, 3.0, 2.0]
+    validate_trace(spans)
+
+
+def test_calibrate_scan_streams_into_registry():
+    from repro.core.qr_orth import calibrate_scan
+    from repro.core.whip import whip
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 8))
+    z0 = jax.random.normal(jax.random.PRNGKey(1), (8, 8))
+    obs = Obs()
+    res = calibrate_scan(x, z0, whip, steps=5, lr=1e-2, obs=obs,
+                         site="r1")
+    lh = np.asarray(res.loss_history)
+    m = obs.metrics
+    assert m.value("calib_loss_initial", {"site": "r1"}) == pytest.approx(
+        float(lh[0]))
+    assert m.value("calib_loss_final", {"site": "r1"}) == pytest.approx(
+        float(lh[-1]))
+    assert m.value("calib_steps_total", {"site": "r1"}) == 5
+
+
+def test_quant_health_tap_armed_vs_disarmed():
+    from repro.quant.quantizers import fake_quant_act, quant_weight
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 64))
+
+    # disarmed (default): jit the QDQ path, nothing is published
+    baseline = np.asarray(jax.jit(lambda v: fake_quant_act(v, 4))(x))
+
+    reg = MetricsRegistry()
+    with quant_health.sampling(reg):
+        # armed at trace time: the callback is baked into this program
+        armed = np.asarray(jax.jit(lambda v: fake_quant_act(v, 4))(x))
+        quant_weight(x, bits=4, group=16)
+        jax.effects_barrier()
+    assert np.array_equal(baseline, armed)      # taps never change values
+    assert reg.value("quant_act_samples_total") >= 1
+    assert reg.value("quant_weight_samples_total") >= 1
+    clip = reg.histogram("quant_act_clip_rate")
+    assert clip.count >= 1 and 0.0 <= clip._max <= 1.0
+    # min-max asymmetric act quant always pins both extremes somewhere
+    assert reg.value("quant_act_clip_rate_last") > 0.0
+    dyn = reg.histogram("quant_weight_scale_dynamic_range_log2")
+    assert dyn.count >= 1 and dyn._min >= 0.0
+
+    before = reg.value("quant_act_samples_total")
+    jax.jit(lambda v: fake_quant_act(v, 4))(x + 1.0)     # traced disarmed
+    jax.effects_barrier()
+    assert reg.value("quant_act_samples_total") == before
+
+
+# --------------------------------------------------------------------------- #
+# validate CLI plumbing
+# --------------------------------------------------------------------------- #
+def test_check_trace_catches_unfinished(tmp_path):
+    path = tmp_path / "t.jsonl"
+    tr = Tracer(JsonlSink(str(path)))
+    tr.emit("enqueue", rid=0, prompt_len=4, max_new=2)
+    tr.emit("admit", rid=0, seq_id=0, slot=0, cached_len=0, queue_s=0.0)
+    tr.emit("first_token", rid=0, seq_id=0, ttft_s=0.01)
+    tr.emit("decode_step", n_running=1, duration_s=0.001, rids=[0])
+    # a second request completes normally; rid 0 never reaches finish
+    tr.emit("enqueue", rid=1, prompt_len=4, max_new=1)
+    tr.emit("admit", rid=1, seq_id=1, slot=1, cached_len=0, queue_s=0.0)
+    tr.emit("first_token", rid=1, seq_id=1, ttft_s=0.01)
+    tr.emit("finish", rid=1, seq_id=1, n_tokens=1, pages_held=1,
+            ttft_s=0.01, queue_s=0.0, itl_mean_s=0.0)
+    tr.close()
+    with pytest.raises(ValueError, match="never finished"):
+        check_trace(str(path))
