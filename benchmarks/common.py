@@ -19,17 +19,20 @@ CFG = get_config("llama2-7b").reduced().replace(
     vocab_size=256)
 
 
-@functools.lru_cache(maxsize=1)
-def trained_model():
+@functools.lru_cache(maxsize=2)
+def trained_model(smoke: bool = False):
+    """Trained tiny LM; ``smoke`` trains a shorter (but still converging
+    enough for ordering checks) run so CI can touch every table."""
     tr = Trainer(CFG, batch_size=8, seq_len=64, lr=5e-3)
-    tr.train(100, verbose=False)
+    tr.train(25 if smoke else 100, verbose=False)
     return tr.params
 
 
-@functools.lru_cache(maxsize=1)
-def captured_acts():
-    params = trained_model()
-    calib = jnp.asarray(calibration_batch(CFG, 8, 64))
+@functools.lru_cache(maxsize=2)
+def captured_acts(smoke: bool = False):
+    params = trained_model(smoke)
+    calib = jnp.asarray(calibration_batch(CFG, 4 if smoke else 8,
+                                          32 if smoke else 64))
     return capture_activations(CFG, params, calib, sample_frac=0.5,
                                key=jax.random.PRNGKey(0))
 

@@ -13,15 +13,16 @@ from repro.core import (calibrate_rotation, outlier_count, quant_error,
                         random_hadamard)
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     rows = []
     key = jax.random.PRNGKey(0)
-    for src, x in [("synthetic", synthetic_acts()),
-                   ("captured", captured_acts()["r1"])]:
+    synth = synthetic_acts(n=64, N=512) if smoke else synthetic_acts()
+    for src, x in [("synthetic", synth),
+                   ("captured", captured_acts(smoke)["r1"])]:
         n = x.shape[-1]
         had = random_hadamard(n, key)
-        dart = calibrate_rotation(x, n, key, objective="whip", steps=80,
-                                  lr=0.2)
+        dart = calibrate_rotation(x, n, key, objective="whip",
+                                  steps=20 if smoke else 80, lr=0.2)
         for name, r in [("identity", jnp.eye(n)), ("hadamard", had),
                         ("dartquant", dart)]:
             o = x @ r

@@ -9,9 +9,9 @@ from benchmarks.common import CFG, captured_acts, trained_model
 from repro.quant import gptq_quantize, hessian, recon_error, rtn_quantize
 
 
-def run() -> list:
-    params = trained_model()
-    acts = captured_acts()
+def run(smoke: bool = False) -> list:
+    params = trained_model(smoke)
+    acts = captured_acts(smoke)
     x = acts["r1"]
     rows = []
     lp = jax.tree.map(lambda a: a[0], params["layers"])

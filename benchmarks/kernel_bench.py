@@ -1,0 +1,115 @@
+"""Kernel microbench: AOT compile-vs-warm split, analytic MFU, watermarks.
+
+For the two serving hot-path Pallas kernels (``quant_matmul`` — packed-int4
+dequant matmul over QTensor weights — and ``paged_attention`` — block-table
+gather + fused dequant + online softmax over quantized KV pages):
+
+  * **compile vs warm**: the single-shot timings the other benches report
+    mix XLA compilation into the first call.  Here the AOT path
+    (``jax.jit(f).lower(args).compile()``) prices compilation explicitly,
+    then the compiled executable is timed under warmup+repeat discipline —
+    two separate rows, so a compile-time regression and an execution-time
+    regression gate independently.
+  * **analytic utilization**: XLA-counted FLOPs and bytes-accessed from
+    ``compiled.cost_analysis()`` divided by (median warm time x device
+    peak) give MFU and bandwidth-utilization estimates against the
+    ``repro.obs.bench.device_peaks()`` table.  On a CPU smoke box these are
+    tiny absolute numbers — the gate watches them as ratios with IQR
+    tolerance; on TPU they become the roofline placement of the real
+    kernels.  Skipped (not guessed) when the device kind is unknown or XLA
+    reports no cost model.
+  * **peak-memory watermarks**: ``device.memory_stats()`` where the backend
+    exposes it, else the live-buffer ``nbytes`` lower bound — reported in
+    MB, an informational (never strictly gated) unit, because the live set
+    depends on allocator state.
+
+Interpret-mode caveat: off-TPU the Pallas bodies run through the
+interpreter, so absolute times are emulation costs — still regression-
+comparable run-over-run on the same backend (the fingerprint gates
+cross-backend compares).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.paged_attn.ops import paged_attention
+from repro.kernels.quant_matmul.ops import quant_matmul
+from repro.obs.bench import device_peaks, measure, peak_memory_bytes
+from repro.quant.kv_cache import quantize_kv
+from repro.quant.qlinear import pack_weight
+
+
+def _cost(compiled) -> tuple:
+    """(flops, bytes_accessed) from XLA's cost model; -1 when unreported."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):           # older jax: list per device
+        ca = ca[0] if ca else {}
+    return float(ca.get("flops", -1)), float(ca.get("bytes accessed", -1))
+
+
+def _aot_rows(name, fn, args, tag, repeats) -> list:
+    """Compile-vs-warm split + utilization rows for one kernel call."""
+    rows = []
+    t0 = time.perf_counter()
+    compiled = jax.jit(fn).lower(*args).compile()
+    rows.append((f"kernel,{name}_compile,{tag}", time.perf_counter() - t0,
+                 "s"))
+    warm = measure(f"kernel,{name}_warm,{tag}",
+                   lambda: jax.block_until_ready(compiled(*args)),
+                   unit="s", repeats=repeats, warmup=1)
+    rows.append(warm)
+    flops, nbytes = _cost(compiled)
+    peaks = device_peaks()
+    if flops > 0:
+        rows.append((f"kernel,{name}_flops,{tag}", flops, "flops"))
+        if peaks is not None:
+            rows.append((f"kernel,{name}_mfu,{tag}",
+                         flops / (warm.value * peaks[0]), "ratio"))
+    if nbytes > 0 and peaks is not None:
+        rows.append((f"kernel,{name}_bw_util,{tag}",
+                     nbytes / (warm.value * peaks[1]), "ratio"))
+    return rows
+
+
+def run(smoke: bool = False) -> list:
+    tag = "smoke" if smoke else "full"
+    repeats = 3 if smoke else 5
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # ---- quant_matmul: packed-int4 (and int8) dequant matmul ------------- #
+    m, K, N = (8, 64, 64) if smoke else (32, 256, 512)
+    x = jax.random.normal(key, (m, K))
+    for bits in (4, 8):
+        qt = pack_weight(jax.random.normal(jax.random.fold_in(key, bits),
+                                           (N, K)), bits=bits)
+        rows += _aot_rows(f"quant_matmul_w{bits}",
+                          lambda xx, q=qt: quant_matmul(xx, q), (x,),
+                          f"m{m}xk{K}xn{N},{tag}", repeats)
+
+    # ---- paged_attention: int4 KV pages, GQA decode ---------------------- #
+    P, T, H, hd, G = (9, 4, 2, 16, 2) if smoke else (33, 16, 4, 64, 4)
+    B, Pmax = (4, 5) if smoke else (8, 17)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (P, T, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (P, T, H, hd))
+    qk, qv = quantize_kv(k, 4), quantize_kv(v, 4)
+    pool = {"kq": qk.q, "ks": qk.scale[..., 0], "kz": qk.zero[..., 0],
+            "vq": qv.q, "vs": qv.scale[..., 0], "vz": qv.zero[..., 0]}
+    rng = np.random.default_rng(3)
+    bt = jnp.asarray(rng.integers(1, P, (B, Pmax)), jnp.int32)
+    lengths = jnp.asarray(
+        rng.integers(1, T * Pmax, B), jnp.int32)
+    q = jax.random.normal(jax.random.fold_in(key, 4), (B, H * G, hd))
+    rows += _aot_rows("paged_attn",
+                      lambda qq, bb, ll: paged_attention(qq, pool, bb, ll,
+                                                         bits=4),
+                      (q, bt, lengths), f"b{B}xh{H * G}xd{hd},{tag}", repeats)
+
+    # ---- device peak-memory watermark ------------------------------------ #
+    peak, source = peak_memory_bytes()
+    rows.append((f"kernel,peak_memory,{source},{tag}", peak / 2**20, "MB"))
+    return rows

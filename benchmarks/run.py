@@ -1,15 +1,33 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,value,unit`` CSV.  PYTHONPATH=src python -m benchmarks.run
-[filter] [--smoke]; ``--smoke`` runs tiny-dimension variants (CI) for the
-modules that support it.
+Prints ``name,value,unit`` CSV to stdout (the human view) and — with
+``--json-dir`` — writes one ``BENCH_<module>.json`` per module: a
+``repro.obs.bench.BenchReport`` carrying every record (warmup/repeat
+discipline, median + IQR for repeated timings) plus the environment
+fingerprint (jax/jaxlib, backend, device kind/count, cpu count, git sha,
+smoke flag).  Those artifacts are the machine-readable perf trajectory:
+CI uploads them per run and gates regressions with
+
+  python -m repro.obs.bench compare benchmarks/baselines BENCH_DIR
+
+Usage: ``PYTHONPATH=src python -m benchmarks.run [filter] [--smoke]
+[--json-dir DIR]``; ``--smoke`` runs tiny-dimension variants (CI) — every
+module supports it.
+
+Modules may yield plain ``(name, value, unit)`` tuples (recorded as
+single-shot, ``repeats=1``) or ``BenchRecord`` objects (the warmup+repeat
+timing rows).
 """
 from __future__ import annotations
 
+import argparse
 import inspect
 import sys
 import time
 import traceback
+
+from repro.obs.bench import (BenchRecord, BenchReport, env_fingerprint,
+                             write_bench_json)
 
 MODULES = [
     "benchmarks.table2_quality",      # Tab. 2: quant quality per bit setting
@@ -19,32 +37,59 @@ MODULES = [
     "benchmarks.fig3_outliers",       # Figs. 3/6: outliers + quant error
     "benchmarks.table16_samples",     # Tabs. 16/5: sample/dataset robustness
     "benchmarks.gptq_table",          # GPTQ vs RTN reconstruction
-    "benchmarks.serve_bench",         # serve runtime: paged vs legacy engine
+    "benchmarks.serve_bench",         # serve runtime: paged engine + loadgen
+    "benchmarks.kernel_bench",        # Pallas kernels: AOT compile/warm, MFU
     "benchmarks.roofline_report",     # §Roofline: dry-run derived terms
 ]
 
 
-def main() -> None:
-    args = [a for a in sys.argv[1:] if a != "--smoke"]
-    smoke = "--smoke" in sys.argv[1:]
-    only = args[0] if args else None
+def as_record(row) -> BenchRecord:
+    """Normalize a module row: 3-tuples become single-shot records."""
+    if isinstance(row, BenchRecord):
+        return row
+    name, value, unit = row
+    return BenchRecord(name=name, value=float(value), unit=str(unit))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        epilog="positional [filter] selects modules by substring")
+    ap.add_argument("filter", nargs="?", default=None,
+                    help="run only modules whose name contains this")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-dimension variants (CI)")
+    ap.add_argument("--json-dir", default=None, metavar="DIR",
+                    help="write BENCH_<module>.json per module here")
+    args = ap.parse_args(argv)
+
+    fingerprint = env_fingerprint(smoke=args.smoke) if args.json_dir else None
     print("name,value,unit")
     ok = True
     for modname in MODULES:
-        if only and only not in modname:
+        if args.filter and args.filter not in modname:
             continue
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             mod = __import__(modname, fromlist=["run"])
             kwargs = {}
-            if smoke and "smoke" in inspect.signature(mod.run).parameters:
+            if args.smoke and "smoke" in inspect.signature(
+                    mod.run).parameters:
                 kwargs["smoke"] = True
-            for name, value, unit in mod.run(**kwargs):
-                if isinstance(value, float):
-                    print(f"{name},{value:.6g},{unit}", flush=True)
+            records = [as_record(r) for r in mod.run(**kwargs)]
+            for rec in records:
+                if isinstance(rec.value, float):
+                    print(f"{rec.name},{rec.value:.6g},{rec.unit}",
+                          flush=True)
                 else:
-                    print(f"{name},{value},{unit}", flush=True)
-            print(f"# {modname} done in {time.time()-t0:.1f}s", flush=True)
+                    print(f"{rec.name},{rec.value},{rec.unit}", flush=True)
+            dt = time.perf_counter() - t0
+            print(f"# {modname} done in {dt:.1f}s", flush=True)
+            if args.json_dir:
+                report = BenchReport(module=modname, fingerprint=fingerprint,
+                                     records=records)
+                path = write_bench_json(report, args.json_dir)
+                print(f"# {modname} -> {path}", flush=True)
         except Exception as e:      # noqa: BLE001 — keep the harness running
             ok = False
             print(f"# {modname} FAILED: {type(e).__name__}: {e}", flush=True)

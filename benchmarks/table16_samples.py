@@ -11,28 +11,32 @@ from repro.data.pipeline import calibration_batch
 from repro.quant import quantize_params
 
 
-def run() -> list:
-    params = trained_model()
+def run(smoke: bool = False) -> list:
+    params = trained_model(smoke)
     key = jax.random.PRNGKey(0)
     rows = []
     rot = {"r4": online_hadamard}
+    steps = 15 if smoke else 60
+    seq = 32 if smoke else 64
+    n_batches = 2 if smoke else 4
     # sample-size sweep (Tab. 16)
-    for n_samples in (2, 4, 8, 16):
-        calib = jnp.asarray(calibration_batch(CFG, n_samples, 64))
-        pack = calibrate_model(CFG, params, calib, key=key, steps=60,
+    for n_samples in (2, 8) if smoke else (2, 4, 8, 16):
+        calib = jnp.asarray(calibration_batch(CFG, n_samples, seq))
+        pack = calibrate_model(CFG, params, calib, key=key, steps=steps,
                                lr_r1=0.05, use_r2=False)
         dcfg, dp = fuse_rotations(CFG, params, pack)
         rows.append((f"table16,samples={n_samples}",
                      eval_ppl(dcfg, quantize_params(dcfg, dp), a_bits=4,
-                              rot=rot), "ppl"))
+                              rot=rot, n_batches=n_batches), "ppl"))
     # dataset sweep (Tab. 5): calibrate on *different corpora*, evaluate on
     # the training corpus — the paper's cross-dataset robustness check
-    for seed in (0, 7, 42):
-        calib = jnp.asarray(calibration_batch(CFG, 8, 64, corpus_seed=seed))
-        pack = calibrate_model(CFG, params, calib, key=key, steps=60,
+    for seed in (0, 7) if smoke else (0, 7, 42):
+        calib = jnp.asarray(calibration_batch(CFG, 4 if smoke else 8, seq,
+                                              corpus_seed=seed))
+        pack = calibrate_model(CFG, params, calib, key=key, steps=steps,
                                lr_r1=0.05, use_r2=False)
         dcfg, dp = fuse_rotations(CFG, params, pack)
         rows.append((f"table5,corpus_seed={seed}",
                      eval_ppl(dcfg, quantize_params(dcfg, dp), a_bits=4,
-                              rot=rot), "ppl"))
+                              rot=rot, n_batches=n_batches), "ppl"))
     return rows

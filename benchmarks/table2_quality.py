@@ -16,27 +16,31 @@ from repro.data.pipeline import calibration_batch
 from repro.quant import make_kv_quant, quantize_params
 
 
-def run() -> list:
-    params = trained_model()
+def run(smoke: bool = False) -> list:
+    params = trained_model(smoke)
     key = jax.random.PRNGKey(0)
-    calib = jnp.asarray(calibration_batch(CFG, 8, 64))
-    pack = calibrate_model(CFG, params, calib, key=key, steps=80,
-                           lr_r1=0.05, lr_r2=0.05)
+    calib = jnp.asarray(calibration_batch(CFG, 4 if smoke else 8,
+                                          32 if smoke else 64))
+    pack = calibrate_model(CFG, params, calib, key=key,
+                           steps=16 if smoke else 80, lr_r1=0.05, lr_r2=0.05)
     dcfg, dparams = fuse_rotations(CFG, params, pack)
     hcfg, hparams = fuse_rotations(CFG, params, random_pack(CFG, key))
+    n_batches = 2 if smoke else 4
     rows = []
-    rows.append(("table2,fp,16-16-16", eval_ppl(CFG, params)))
-    for (w, a, kv), tag in [((4, 8, 16), "4-8-16"), ((4, 4, 16), "4-4-16"),
-                            ((4, 4, 4), "4-4-4")]:
+    rows.append(("table2,fp,16-16-16",
+                 eval_ppl(CFG, params, n_batches=n_batches)))
+    settings = [((4, 8, 16), "4-8-16"), ((4, 4, 4), "4-4-4")] if smoke else \
+        [((4, 8, 16), "4-8-16"), ((4, 4, 16), "4-4-16"), ((4, 4, 4), "4-4-4")]
+    for (w, a, kv), tag in settings:
         kvq = make_kv_quant(kv)
         rot_h = {"r4": online_hadamard, "kv_quant": kvq}
         rows.append((f"table2,rtn,{tag}",
                      eval_ppl(CFG, quantize_params(CFG, params), a_bits=a,
-                              rot={"kv_quant": kvq})))
+                              rot={"kv_quant": kvq}, n_batches=n_batches)))
         rows.append((f"table2,quarot,{tag}",
                      eval_ppl(hcfg, quantize_params(hcfg, hparams), a_bits=a,
-                              rot=rot_h)))
+                              rot=rot_h, n_batches=n_batches)))
         rows.append((f"table2,dartquant,{tag}",
                      eval_ppl(dcfg, quantize_params(dcfg, dparams), a_bits=a,
-                              rot=rot_h)))
+                              rot=rot_h, n_batches=n_batches)))
     return [(name, ppl, "ppl") for name, ppl in rows]

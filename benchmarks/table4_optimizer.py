@@ -20,18 +20,20 @@ from repro.core.qr_orth import (calibrate_scan, cayley_sgd_step, qr_rotation,
 
 def _time_loop(fn, steps=20):
     fn()                                   # compile
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(steps):
         fn()
-    return (time.time() - t0) / steps
+    return (time.perf_counter() - t0) / steps
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     rows = []
     # n large enough that the orthogonality machinery (O(n^3)) is visible
     # against the Whip grad (O(N n^2)) — the paper's regime (n = d_model)
-    n = 1024
-    x = synthetic_acts(n=n, N=1024)
+    n = 128 if smoke else 1024
+    loop_steps = 5 if smoke else 20
+    conv_steps = 20 if smoke else 60
+    x = synthetic_acts(n=n, N=256 if smoke else 1024)
     key = jax.random.PRNGKey(0)
     z0 = random_hadamard(n, key)
 
@@ -58,8 +60,8 @@ def run() -> list:
         r, mc = step_c(r, mc, g, 0.05)
         jax.block_until_ready(r)
 
-    t_qr = _time_loop(qr_step)
-    t_cy = _time_loop(cayley_step)
+    t_qr = _time_loop(qr_step, loop_steps)
+    t_cy = _time_loop(cayley_step, loop_steps)
     rows.append(("table4,qr_step", t_qr * 1e6, "us"))
     rows.append(("table4,cayley_step", t_cy * 1e6, "us"))
     rows.append(("table4,speedup_per_step", t_cy / t_qr, "x"))
@@ -69,9 +71,10 @@ def run() -> list:
     fq_only = jax.jit(qr_rotation)
     fc_only = jax.jit(lambda r, m, g: cayley_sgd_step(r, m, g, 0.05))
     g0 = jnp.ones_like(z0) * 1e-3
-    t_qr_o = _time_loop(lambda: jax.block_until_ready(fq_only(zq)))
+    t_qr_o = _time_loop(lambda: jax.block_until_ready(fq_only(zq)),
+                        loop_steps)
     t_cy_o = _time_loop(lambda: jax.block_until_ready(
-        fc_only(zq, jnp.zeros_like(zq), g0)[0]))
+        fc_only(zq, jnp.zeros_like(zq), g0)[0]), loop_steps)
     rows.append(("table4,qr_orth_only", t_qr_o * 1e6, "us"))
     rows.append(("table4,cayley_orth_only", t_cy_o * 1e6, "us"))
     rows.append(("table4,orth_speedup", t_cy_o / t_qr_o, "x"))
@@ -93,16 +96,17 @@ def run() -> list:
     rows.append(("table4,qr_orth_flops", flops_q, "flops"))
     rows.append(("table4,cayley_flops", flops_c, "flops"))
 
-    # --- convergence: steps for QR to match Cayley@60 -------------------------
+    # --- convergence: steps for QR to match Cayley@60 (smoke: @20) -----------
     # loss histories come straight off the scanned engine (no callbacks)
-    cy_losses = calibrate_scan(x, z0, whip, method="cayley", steps=60,
+    cy_losses = calibrate_scan(x, z0, whip, method="cayley", steps=conv_steps,
                                lr=0.1).loss_history.tolist()
-    qr_losses = calibrate_scan(x, z0, whip, method="qr", steps=60,
+    qr_losses = calibrate_scan(x, z0, whip, method="qr", steps=conv_steps,
                                lr=0.1).loss_history.tolist()
     target = cy_losses[-1]
     steps_needed = next((i + 1 for i, l in enumerate(qr_losses)
-                         if l <= target), 60)
+                         if l <= target), conv_steps)
     rows.append(("table4,cayley60_loss", target, "whip"))
     rows.append(("table4,qr_steps_to_match", steps_needed, "steps"))
-    rows.append(("table4,convergence_speedup", 60 / steps_needed, "x"))
+    rows.append(("table4,convergence_speedup", conv_steps / steps_needed,
+                 "x"))
     return rows

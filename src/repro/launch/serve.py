@@ -23,6 +23,13 @@ only for encoder-decoder models (whisper); for everything else the legacy
 Sampling is per request: greedy by default; ``--temperature``/``--top-k``
 (with ``--seed``) enable stochastic decoding with a per-request PRNG key.
 
+``--loadgen`` replaces the pre-enqueued batch with the open-loop Poisson
+load generator (``repro.serve.loadgen``): requests arrive through real
+scheduler admission at ``--loadgen-rate`` with mixed lengths and a
+``--loadgen-shared-frac`` shared-prefix traffic mix, and the run reports
+goodput — the fraction of requests meeting ``--slo-ttft`` and
+``--slo-itl-p99`` — alongside the usual stats (and into ``--metrics-out``).
+
 Observability (``repro.obs``): ``--trace-out span.jsonl`` writes the
 per-request lifecycle span log, ``--metrics-out metrics.prom`` a Prometheus
 textfile snapshot (TTFT/ITL histograms, page occupancy, prefix-cache and
@@ -90,6 +97,21 @@ def main(argv=None):
                     help="re-serve the same requests with the prefix cache "
                          "off and assert token-for-token parity, a nonzero "
                          "hit rate and fewer prefilled tokens (CI smoke)")
+    ap.add_argument("--loadgen", action="store_true",
+                    help="drive the engine with the open-loop Poisson load "
+                         "generator (real scheduler admission) instead of a "
+                         "pre-enqueued batch, and report goodput against the "
+                         "--slo-* objectives")
+    ap.add_argument("--loadgen-rate", type=float, default=8.0, metavar="RPS",
+                    help="offered (open-loop) arrival rate for --loadgen")
+    ap.add_argument("--loadgen-shared-frac", type=float, default=0.5,
+                    metavar="FRAC",
+                    help="fraction of --loadgen requests carrying the "
+                         "--shared-prefix system prompt")
+    ap.add_argument("--slo-ttft", type=float, default=2.0, metavar="S",
+                    help="TTFT SLO (seconds) for the goodput report")
+    ap.add_argument("--slo-itl-p99", type=float, default=0.5, metavar="S",
+                    help="per-request p99 inter-token-latency SLO (seconds)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the request-lifecycle span log (JSONL) here")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
@@ -208,11 +230,42 @@ def main(argv=None):
                         top_k=args.top_k)
                 for _ in range(args.requests)]
 
-    obs.start_profile()
-    try:
-        reqs, stats = eng.generate(make_requests(), verbose=True)
-    finally:
-        obs.stop_profile()
+    if args.loadgen:
+        if args.assert_prefix_parity:
+            ap.error("--loadgen and --assert-prefix-parity are separate "
+                     "smokes; run them in separate invocations")
+        if not hasattr(eng, "serve_open_loop"):
+            ap.error("--loadgen needs the paged engine (open-loop admission "
+                     "goes through the token scheduler)")
+        from repro.serve import LoadSpec, SLO
+        from repro.serve.loadgen import run_workload
+        spec = LoadSpec(n_requests=args.requests,
+                        rate_rps=args.loadgen_rate,
+                        prompt_len=(max(1, args.prompt_len // 2),
+                                    args.prompt_len),
+                        max_new=(max(1, args.max_new // 2), args.max_new),
+                        shared_prefix_len=args.shared_prefix,
+                        shared_frac=args.loadgen_shared_frac,
+                        temperature=args.temperature, top_k=args.top_k,
+                        seed=base_seed)
+        slo = SLO(ttft_s=args.slo_ttft, itl_p99_s=args.slo_itl_p99)
+        obs.start_profile()
+        try:
+            reqs, stats = run_workload(eng, spec, slo=slo, verbose=True)
+        finally:
+            obs.stop_profile()
+        print(f"[loadgen] offered {spec.rate_rps:.1f} rps, achieved "
+              f"{stats['achieved_rps']:.2f} rps; goodput "
+              f"{stats['goodput']:.2f} ({stats['n_good']}/"
+              f"{stats['n_requests']} within TTFT<={slo.ttft_s}s, "
+              f"p99-ITL<={slo.itl_p99_s}s; {stats['ttft_misses']} TTFT / "
+              f"{stats['itl_misses']} ITL misses)")
+    else:
+        obs.start_profile()
+        try:
+            reqs, stats = eng.generate(make_requests(), verbose=True)
+        finally:
+            obs.stop_profile()
     done = sum(r.done for r in reqs)
     print(f"[{type(eng).__name__}] served {done}/{len(reqs)} requests; "
           f"{stats['decode_tok_per_s']:.1f} tok/s decode; "

@@ -10,13 +10,21 @@
     always-on metrics, opt-in tracing, opt-in ``jax.profiler`` annotation.
   * ``quant_health``: trace-time-gated QDQ taps (clip rate, scale dynamic
     range) publishing through ``jax.debug.callback``.
-  * ``validate``: CLI checker for ``--trace-out`` / ``--metrics-out``
-    artifacts (the CI smoke's parser).
+  * ``validate``: CLI checker for ``--trace-out`` / ``--metrics-out`` /
+    ``BENCH_*.json`` artifacts (the CI smoke's parser).
+  * ``bench``: structured benchmark telemetry — ``BenchRecord`` /
+    ``BenchReport`` with an environment fingerprint and warmup+repeat
+    median/IQR discipline, the ``BENCH_<module>.json`` artifact convention,
+    and the ``python -m repro.obs.bench compare`` regression gate CI runs
+    against committed baselines.
 
 The contract that everything here honors: the **disabled path is a no-op** —
 no host sync, no callback into jitted code, no event assembly.  Metrics
 counters are plain host ints and stay on unconditionally.
 """
+from repro.obs.bench import (BenchRecord, BenchReport, env_fingerprint,
+                             measure, read_bench_json, record_from_samples,
+                             write_bench_json)
 from repro.obs.metrics import (Counter, DEFAULT_LATENCY_BUCKETS, Gauge,
                                Histogram, MetricsRegistry)
 from repro.obs.obs import Obs, record_calibration
@@ -29,4 +37,6 @@ __all__ = [
     "Obs", "record_calibration",
     "Tracer", "JsonlSink", "ListSink", "read_trace", "validate_trace",
     "EVENT_TYPES", "EVENT_FIELDS",
+    "BenchRecord", "BenchReport", "env_fingerprint", "measure",
+    "record_from_samples", "read_bench_json", "write_bench_json",
 ]

@@ -1,0 +1,593 @@
+"""``repro.obs.bench`` — structured benchmark telemetry + regression gates.
+
+The benchmark harness (``benchmarks/run.py``) historically printed one-shot
+``name,value,unit`` CSV to stdout: human-readable, but invisible to CI — a PR
+could halve decode tok/s and nothing would notice.  This module makes every
+benchmark run a comparable, fingerprinted record:
+
+  ``BenchRecord``   one metric: name/value/unit plus the measurement
+                    discipline that produced it (warmup count, repeats,
+                    median + inter-quartile range over the repeats).
+                    Single-shot deterministic metrics (byte counts, token
+                    counts) carry ``repeats=1`` and no IQR.
+  ``BenchReport``   one benchmark module's records + an environment
+                    fingerprint (jax/jaxlib version, backend, device kind,
+                    device count, cpu count, git sha, smoke flag) so two
+                    reports are only ever compared apples-to-apples.
+  ``write_bench_json`` / ``read_bench_json``
+                    the ``BENCH_<module>.json`` artifact convention — the
+                    machine-readable perf trajectory CI uploads per run.
+  ``measure`` / ``record_from_samples``
+                    warmup+repeat timing helpers (``time.perf_counter``
+                    only — wall clock is NTP-steppable) for the hot-path
+                    benchmarks.
+  ``compare``       the regression gate: ``python -m repro.obs.bench
+                    compare baseline.json current.json`` exits non-zero when
+                    a tracked metric regresses beyond its per-metric
+                    tolerance — IQR-aware for timing/throughput metrics
+                    (overlapping quartile ranges are noise, not regression),
+                    strict equality for deterministic byte/count metrics.
+
+Unit policy — the unit string decides how a metric is compared:
+
+  strict (exact equality; any drift fails)
+      B tok pages seqs devices steps flops flops_per_step count
+  lower-is-better, tolerance + IQR gated
+      s ms us us_per_step  (timings) and ppl mse abs % per_token whip (quality)
+  higher-is-better, tolerance + IQR gated
+      tok_per_s req_per_s flops_per_s x ratio
+
+Unknown units are reported but never gate (forward compatibility: a new
+benchmark row must not break the baseline comparison that predates it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import platform
+import statistics
+import subprocess
+import sys
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "BenchRecord", "BenchReport", "env_fingerprint", "write_bench_json",
+    "read_bench_json", "measure", "record_from_samples", "publish_report",
+    "compare_reports", "device_peaks", "peak_memory_bytes",
+    "STRICT_UNITS", "TIME_UNITS", "QUALITY_UNITS", "RATE_UNITS",
+]
+
+SCHEMA_VERSION = 1
+
+# --------------------------------------------------------------------------- #
+# unit policy
+# --------------------------------------------------------------------------- #
+# deterministic byte/count metrics: same code + same config => same value
+STRICT_UNITS = frozenset({"B", "tok", "pages", "seqs", "devices", "steps",
+                          "flops", "flops_per_step", "count"})
+# timings: lower is better, noisy on shared CPU runners -> tolerance + IQR
+TIME_UNITS = frozenset({"s", "ms", "us", "us_per_step"})
+# quality metrics: lower is better, float-noise tolerant
+QUALITY_UNITS = frozenset({"ppl", "mse", "abs", "%", "per_token", "whip"})
+# throughput/speedup/utilization: higher is better
+RATE_UNITS = frozenset({"tok_per_s", "req_per_s", "flops_per_s", "x", "ratio"})
+
+# below this magnitude a relative comparison is undefined (zero baseline)
+_ABS_FLOOR = 1e-12
+
+# fingerprint keys that must MATCH for a comparison to be meaningful; the
+# rest (git sha, jax version, device count...) are reported, not enforced
+_FINGERPRINT_GATES = ("smoke", "backend")
+_FINGERPRINT_KEYS = ("jax", "jaxlib", "backend", "device_kind",
+                     "device_count", "cpu_count", "git_sha", "smoke")
+
+
+# --------------------------------------------------------------------------- #
+# records + reports
+# --------------------------------------------------------------------------- #
+@dataclass
+class BenchRecord:
+    """One benchmark metric and the discipline that produced it.
+
+    ``value`` is the headline number (the median when ``repeats > 1``).
+    ``q25``/``median``/``q75`` summarize the repeat distribution; they are
+    ``None`` for single-shot records (deterministic counts, derived ratios).
+    """
+    name: str
+    value: float
+    unit: str
+    repeats: int = 1
+    warmup: int = 0
+    q25: Optional[float] = None
+    median: Optional[float] = None
+    q75: Optional[float] = None
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("record name must be non-empty")
+        if not self.unit:
+            raise ValueError(f"record {self.name!r}: unit must be non-empty")
+        if self.repeats < 1:
+            raise ValueError(f"record {self.name!r}: repeats must be >= 1")
+        self.value = float(self.value)
+
+    @property
+    def iqr(self) -> Optional[float]:
+        if self.q25 is None or self.q75 is None:
+            return None
+        return self.q75 - self.q25
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "value": self.value, "unit": self.unit,
+                "repeats": self.repeats, "warmup": self.warmup,
+                "q25": self.q25, "median": self.median, "q75": self.q75}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BenchRecord":
+        return cls(name=d["name"], value=d["value"], unit=d["unit"],
+                   repeats=int(d.get("repeats", 1)),
+                   warmup=int(d.get("warmup", 0)),
+                   q25=d.get("q25"), median=d.get("median"),
+                   q75=d.get("q75"))
+
+
+@dataclass
+class BenchReport:
+    """All of one benchmark module's records + the environment fingerprint."""
+    module: str
+    fingerprint: dict
+    records: List[BenchRecord] = field(default_factory=list)
+
+    def add(self, rec: BenchRecord) -> BenchRecord:
+        self.records.append(rec)
+        return rec
+
+    def to_dict(self) -> dict:
+        return {"schema": SCHEMA_VERSION, "module": self.module,
+                "fingerprint": dict(self.fingerprint),
+                "records": [r.to_dict() for r in self.records]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BenchReport":
+        if d.get("schema") != SCHEMA_VERSION:
+            raise ValueError(f"unsupported bench schema {d.get('schema')!r} "
+                             f"(expected {SCHEMA_VERSION})")
+        return cls(module=d["module"], fingerprint=dict(d["fingerprint"]),
+                   records=[BenchRecord.from_dict(r) for r in d["records"]])
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)))
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def env_fingerprint(smoke: bool = False) -> dict:
+    """The environment a benchmark ran in: enough to decide whether two
+    reports are comparable (smoke flag, backend) and to explain a drift
+    that is environmental rather than a code regression (versions, device)."""
+    import jax
+    try:
+        import jaxlib
+        jaxlib_version = jaxlib.__version__
+    except ImportError:                      # pragma: no cover - jax ships it
+        jaxlib_version = "unknown"
+    dev = jax.devices()[0]
+    return {
+        "jax": jax.__version__,
+        "jaxlib": jaxlib_version,
+        "backend": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", "unknown"),
+        "device_count": jax.device_count(),
+        "cpu_count": os.cpu_count() or 1,
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "git_sha": _git_sha(),
+        "smoke": bool(smoke),
+    }
+
+
+def bench_path(out_dir: str, module: str) -> Path:
+    short = module.rsplit(".", 1)[-1]
+    return Path(out_dir) / f"BENCH_{short}.json"
+
+
+def write_bench_json(report: BenchReport, out_dir: str) -> Path:
+    """Write ``BENCH_<module>.json`` (module short name) into ``out_dir``."""
+    path = bench_path(out_dir, report.module)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report.to_dict(), f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def read_bench_json(path: str) -> BenchReport:
+    with open(path) as f:
+        return BenchReport.from_dict(json.load(f))
+
+
+# --------------------------------------------------------------------------- #
+# measurement discipline
+# --------------------------------------------------------------------------- #
+def record_from_samples(name: str, samples: Sequence[float], unit: str,
+                        warmup: int = 0) -> BenchRecord:
+    """Summarize repeated measurements: value = median, q25/q75 = IQR.
+    ``statistics.quantiles`` needs n >= 2; a single sample degrades to a
+    repeats=1 record with the quartiles pinned to it."""
+    xs = sorted(float(s) for s in samples)
+    if not xs:
+        raise ValueError(f"record {name!r}: no samples")
+    med = statistics.median(xs)
+    if len(xs) >= 2:
+        q25, _, q75 = statistics.quantiles(xs, n=4, method="inclusive")
+    else:
+        q25 = q75 = med
+    return BenchRecord(name=name, value=med, unit=unit, repeats=len(xs),
+                       warmup=warmup, q25=q25, median=med, q75=q75)
+
+
+def measure(name: str, fn: Callable[[], object], unit: str = "s",
+            repeats: int = 5, warmup: int = 1) -> BenchRecord:
+    """Warmup+repeat timing of ``fn`` with ``time.perf_counter``.
+
+    ``fn`` must block on its own device work (``jax.block_until_ready``)
+    or the bracket times async dispatch instead of execution.
+    """
+    if repeats < 1:
+        raise ValueError("repeats must be >= 1")
+    for _ in range(warmup):
+        fn()
+    samples = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    return record_from_samples(name, samples, unit, warmup=warmup)
+
+
+def publish_report(report: BenchReport, registry) -> None:
+    """Mirror a report into a ``MetricsRegistry``: one ``bench_value`` gauge
+    per record (labels: module/name/unit), so benchmark outcomes ride the
+    same Prometheus surface as the serve/calibration metrics."""
+    for r in report.records:
+        registry.gauge("bench_value",
+                       {"module": report.module, "name": r.name,
+                        "unit": r.unit},
+                       help="benchmark record (see BENCH_*.json)"
+                       ).set(r.value)
+
+
+# --------------------------------------------------------------------------- #
+# device peaks + memory watermarks (analytic utilization estimates)
+# --------------------------------------------------------------------------- #
+# (peak f32-equivalent FLOP/s, peak HBM bytes/s) per device kind.  Analytic
+# datasheet numbers: utilization rows are ESTIMATES for trend-tracking, not
+# measurements.  CPU peak is per-core (scaled by cpu_count at lookup):
+# ~2 FMA ports x 8 f32 lanes x 2 flops x ~2GHz.
+_DEVICE_PEAKS: Dict[str, Tuple[float, float]] = {
+    "TPU v4": (275e12, 1.2e12),
+    "TPU v5 lite": (197e12, 0.82e12),
+    "TPU v5e": (197e12, 0.82e12),
+    "TPU v5p": (459e12, 2.77e12),
+    "TPU v6 lite": (918e12, 1.64e12),
+    "TPU v6e": (918e12, 1.64e12),
+}
+_CPU_PEAK_PER_CORE = (64e9, 10e9)
+
+
+def device_peaks() -> Optional[Tuple[float, float]]:
+    """(peak FLOP/s, peak bytes/s) for the default device, or ``None`` when
+    the device kind is unknown (utilization rows are skipped, not guessed)."""
+    import jax
+    dev = jax.devices()[0]
+    kind = getattr(dev, "device_kind", "")
+    if jax.default_backend() == "cpu":
+        n = os.cpu_count() or 1
+        return (_CPU_PEAK_PER_CORE[0] * n, _CPU_PEAK_PER_CORE[1])
+    for key, peaks in _DEVICE_PEAKS.items():
+        if key.lower() in str(kind).lower():
+            return peaks
+    return None
+
+
+def peak_memory_bytes() -> Tuple[float, str]:
+    """Device peak-memory watermark: ``device.memory_stats()`` where the
+    backend exposes it (TPU/GPU), else the live-buffer ``nbytes`` total —
+    a lower bound, labelled as such via the returned source tag."""
+    import jax
+    dev = jax.devices()[0]
+    stats = None
+    try:
+        stats = dev.memory_stats()
+    except (AttributeError, NotImplementedError, RuntimeError):
+        stats = None
+    if stats:
+        for key in ("peak_bytes_in_use", "bytes_in_use"):
+            if key in stats:
+                return float(stats[key]), f"memory_stats.{key}"
+    live = sum(getattr(a, "nbytes", 0) for a in jax.live_arrays())
+    return float(live), "live_arrays.nbytes"
+
+
+# --------------------------------------------------------------------------- #
+# compare: the regression gate
+# --------------------------------------------------------------------------- #
+@dataclass
+class MetricVerdict:
+    name: str
+    status: str          # "ok" | "regressed" | "missing" | "new" | "info"
+    detail: str
+
+
+def _direction(unit: str) -> Optional[str]:
+    if unit in STRICT_UNITS:
+        return "strict"
+    if unit in TIME_UNITS or unit in QUALITY_UNITS:
+        return "lower"
+    if unit in RATE_UNITS:
+        return "higher"
+    return None
+
+
+def _iqr_overlaps(base: BenchRecord, cur: BenchRecord, direction: str) -> bool:
+    """True when the repeat distributions overlap — the observed median
+    shift is within measurement noise.  Requires quartiles on both sides."""
+    if base.repeats < 2 or cur.repeats < 2:
+        return False
+    if None in (base.q25, base.q75, cur.q25, cur.q75):
+        return False
+    if direction == "lower":
+        return cur.q25 <= base.q75
+    return cur.q75 >= base.q25
+
+
+def _check_record(base: BenchRecord, cur: BenchRecord, tol: float
+                  ) -> MetricVerdict:
+    name = base.name
+    if cur.unit != base.unit:
+        return MetricVerdict(name, "regressed",
+                             f"unit changed {base.unit!r} -> {cur.unit!r}")
+    direction = _direction(base.unit)
+    if direction is None:
+        return MetricVerdict(
+            name, "info", f"unknown unit {base.unit!r}: not gated "
+            f"({base.value:g} -> {cur.value:g})")
+    if direction == "strict":
+        if cur.value != base.value:
+            return MetricVerdict(
+                name, "regressed",
+                f"deterministic metric changed: {base.value:g} -> "
+                f"{cur.value:g} [{base.unit}] (strict)")
+        return MetricVerdict(name, "ok", f"= {base.value:g} [{base.unit}]")
+    if not (math.isfinite(base.value) and math.isfinite(cur.value)):
+        return MetricVerdict(
+            name, "regressed",
+            f"non-finite value: {base.value} -> {cur.value}")
+    if abs(base.value) < _ABS_FLOOR:
+        # relative change from a (near-)zero baseline is undefined; report,
+        # don't gate — the strict units are where exact zeros matter
+        return MetricVerdict(
+            name, "info",
+            f"zero baseline: relative comparison undefined "
+            f"({base.value:g} -> {cur.value:g} [{base.unit}])")
+    # tol bounds the permitted multiplicative slowdown in both domains:
+    # lower-better values may grow to (1+tol)x the baseline, higher-better
+    # values may fall to baseline/(1+tol).  An additive margin would make
+    # the higher-better gate vacuous for tol >= 1 (a throughput can only
+    # drop 100% of itself), breaking loose CI tolerances.
+    if direction == "lower":
+        regressed = cur.value > base.value + tol * abs(base.value)
+        change = (cur.value - base.value) / abs(base.value)
+    else:
+        if base.value > 0:
+            regressed = cur.value < base.value / (1.0 + tol)
+        else:        # negative higher-better baseline: additive fallback
+            regressed = cur.value < base.value - tol * abs(base.value)
+        change = (base.value - cur.value) / abs(base.value)
+    if regressed and _iqr_overlaps(base, cur, direction):
+        return MetricVerdict(
+            name, "ok",
+            f"median moved {change:+.1%} but IQRs overlap "
+            f"(noise at repeats={cur.repeats}) [{base.unit}]")
+    if regressed:
+        return MetricVerdict(
+            name, "regressed",
+            f"{base.value:g} -> {cur.value:g} [{base.unit}] "
+            f"({'+' if direction == 'lower' else '-'}{abs(change):.1%} "
+            f"worse; tol {tol:.0%})")
+    return MetricVerdict(
+        name, "ok", f"{base.value:g} -> {cur.value:g} [{base.unit}]")
+
+
+def _tol_for(rec: BenchRecord, timing_tol: float, quality_tol: float,
+             overrides: Dict[str, float]) -> float:
+    if rec.name in overrides:
+        return overrides[rec.name]
+    if rec.unit in QUALITY_UNITS:
+        return quality_tol
+    return timing_tol
+
+
+def compare_reports(base: BenchReport, cur: BenchReport, *,
+                    timing_tol: float = 0.5, quality_tol: float = 0.25,
+                    tol_overrides: Optional[Dict[str, float]] = None,
+                    allow_env_mismatch: bool = False
+                    ) -> Tuple[List[MetricVerdict], List[str]]:
+    """Compare two reports record-by-record.
+
+    Returns (verdicts, errors).  ``errors`` are comparison-level failures
+    (fingerprint gate mismatch, module mismatch); any ``regressed`` or
+    ``missing`` verdict is a metric-level failure.  Metrics present only in
+    ``cur`` are new — noted, never gated (a baseline refresh picks them up).
+    """
+    errors: List[str] = []
+    if base.module != cur.module:
+        errors.append(f"module mismatch: baseline {base.module!r} vs "
+                      f"current {cur.module!r}")
+        return [], errors
+    for key in _FINGERPRINT_GATES:
+        bv, cv = base.fingerprint.get(key), cur.fingerprint.get(key)
+        if bv != cv:
+            msg = (f"fingerprint {key!r} mismatch: baseline {bv!r} vs "
+                   f"current {cv!r}")
+            if allow_env_mismatch:
+                errors_note = msg  # surfaced through a verdict below
+                _ = errors_note
+            else:
+                errors.append(msg + " (pass --allow-env-mismatch to "
+                              "compare anyway)")
+    if errors:
+        return [], errors
+    overrides = tol_overrides or {}
+    cur_by_name = {r.name: r for r in cur.records}
+    verdicts: List[MetricVerdict] = []
+    for b in base.records:
+        c = cur_by_name.pop(b.name, None)
+        if c is None:
+            verdicts.append(MetricVerdict(
+                b.name, "missing",
+                f"tracked metric absent from current run [{b.unit}]"))
+            continue
+        verdicts.append(_check_record(
+            b, c, _tol_for(b, timing_tol, quality_tol, overrides)))
+    for name in cur_by_name:
+        verdicts.append(MetricVerdict(
+            name, "new", "not in baseline (refresh baselines to track)"))
+    return verdicts, errors
+
+
+def _parse_overrides(pairs: Iterable[str]) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for p in pairs:
+        if "=" not in p:
+            raise ValueError(f"--tol expects name=fraction, got {p!r}")
+        name, _, v = p.rpartition("=")
+        out[name] = float(v)
+    return out
+
+
+def _resolve_pairs(base: str, cur: str) -> List[Tuple[Path, Path]]:
+    """File-vs-file or dir-vs-dir: in dir mode every baseline BENCH_*.json
+    must have a same-named counterpart in the current dir."""
+    bp, cp = Path(base), Path(cur)
+    if bp.is_dir() != cp.is_dir():
+        raise ValueError("baseline and current must both be files or both "
+                         "be directories")
+    if not bp.is_dir():
+        return [(bp, cp)]
+    pairs = []
+    base_files = sorted(bp.glob("BENCH_*.json"))
+    if not base_files:
+        raise ValueError(f"{bp}: no BENCH_*.json baselines found")
+    for b in base_files:
+        pairs.append((b, cp / b.name))
+    return pairs
+
+
+def cmd_compare(args) -> int:
+    try:
+        pairs = _resolve_pairs(args.baseline, args.current)
+        overrides = _parse_overrides(args.tol or [])
+    except (ValueError, OSError) as e:
+        print(f"[bench.compare] ERROR: {e}", file=sys.stderr)
+        return 2
+    n_regressed = n_missing = n_ok = 0
+    failed = False
+    for bpath, cpath in pairs:
+        try:
+            base = read_bench_json(bpath)
+        except (OSError, ValueError, KeyError) as e:
+            print(f"[bench.compare] ERROR reading baseline {bpath}: {e}",
+                  file=sys.stderr)
+            return 2
+        if not cpath.exists():
+            print(f"[bench.compare] FAIL {base.module}: current report "
+                  f"{cpath} missing (module failed or was not run)")
+            failed = True
+            continue
+        try:
+            cur = read_bench_json(cpath)
+        except (OSError, ValueError, KeyError) as e:
+            print(f"[bench.compare] ERROR reading current {cpath}: {e}",
+                  file=sys.stderr)
+            return 2
+        verdicts, errors = compare_reports(
+            base, cur, timing_tol=args.timing_tol,
+            quality_tol=args.quality_tol, tol_overrides=overrides,
+            allow_env_mismatch=args.allow_env_mismatch)
+        for e in errors:
+            print(f"[bench.compare] FAIL {base.module}: {e}")
+            failed = True
+        for v in verdicts:
+            bad = v.status in ("regressed", "missing")
+            if bad:
+                failed = True
+                n_regressed += v.status == "regressed"
+                n_missing += v.status == "missing"
+            else:
+                n_ok += v.status == "ok"
+            if bad or v.status in ("new", "info") or args.verbose:
+                print(f"[bench.compare] {v.status.upper():9s} "
+                      f"{base.module}:{v.name}: {v.detail}")
+        # environment drift is worth a line even when everything passes
+        for key in _FINGERPRINT_KEYS:
+            bv, cv = base.fingerprint.get(key), cur.fingerprint.get(key)
+            if bv != cv and key not in _FINGERPRINT_GATES and args.verbose:
+                print(f"[bench.compare] note {base.module}: fingerprint "
+                      f"{key} {bv!r} -> {cv!r}")
+    status = "FAIL" if failed else "OK"
+    print(f"[bench.compare] {status}: {n_ok} ok, {n_regressed} regressed, "
+          f"{n_missing} missing across {len(pairs)} report(s)")
+    return 1 if failed else 0
+
+
+def cmd_fingerprint(args) -> int:
+    print(json.dumps(env_fingerprint(smoke=args.smoke), indent=1,
+                     sort_keys=True))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.bench",
+        description="Benchmark telemetry: compare BENCH_*.json reports "
+                    "(regression gate) or print the environment fingerprint.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    cp = sub.add_parser("compare", help="gate current vs baseline reports")
+    cp.add_argument("baseline", help="baseline BENCH_*.json file or directory")
+    cp.add_argument("current", help="current BENCH_*.json file or directory")
+    cp.add_argument("--timing-tol", type=float, default=0.5,
+                    help="relative tolerance for timing/throughput metrics "
+                         "(default 0.5; CI on shared CPU runners passes a "
+                         "looser one)")
+    cp.add_argument("--quality-tol", type=float, default=0.25,
+                    help="relative tolerance for quality metrics "
+                         "(ppl/mse/...; default 0.25)")
+    cp.add_argument("--tol", action="append", metavar="NAME=FRAC",
+                    help="per-metric tolerance override (repeatable)")
+    cp.add_argument("--allow-env-mismatch", action="store_true",
+                    help="compare across smoke/backend fingerprint "
+                         "mismatches (off by default)")
+    cp.add_argument("--verbose", action="store_true",
+                    help="print every metric verdict, not just failures")
+    cp.set_defaults(fn=cmd_compare)
+    fp = sub.add_parser("fingerprint", help="print the env fingerprint")
+    fp.add_argument("--smoke", action="store_true")
+    fp.set_defaults(fn=cmd_fingerprint)
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,14 +1,17 @@
 """Validate serve observability artifacts (the CI smoke's parser).
 
   PYTHONPATH=src python -m repro.obs.validate \\
-      --trace /tmp/trace.jsonl --metrics /tmp/metrics.prom
+      --trace /tmp/trace.jsonl --metrics /tmp/metrics.prom \\
+      --bench /tmp/BENCH_serve_bench.json
 
 Checks that the JSONL span log parses and satisfies the event schema
 (``repro.obs.trace.EVENT_FIELDS``) with a complete request lifecycle
-present, and that the Prometheus snapshot parses and contains the serve
-stack's required metric families.  Exits non-zero with a reason on any
-failure — wiring it after a ``--trace-out``/``--metrics-out`` serve run
-turns "observability emits something" into a hard CI assertion.
+present, that the Prometheus snapshot parses and contains the serve
+stack's required metric families, and that ``BENCH_*.json`` benchmark
+reports carry a complete environment fingerprint plus well-formed records
+(repeats >= 1, non-empty units, ordered quartiles).  Exits non-zero with a
+reason on any failure — wiring it after a serve/bench run turns
+"observability emits something" into a hard CI assertion.
 """
 from __future__ import annotations
 
@@ -16,6 +19,7 @@ import argparse
 import sys
 from typing import List, Set
 
+from repro.obs.bench import BenchReport, read_bench_json
 from repro.obs.trace import read_trace, validate_trace
 
 # metric families every traced+metered serve run must publish
@@ -80,14 +84,51 @@ def check_trace(path: str) -> List[dict]:
     return events
 
 
+# fingerprint keys every BENCH report must carry (repro.obs.bench emits
+# more; these are the ones compare + humans depend on)
+REQUIRED_BENCH_FINGERPRINT = ("jax", "backend", "device_kind",
+                              "device_count", "cpu_count", "git_sha",
+                              "smoke")
+
+
+def check_bench(path: str) -> BenchReport:
+    """Schema-check one ``BENCH_<module>.json`` report.
+
+    ``read_bench_json`` already enforces the record invariants (non-empty
+    name/unit, repeats >= 1) at construction; this adds the artifact-level
+    checks: a complete fingerprint, at least one record, and internally
+    consistent quartiles.
+    """
+    report = read_bench_json(path)
+    fp = report.fingerprint or {}
+    missing = [k for k in REQUIRED_BENCH_FINGERPRINT if k not in fp]
+    if missing:
+        raise ValueError(f"{path}: fingerprint missing {missing}")
+    if not report.records:
+        raise ValueError(f"{path}: report has no records")
+    for rec in report.records:
+        quartiles = (rec.q25, rec.median, rec.q75)
+        if any(q is not None for q in quartiles):
+            if any(q is None for q in quartiles):
+                raise ValueError(f"{path}: record {rec.name!r} has partial "
+                                 f"quartiles {quartiles}")
+            if not (rec.q25 <= rec.median <= rec.q75):
+                raise ValueError(f"{path}: record {rec.name!r} has "
+                                 f"disordered quartiles {quartiles}")
+    return report
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--trace", default=None, help="JSONL span log to check")
     ap.add_argument("--metrics", default=None,
                     help="Prometheus textfile snapshot to check")
+    ap.add_argument("--bench", action="append", default=[], metavar="JSON",
+                    help="BENCH_<module>.json report to check (repeatable)")
     args = ap.parse_args(argv)
-    if not args.trace and not args.metrics:
-        ap.error("nothing to validate: pass --trace and/or --metrics")
+    if not args.trace and not args.metrics and not args.bench:
+        ap.error("nothing to validate: pass --trace, --metrics and/or "
+                 "--bench")
     try:
         if args.trace:
             events = check_trace(args.trace)
@@ -101,8 +142,12 @@ def main(argv=None) -> int:
                 raise ValueError(f"metrics snapshot missing {missing}")
             print(f"[obs.validate] metrics OK: {len(names)} families, "
                   f"all {len(REQUIRED_SERVE_METRICS)} required present")
-    except (ValueError, OSError) as e:
-        print(f"[obs.validate] FAIL: {e}", file=sys.stderr)
+        for path in args.bench:
+            report = check_bench(path)
+            print(f"[obs.validate] bench OK: {report.module}, "
+                  f"{len(report.records)} records, fingerprint complete")
+    except (ValueError, KeyError, TypeError, OSError) as e:
+        print(f"[obs.validate] FAIL: {e!r}", file=sys.stderr)
         return 1
     return 0
 

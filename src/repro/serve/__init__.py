@@ -8,6 +8,7 @@ from repro.serve.cache_adapters import (DecodeCtx, GQAPages, MLALatentPages,
                                         PrefillCtx, SSMStatePool,
                                         adapters_for)
 from repro.serve.engine import PagedServeEngine, Request, ServeEngine
+from repro.serve.loadgen import LoadSpec, SLO, build_workload, run_workload
 from repro.serve.page_pool import PagePool
 from repro.serve.prefix_index import PrefixIndex
 from repro.serve.scheduler import SeqState, TokenScheduler

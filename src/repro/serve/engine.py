@@ -36,7 +36,7 @@ instead of device time.
 from __future__ import annotations
 
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -271,11 +271,70 @@ class PagedServeEngine:
         sched = TokenScheduler(self.pool, self.slots,
                                base_seed=self.base_seed, obs=self.obs)
         sched.add(list(requests))
+        stats = self._serve_loop(sched)
+        if verbose:
+            print(stats)
+        return requests, stats
+
+    def serve_open_loop(self, arrivals, verbose: bool = False):
+        """Open-loop serving: ``arrivals`` is ``[(t_offset_s, Request)]``
+        sorted by offset.  Requests become visible to the scheduler only
+        once the serving clock (``time.perf_counter`` from call entry)
+        passes their offset — real admission under load, not a
+        pre-enqueued batch.  The load generator (``repro.serve.loadgen``)
+        builds the arrival list and turns the returned stats into a
+        goodput/SLO report.
+
+        Sampling parity contract: arrival timing changes *when* a request
+        is admitted, never *what* it decodes — outputs are token-identical
+        to ``generate`` over the same requests."""
+        arrivals = list(arrivals)
+        if any(b[0] < a[0] for a, b in zip(arrivals, arrivals[1:])):
+            raise ValueError("arrivals must be sorted by time offset")
+        sched = TokenScheduler(self.pool, self.slots,
+                               base_seed=self.base_seed, obs=self.obs)
+        pending = list(arrivals)[::-1]          # pop() from the tail = head
+        t0 = time.perf_counter()
+
+        def feed():
+            now = time.perf_counter() - t0
+            batch = []
+            while pending and pending[-1][0] <= now:
+                batch.append(pending.pop()[1])
+            if batch:
+                sched.add(batch)
+            if not pending:
+                return None                     # drained
+            return max(0.0, pending[-1][0] - now)
+
+        itl_by_rid: Dict[int, List[float]] = {}
+        stats = self._serve_loop(sched, feed=feed, itl_by_rid=itl_by_rid)
+        stats["serve_duration_s"] = time.perf_counter() - t0
+        stats["request_latencies"] = sched.latencies()
+        stats["itl_by_rid"] = itl_by_rid
+        if verbose:
+            print({k: v for k, v in stats.items()
+                   if k not in ("request_latencies", "itl_by_rid")})
+        return [r for _, r in arrivals], stats
+
+    def _serve_loop(self, sched: TokenScheduler, feed=None,
+                    itl_by_rid: Optional[Dict[int, List[float]]] = None):
+        """The continuous-batching loop over one scheduler.  ``feed`` is
+        polled once per iteration and returns seconds until the next
+        arrival (``None`` = no more arrivals); ``itl_by_rid`` optionally
+        collects per-request inter-token latency samples (the loadgen's
+        p99-ITL SLO input) — ``None`` skips the bookkeeping entirely."""
         prefill_s = decode_s = 0.0
         n_prefill = n_decode = 0
         tracing = self.obs.tracing
 
-        while sched.has_work():
+        while True:
+            wait = feed() if feed is not None else None
+            if not sched.has_work():
+                if wait is None:
+                    break                     # drained + idle: done
+                time.sleep(wait)              # idle until the next arrival
+                continue
             # admit one request at a time: each admission's prefix match must
             # see the pages the *previous* admission just prefilled and
             # registered, so a batch sharing a prompt hits within one wave
@@ -342,6 +401,10 @@ class PagedServeEngine:
             # token out of this step
             for _ in range(n_run):
                 self._h_itl.observe(dt)
+            if itl_by_rid is not None:
+                for s in sched.running:
+                    if s is not None:
+                        itl_by_rid.setdefault(s.req.rid, []).append(dt)
             if tracing:
                 self.obs.emit("decode_step", n_running=n_run, duration_s=dt,
                               rids=[s.req.rid for s in sched.running
@@ -376,9 +439,7 @@ class PagedServeEngine:
             # packed QTensors report their real (codes + scales) footprint
             "weight_bytes": memory_bytes(self.params),
         }
-        if verbose:
-            print(stats)
-        return requests, stats
+        return stats
 
 
 class ServeEngine:

@@ -1,0 +1,202 @@
+"""Open-loop load generator + goodput/SLO reporting for the paged runtime.
+
+Serving benchmarks that pre-enqueue a request batch measure the engine at
+full occupancy from step zero — they never exercise admission under load,
+queueing delay, or the latency a user actually sees.  This module generates
+the production traffic shape instead:
+
+  * **open-loop Poisson arrivals**: inter-arrival gaps are exponential at a
+    configured offered rate, independent of service completions (an
+    overloaded server keeps receiving requests — closed-loop generators
+    hide overload by self-throttling);
+  * **configurable prompt/output length distributions** (inclusive uniform
+    ranges), matching the heterogeneous lengths real traffic has;
+  * a **shared-prefix traffic mix**: a configurable fraction of requests
+    carry the same system prompt (the prefix-cache production shape), the
+    rest are fully divergent.
+
+The workload is deterministic under a fixed seed — identical arrival times,
+prompts and budgets on every build — so goodput numbers are comparable
+across runs and the regression gate (``repro.obs.bench``) can track them.
+
+``run_workload`` drives ``PagedServeEngine.serve_open_loop`` (real admission
+through the ``TokenScheduler``, not a pre-enqueued batch) and reports
+**goodput**: the fraction of requests that met BOTH the TTFT SLO and the
+p99 inter-token-latency SLO.  Throughput without an SLO rewards batching
+everything forever; goodput is the number a capacity planner can use.  The
+report also publishes into the engine's ``repro.obs`` metrics registry
+(``serve_goodput_ratio``, ``serve_slo_*_misses_total``, ``loadgen_*``) so a
+``--metrics-out`` snapshot carries it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.scheduler import Request
+
+__all__ = ["LoadSpec", "SLO", "build_workload", "goodput_report",
+           "run_workload", "publish_goodput"]
+
+
+@dataclass(frozen=True)
+class LoadSpec:
+    """One load-generation scenario (deterministic given ``seed``)."""
+    n_requests: int = 16
+    rate_rps: float = 8.0                   # offered (open-loop) arrival rate
+    prompt_len: Tuple[int, int] = (8, 24)   # inclusive uniform range
+    max_new: Tuple[int, int] = (4, 12)      # inclusive uniform range
+    shared_prefix_len: int = 0              # 0 = no shared-prefix traffic
+    shared_frac: float = 0.5                # fraction carrying the prefix
+    temperature: float = 0.0                # 0 = greedy (parity oracle)
+    top_k: int = 0
+    seed: int = 0
+
+    def replace(self, **kw) -> "LoadSpec":
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class SLO:
+    """Per-request service-level objectives (seconds)."""
+    ttft_s: float = 2.0                     # enqueue -> first token
+    itl_p99_s: float = 0.5                  # p99 inter-token latency
+
+
+def _rng_range(rng, lohi: Tuple[int, int]) -> int:
+    lo, hi = lohi
+    if not 1 <= lo <= hi:
+        raise ValueError(f"length range must satisfy 1 <= lo <= hi: {lohi}")
+    return int(rng.integers(lo, hi + 1))
+
+
+def build_workload(spec: LoadSpec, vocab_size: int
+                   ) -> List[Tuple[float, Request]]:
+    """Materialize ``[(arrival_offset_s, Request)]``, sorted by offset.
+
+    Arrivals are an open-loop Poisson process: exponential inter-arrival
+    gaps at ``rate_rps`` (the first request arrives after one gap).  All
+    randomness flows from one ``default_rng(seed)`` in a fixed draw order,
+    so the workload — times, prompts, budgets, traffic mix — is
+    bit-reproducible.
+    """
+    if spec.n_requests < 1:
+        raise ValueError(f"n_requests must be >= 1, got {spec.n_requests}")
+    if spec.rate_rps <= 0:
+        raise ValueError(f"rate_rps must be > 0, got {spec.rate_rps}")
+    if not 0.0 <= spec.shared_frac <= 1.0:
+        raise ValueError(f"shared_frac must be in [0, 1], "
+                         f"got {spec.shared_frac}")
+    rng = np.random.default_rng(spec.seed)
+    gaps = rng.exponential(1.0 / spec.rate_rps, spec.n_requests)
+    offsets = np.cumsum(gaps)
+    shared = rng.integers(0, vocab_size, spec.shared_prefix_len)
+    out: List[Tuple[float, Request]] = []
+    for i in range(spec.n_requests):
+        plen = _rng_range(rng, spec.prompt_len)
+        max_new = _rng_range(rng, spec.max_new)
+        use_shared = (spec.shared_prefix_len > 0
+                      and float(rng.random()) < spec.shared_frac)
+        suffix = rng.integers(0, vocab_size, plen)
+        prompt = np.concatenate([shared, suffix]) if use_shared else suffix
+        out.append((float(offsets[i]),
+                    Request(prompt=prompt.astype(np.int64),
+                            max_new=max_new,
+                            temperature=spec.temperature,
+                            top_k=spec.top_k)))
+    return out
+
+
+def goodput_report(requests: Sequence[Request],
+                   latencies: Dict[int, Dict[str, float]],
+                   itl_by_rid: Dict[int, List[float]],
+                   slo: SLO) -> Dict[str, float]:
+    """Score served requests against the SLOs.
+
+    A request is *good* iff it finished, its TTFT met ``slo.ttft_s``, and
+    the p99 of its inter-token-latency samples met ``slo.itl_p99_s`` (a
+    request with no decode steps beyond the prefill token trivially meets
+    the ITL SLO).  ``goodput`` = good / submitted — an unfinished request
+    counts against goodput, exactly like a user who never got an answer.
+    """
+    n = len(requests)
+    n_finished = n_good = ttft_misses = itl_misses = 0
+    ttfts, itl_p99s = [], []
+    for req in requests:
+        if not req.done:
+            continue
+        n_finished += 1
+        lat = latencies.get(req.rid)
+        ttft = lat["ttft_s"] if lat else float("inf")
+        itls = itl_by_rid.get(req.rid, [])
+        itl_p99 = float(np.percentile(itls, 99)) if itls else 0.0
+        ttfts.append(ttft)
+        itl_p99s.append(itl_p99)
+        ttft_ok = ttft <= slo.ttft_s
+        itl_ok = itl_p99 <= slo.itl_p99_s
+        ttft_misses += not ttft_ok
+        itl_misses += not itl_ok
+        n_good += ttft_ok and itl_ok
+    return {
+        "n_requests": n,
+        "n_finished": n_finished,
+        "n_good": n_good,
+        "goodput": n_good / max(1, n),
+        "slo_ttft_s": slo.ttft_s,
+        "slo_itl_p99_s": slo.itl_p99_s,
+        "ttft_misses": ttft_misses,
+        "itl_misses": itl_misses,
+        "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
+        "itl_p99_worst_s": max(itl_p99s) if itl_p99s else 0.0,
+    }
+
+
+def publish_goodput(metrics, spec: LoadSpec, slo: SLO,
+                    report: Dict[str, float], duration_s: float) -> None:
+    """Mirror a goodput report into a ``repro.obs`` metrics registry —
+    the loadgen's metric families ride the same Prometheus snapshot as the
+    serve stack's."""
+    metrics.gauge("serve_goodput_ratio",
+                  help="fraction of requests meeting the TTFT and p99-ITL "
+                       "SLOs").set(report["goodput"])
+    metrics.gauge("serve_slo_ttft_seconds",
+                  help="TTFT SLO threshold").set(slo.ttft_s)
+    metrics.gauge("serve_slo_itl_p99_seconds",
+                  help="p99 inter-token-latency SLO threshold"
+                  ).set(slo.itl_p99_s)
+    metrics.counter("serve_slo_ttft_misses_total",
+                    help="finished requests that missed the TTFT SLO"
+                    ).inc(report["ttft_misses"])
+    metrics.counter("serve_slo_itl_misses_total",
+                    help="finished requests that missed the p99-ITL SLO"
+                    ).inc(report["itl_misses"])
+    metrics.counter("loadgen_requests_total",
+                    help="requests submitted by the load generator"
+                    ).inc(report["n_requests"])
+    metrics.gauge("loadgen_offered_rps",
+                  help="configured open-loop arrival rate"
+                  ).set(spec.rate_rps)
+    metrics.gauge("loadgen_achieved_rps",
+                  help="finished requests / serve duration").set(
+                      report["n_finished"] / max(duration_s, 1e-9))
+
+
+def run_workload(engine, spec: LoadSpec, slo: Optional[SLO] = None,
+                 verbose: bool = False):
+    """Generate a workload, serve it open-loop, and return
+    ``(requests, stats)`` where ``stats`` is the engine's serve stats plus
+    the goodput report (``goodput``, SLO miss counts, offered/achieved
+    rates).  Metrics are published into ``engine.obs.metrics``."""
+    slo = slo if slo is not None else SLO()
+    workload = build_workload(spec, engine.cfg.vocab_size)
+    reqs, stats = engine.serve_open_loop(workload, verbose=verbose)
+    report = goodput_report(reqs, stats["request_latencies"],
+                            stats["itl_by_rid"], slo)
+    duration = stats["serve_duration_s"]
+    publish_goodput(engine.obs.metrics, spec, slo, report, duration)
+    stats.update(report)
+    stats["offered_rps"] = spec.rate_rps
+    stats["achieved_rps"] = report["n_finished"] / max(duration, 1e-9)
+    return reqs, stats

@@ -196,6 +196,14 @@ class TokenScheduler:
             "preemptions": self._delta(self._c_preempt),
         }
 
+    def latencies(self) -> Dict[int, Dict[str, float]]:
+        """Per-request latency snapshot, rid-keyed: TTFT (from first
+        enqueue) and the latest admission's queue wait.  The load
+        generator's goodput/SLO inputs — only requests whose first token
+        was produced appear."""
+        return {rid: {"ttft_s": t, "queue_s": self._queue_s.get(rid, 0.0)}
+                for rid, t in self._ttft.items()}
+
     # ------------------------------------------------------------- admission
     def admit(self, limit: Optional[int] = None) -> List[SeqState]:
         """Fill free slots from the waiting queue while pages last.  Returns

@@ -1,0 +1,294 @@
+"""repro.obs.bench: record discipline, artifact round-trip, regression gate."""
+import json
+
+import pytest
+
+from repro.obs.bench import (BenchRecord, BenchReport, bench_path,
+                             compare_reports, env_fingerprint, main,
+                             measure, read_bench_json, record_from_samples,
+                             write_bench_json)
+from repro.obs.validate import check_bench
+from repro.obs.validate import main as validate_main
+
+FP = {"jax": "0.0.test", "jaxlib": "0.0.test", "backend": "cpu",
+      "device_kind": "cpu", "device_count": 1, "cpu_count": 1,
+      "python": "3.x", "platform": "test", "git_sha": "deadbeef",
+      "smoke": True}
+
+
+def _report(records, module="benchmarks.demo", fp=None):
+    return BenchReport(module=module, fingerprint=dict(fp or FP),
+                       records=records)
+
+
+def _write(tmp_path, name, report):
+    d = tmp_path / name
+    d.mkdir(exist_ok=True)
+    return str(write_bench_json(report, str(d)))
+
+
+# --------------------------------------------------------------------------- #
+# records + measurement discipline
+# --------------------------------------------------------------------------- #
+def test_record_validation():
+    with pytest.raises(ValueError):
+        BenchRecord(name="", value=1.0, unit="s")
+    with pytest.raises(ValueError):
+        BenchRecord(name="x", value=1.0, unit="")
+    with pytest.raises(ValueError):
+        BenchRecord(name="x", value=1.0, unit="s", repeats=0)
+
+
+def test_record_from_samples_median_and_iqr():
+    rec = record_from_samples("t", [3.0, 1.0, 2.0, 4.0, 100.0], "s",
+                              warmup=1)
+    assert rec.repeats == 5 and rec.warmup == 1
+    assert rec.value == rec.median == 3.0
+    assert rec.q25 <= rec.median <= rec.q75
+    assert rec.iqr is not None and rec.iqr > 0
+
+
+def test_record_from_samples_single_sample_degrades():
+    rec = record_from_samples("t", [2.5], "s")
+    assert rec.repeats == 1
+    assert rec.q25 == rec.median == rec.q75 == 2.5
+
+
+def test_measure_runs_warmup_plus_repeats():
+    calls = []
+    rec = measure("t", lambda: calls.append(1), unit="s", repeats=4,
+                  warmup=2)
+    assert len(calls) == 6          # 2 warmup + 4 timed
+    assert rec.repeats == 4 and rec.warmup == 2
+    assert rec.value >= 0
+
+
+def test_env_fingerprint_complete():
+    fp = env_fingerprint(smoke=True)
+    for key in ("jax", "backend", "device_kind", "device_count",
+                "cpu_count", "git_sha", "smoke"):
+        assert key in fp
+    assert fp["smoke"] is True
+    assert env_fingerprint()["smoke"] is False
+
+
+def test_report_round_trip(tmp_path):
+    rep = _report([BenchRecord("a,b", 1.5, "s"),
+                   record_from_samples("c", [1.0, 2.0, 3.0], "tok_per_s")])
+    path = write_bench_json(rep, str(tmp_path))
+    assert path.name == "BENCH_demo.json"
+    back = read_bench_json(str(path))
+    assert back.module == rep.module
+    assert back.fingerprint == rep.fingerprint
+    assert [r.to_dict() for r in back.records] == \
+        [r.to_dict() for r in rep.records]
+
+
+def test_read_rejects_wrong_schema(tmp_path):
+    p = tmp_path / "BENCH_bad.json"
+    p.write_text(json.dumps({"schema": 999, "module": "m",
+                             "fingerprint": {}, "records": []}))
+    with pytest.raises(ValueError, match="schema"):
+        read_bench_json(str(p))
+
+
+def test_bench_path_uses_short_module_name(tmp_path):
+    assert bench_path(str(tmp_path),
+                      "benchmarks.serve_bench").name == "BENCH_serve_bench.json"
+
+
+# --------------------------------------------------------------------------- #
+# compare_reports semantics
+# --------------------------------------------------------------------------- #
+def _statuses(verdicts):
+    return {v.name: v.status for v in verdicts}
+
+
+def test_compare_detects_timing_regression():
+    base = _report([record_from_samples("t", [1.0, 1.01, 1.02], "s")])
+    cur = _report([record_from_samples("t", [3.0, 3.01, 3.02], "s")])
+    verdicts, errors = compare_reports(base, cur, timing_tol=0.5)
+    assert not errors
+    assert _statuses(verdicts) == {"t": "regressed"}
+
+
+def test_compare_improvement_passes():
+    base = _report([record_from_samples("t", [2.0, 2.1, 2.2], "s"),
+                    record_from_samples("thru", [10.0, 10.5, 11.0],
+                                        "tok_per_s")])
+    cur = _report([record_from_samples("t", [1.0, 1.05, 1.1], "s"),
+                   record_from_samples("thru", [20.0, 21.0, 22.0],
+                                       "tok_per_s")])
+    verdicts, errors = compare_reports(base, cur)
+    assert not errors
+    assert set(_statuses(verdicts).values()) == {"ok"}
+
+
+def test_compare_throughput_drop_regresses():
+    base = _report([record_from_samples("thru", [20.0, 20.1, 20.2],
+                                        "tok_per_s")])
+    cur = _report([record_from_samples("thru", [5.0, 5.1, 5.2],
+                                       "tok_per_s")])
+    verdicts, _ = compare_reports(base, cur, timing_tol=0.5)
+    assert _statuses(verdicts) == {"thru": "regressed"}
+
+
+def test_compare_loose_tol_still_gates_throughput():
+    # tol is a multiplicative slowdown bound: even the loose CI tolerance
+    # (tol=20 -> 21x) must catch a 50x throughput collapse; an additive
+    # margin would make any tol >= 1 vacuous for higher-better units
+    base = _report([BenchRecord("thru", 1000.0, "tok_per_s")])
+    verdicts, _ = compare_reports(
+        base, _report([BenchRecord("thru", 20.0, "tok_per_s")]),
+        timing_tol=20.0)
+    assert _statuses(verdicts) == {"thru": "regressed"}
+    # a drop within the bound (1000 -> 100 > 1000/21) passes
+    verdicts, _ = compare_reports(
+        base, _report([BenchRecord("thru", 100.0, "tok_per_s")]),
+        timing_tol=20.0)
+    assert _statuses(verdicts) == {"thru": "ok"}
+
+
+def test_compare_missing_vs_new_metric():
+    base = _report([BenchRecord("kept", 1, "tok"), BenchRecord("gone", 2,
+                                                               "tok")])
+    cur = _report([BenchRecord("kept", 1, "tok"),
+                   BenchRecord("added", 3, "tok")])
+    verdicts, errors = compare_reports(base, cur)
+    assert not errors
+    st = _statuses(verdicts)
+    assert st["gone"] == "missing"          # tracked metric vanished: fails
+    assert st["added"] == "new"             # new metric: never gates
+    assert st["kept"] == "ok"
+
+
+def test_compare_zero_baseline_is_informational():
+    base = _report([BenchRecord("t", 0.0, "s")])
+    cur = _report([BenchRecord("t", 5.0, "s")])
+    verdicts, _ = compare_reports(base, cur)
+    assert _statuses(verdicts) == {"t": "info"}
+
+
+def test_compare_iqr_overlap_rescues_noise():
+    # median drifted +60% (beyond tol) but the repeat distributions overlap:
+    # noise, not regression
+    base = _report([BenchRecord("t", 1.0, "s", repeats=3, warmup=1,
+                                q25=0.9, median=1.0, q75=1.8)])
+    cur = _report([BenchRecord("t", 1.6, "s", repeats=3, warmup=1,
+                               q25=1.5, median=1.6, q75=1.7)])
+    verdicts, _ = compare_reports(base, cur, timing_tol=0.5)
+    assert _statuses(verdicts) == {"t": "ok"}
+    # single-shot records get no IQR rescue
+    base1 = _report([BenchRecord("t", 1.0, "s")])
+    cur1 = _report([BenchRecord("t", 1.6, "s")])
+    verdicts, _ = compare_reports(base1, cur1, timing_tol=0.5)
+    assert _statuses(verdicts) == {"t": "regressed"}
+
+
+def test_compare_strict_units_exact():
+    base = _report([BenchRecord("bytes", 4096, "B")])
+    ok, _ = compare_reports(base, _report([BenchRecord("bytes", 4096, "B")]))
+    assert _statuses(ok) == {"bytes": "ok"}
+    # even an *improvement* in a deterministic metric is drift: strict units
+    # gate on equality, the baseline must be refreshed deliberately
+    bad, _ = compare_reports(base, _report([BenchRecord("bytes", 4095, "B")]))
+    assert _statuses(bad) == {"bytes": "regressed"}
+
+
+def test_compare_unit_change_and_unknown_unit():
+    base = _report([BenchRecord("a", 1.0, "s"), BenchRecord("b", 2.0,
+                                                            "blorps")])
+    cur = _report([BenchRecord("a", 1.0, "ms"), BenchRecord("b", 9.0,
+                                                            "blorps")])
+    st = _statuses(compare_reports(base, cur)[0])
+    assert st["a"] == "regressed"           # unit changed
+    assert st["b"] == "info"                # unknown unit: never gates
+
+
+def test_compare_fingerprint_gate():
+    base = _report([BenchRecord("t", 1.0, "s")])
+    cur_fp = dict(FP, smoke=False)
+    cur = _report([BenchRecord("t", 1.0, "s")], fp=cur_fp)
+    verdicts, errors = compare_reports(base, cur)
+    assert errors and not verdicts          # smoke-vs-full never compares
+    verdicts, errors = compare_reports(base, cur, allow_env_mismatch=True)
+    assert not errors and _statuses(verdicts) == {"t": "ok"}
+
+
+def test_compare_tol_override():
+    base = _report([record_from_samples("t", [1.0, 1.0, 1.0], "s")])
+    cur = _report([record_from_samples("t", [1.4, 1.4, 1.4], "s")])
+    verdicts, _ = compare_reports(base, cur, timing_tol=0.1)
+    assert _statuses(verdicts) == {"t": "regressed"}
+    verdicts, _ = compare_reports(base, cur, timing_tol=0.1,
+                                  tol_overrides={"t": 1.0})
+    assert _statuses(verdicts) == {"t": "ok"}
+
+
+# --------------------------------------------------------------------------- #
+# the CLI: exit codes are the CI contract
+# --------------------------------------------------------------------------- #
+def test_cli_self_compare_passes(tmp_path):
+    rep = _report([record_from_samples("t", [1.0, 1.1], "s"),
+                   BenchRecord("bytes", 64, "B")])
+    p = _write(tmp_path, "a", rep)
+    assert main(["compare", p, p]) == 0
+
+
+def test_cli_injected_regression_fails(tmp_path, capsys):
+    base = _report([record_from_samples("t", [1.0, 1.01, 1.02], "s")])
+    cur = _report([record_from_samples("t", [9.0, 9.01, 9.02], "s")])
+    bp = _write(tmp_path, "base", base)
+    cp = _write(tmp_path, "cur", cur)
+    assert main(["compare", bp, cp]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSED" in out and "FAIL" in out
+
+
+def test_cli_dir_mode_missing_current_report_fails(tmp_path):
+    rep = _report([BenchRecord("t", 1.0, "s")])
+    bd, cd = tmp_path / "base", tmp_path / "cur"
+    bd.mkdir(), cd.mkdir()
+    write_bench_json(rep, str(bd))
+    assert main(["compare", str(bd), str(cd)]) == 1     # module didn't run
+    write_bench_json(rep, str(cd))
+    assert main(["compare", str(bd), str(cd)]) == 0
+
+
+def test_cli_usage_errors_exit_2(tmp_path):
+    rep = _report([BenchRecord("t", 1.0, "s")])
+    d = tmp_path / "a"
+    d.mkdir()
+    p = write_bench_json(rep, str(d))
+    assert main(["compare", str(d), str(p)]) == 2       # dir vs file
+    assert main(["compare", str(p), str(p), "--tol", "nonsense"]) == 2
+
+
+# --------------------------------------------------------------------------- #
+# obs.validate --bench
+# --------------------------------------------------------------------------- #
+def test_validate_bench_ok(tmp_path):
+    rep = _report([record_from_samples("t", [1.0, 2.0, 3.0], "s")])
+    p = str(write_bench_json(rep, str(tmp_path)))
+    assert check_bench(p).module == rep.module
+    assert validate_main(["--bench", p]) == 0
+
+
+def test_validate_bench_rejects_bad_artifacts(tmp_path):
+    # missing fingerprint key
+    fp = {k: v for k, v in FP.items() if k != "git_sha"}
+    p1 = str(write_bench_json(_report([BenchRecord("t", 1.0, "s")], fp=fp),
+                              str(tmp_path / "a")))
+    with pytest.raises(ValueError, match="git_sha"):
+        check_bench(p1)
+    # empty record list
+    p2 = str(write_bench_json(_report([]), str(tmp_path / "b")))
+    with pytest.raises(ValueError, match="no records"):
+        check_bench(p2)
+    # disordered quartiles (hand-corrupted artifact)
+    rep = _report([BenchRecord("t", 1.0, "s", repeats=3, q25=5.0,
+                               median=1.0, q75=0.5)])
+    p3 = str(write_bench_json(rep, str(tmp_path / "c")))
+    with pytest.raises(ValueError, match="quartiles"):
+        check_bench(p3)
+    assert validate_main(["--bench", p3]) == 1

@@ -1,0 +1,158 @@
+"""Open-loop load generator: deterministic workloads, goodput math, serving
+parity between open-loop admission and batch generate."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.obs import MetricsRegistry
+from repro.serve import LoadSpec, PagedServeEngine, Request, SLO
+from repro.serve.loadgen import (build_workload, goodput_report,
+                                 publish_goodput, run_workload)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama2-7b").reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------------- #
+# workload construction
+# --------------------------------------------------------------------------- #
+def test_workload_deterministic_under_seed():
+    spec = LoadSpec(n_requests=12, rate_rps=20.0, prompt_len=(4, 10),
+                    max_new=(2, 6), shared_prefix_len=5, shared_frac=0.5,
+                    seed=3)
+    a = build_workload(spec, vocab_size=101)
+    b = build_workload(spec, vocab_size=101)
+    assert [t for t, _ in a] == [t for t, _ in b]
+    for (_, ra), (_, rb) in zip(a, b):
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+        assert ra.max_new == rb.max_new
+    c = build_workload(spec.replace(seed=4), vocab_size=101)
+    assert [t for t, _ in a] != [t for t, _ in c]
+
+
+def test_workload_shape_and_mix():
+    spec = LoadSpec(n_requests=64, rate_rps=10.0, prompt_len=(4, 8),
+                    max_new=(2, 5), shared_prefix_len=6, shared_frac=0.5,
+                    seed=0)
+    wl = build_workload(spec, vocab_size=101)
+    offsets = [t for t, _ in wl]
+    assert offsets == sorted(offsets) and offsets[0] > 0
+    # mean inter-arrival gap ~ 1/rate (CLT bound, seeded so never flaky)
+    gaps = np.diff([0.0] + offsets)
+    assert 0.05 < gaps.mean() < 0.2
+    shared = [r for _, r in wl if len(r.prompt) > 8]        # prefix + suffix
+    assert 0 < len(shared) < 64                             # mixed traffic
+    head = shared[0].prompt[:6]
+    for r in shared:
+        np.testing.assert_array_equal(r.prompt[:6], head)   # same sys prompt
+        assert 4 + 6 <= len(r.prompt) <= 8 + 6
+    for _, r in wl:
+        assert 2 <= r.max_new <= 5
+        assert r.prompt.dtype == np.int64
+        assert (0 <= r.prompt).all() and (r.prompt < 101).all()
+
+
+def test_workload_validation():
+    with pytest.raises(ValueError):
+        build_workload(LoadSpec(n_requests=0), 100)
+    with pytest.raises(ValueError):
+        build_workload(LoadSpec(rate_rps=0.0), 100)
+    with pytest.raises(ValueError):
+        build_workload(LoadSpec(shared_frac=1.5), 100)
+    with pytest.raises(ValueError):
+        build_workload(LoadSpec(prompt_len=(0, 4)), 100)
+
+
+# --------------------------------------------------------------------------- #
+# goodput math vs hand-computed SLO counts
+# --------------------------------------------------------------------------- #
+def _req(rid, done=True):
+    r = Request(prompt=np.array([1, 2], dtype=np.int64), max_new=2)
+    r.rid, r.done = rid, done
+    return r
+
+
+def test_goodput_hand_computed():
+    reqs = [_req(0), _req(1), _req(2), _req(3, done=False)]
+    lat = {0: {"ttft_s": 0.1, "queue_s": 0.0},     # good
+           1: {"ttft_s": 9.0, "queue_s": 0.0},     # TTFT miss
+           2: {"ttft_s": 0.2, "queue_s": 0.0}}     # ITL miss below
+    itl = {0: [0.01, 0.02], 1: [0.01], 2: [5.0, 0.01]}
+    rep = goodput_report(reqs, lat, itl, SLO(ttft_s=1.0, itl_p99_s=1.0))
+    assert rep["n_requests"] == 4
+    assert rep["n_finished"] == 3                  # rid 3 never finished
+    assert rep["ttft_misses"] == 1 and rep["itl_misses"] == 1
+    assert rep["n_good"] == 1
+    assert rep["goodput"] == pytest.approx(1 / 4)  # unfinished counts against
+    assert rep["ttft_mean_s"] == pytest.approx((0.1 + 9.0 + 0.2) / 3)
+    assert rep["itl_p99_worst_s"] == pytest.approx(
+        float(np.percentile([5.0, 0.01], 99)))
+
+
+def test_goodput_no_decode_steps_meets_itl():
+    # a request that emitted only its prefill token has no ITL samples and
+    # trivially meets the ITL SLO
+    reqs = [_req(0)]
+    rep = goodput_report(reqs, {0: {"ttft_s": 0.1, "queue_s": 0.0}}, {},
+                         SLO(ttft_s=1.0, itl_p99_s=0.001))
+    assert rep["n_good"] == 1 and rep["itl_p99_worst_s"] == 0.0
+
+
+def test_publish_goodput_metric_families():
+    reg = MetricsRegistry()
+    spec, slo = LoadSpec(n_requests=2, rate_rps=5.0), SLO()
+    rep = {"goodput": 0.5, "ttft_misses": 1, "itl_misses": 0,
+           "n_requests": 2, "n_finished": 2}
+    publish_goodput(reg, spec, slo, rep, duration_s=4.0)
+    snap = reg.snapshot()
+    assert snap["serve_goodput_ratio"] == 0.5
+    assert snap["serve_slo_ttft_misses_total"] == 1
+    assert snap["loadgen_requests_total"] == 2
+    assert snap["loadgen_offered_rps"] == 5.0
+    assert snap["loadgen_achieved_rps"] == pytest.approx(0.5)
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end: open-loop admission == batch generate, token for token
+# --------------------------------------------------------------------------- #
+def test_run_workload_end_to_end_parity(cfg, params):
+    spec = LoadSpec(n_requests=5, rate_rps=100.0, prompt_len=(3, 7),
+                    max_new=(2, 4), shared_prefix_len=4, shared_frac=0.5,
+                    seed=2)
+    eng = PagedServeEngine(cfg, params, batch_slots=2, max_seq=16,
+                           page_size=4, kv_bits=8)
+    reqs, stats = run_workload(eng, spec, slo=SLO(ttft_s=300.0,
+                                                  itl_p99_s=300.0))
+    assert all(r.done for r in reqs)
+    assert stats["n_finished"] == 5
+    assert stats["goodput"] == 1.0                 # lenient SLOs: all good
+    assert stats["serve_duration_s"] > 0
+    assert set(stats["request_latencies"]) == {r.rid for r in reqs}
+    # open-loop admission must not change decoded tokens (greedy decoding)
+    ref = PagedServeEngine(cfg, params, batch_slots=2, max_seq=16,
+                           page_size=4, kv_bits=8)
+    ref_reqs, _ = ref.generate(
+        [r for _, r in build_workload(spec, cfg.vocab_size)])
+    assert [r.out for r in reqs] == [r.out for r in ref_reqs]
+    # goodput metrics landed in the engine registry
+    snap = eng.obs.metrics.snapshot()
+    assert snap["serve_goodput_ratio"] == 1.0
+    assert snap["loadgen_requests_total"] == 5
+
+
+def test_serve_open_loop_rejects_unsorted(cfg, params):
+    eng = PagedServeEngine(cfg, params, batch_slots=2, max_seq=16,
+                           page_size=4)
+    r = Request(prompt=np.array([1, 2, 3], dtype=np.int64), max_new=2)
+    r2 = Request(prompt=np.array([1, 2, 3], dtype=np.int64), max_new=2)
+    with pytest.raises(ValueError):
+        eng.serve_open_loop([(1.0, r), (0.5, r2)])
