@@ -109,6 +109,23 @@ def run(smoke: bool = False) -> list:
                                                          bits=4),
                       (q, bt, lengths), f"b{B}xh{H * G}xd{hd},{tag}", repeats)
 
+    # ---- paged_attention at the tensor-parallel shard shape -------------- #
+    # What ONE device of an 8-way serve mesh runs: the same kernel with the
+    # head axes divided (pages shard over heads, group ratio preserved) —
+    # prices the per-shard decode step the TP engine issues per layer.
+    tp = 8
+    Hs = max(1, H * G // tp // G)               # kv heads per shard
+    ks, vs = k[:, :, :Hs], v[:, :, :Hs]
+    qks, qvs = quantize_kv(ks, 4), quantize_kv(vs, 4)
+    pool_s = {"kq": qks.q, "ks": qks.scale[..., 0], "kz": qks.zero[..., 0],
+              "vq": qvs.q, "vs": qvs.scale[..., 0], "vz": qvs.zero[..., 0]}
+    q_s = q[:, :Hs * G]
+    rows += _aot_rows("paged_attn_tp_shard",
+                      lambda qq, bb, ll: paged_attention(qq, pool_s, bb, ll,
+                                                         bits=4),
+                      (q_s, bt, lengths),
+                      f"tp{tp},b{B}xh{Hs * G}xd{hd},{tag}", repeats)
+
     # ---- device peak-memory watermark ------------------------------------ #
     peak, source = peak_memory_bytes()
     rows.append((f"kernel,peak_memory,{source},{tag}", peak / 2**20, "MB"))

@@ -209,6 +209,28 @@ def run(smoke: bool = False) -> list:
     rows.append((f"serve,overcommit_evictions,{tag}",
                  oc_stats["prefix_evictions"], "pages"))
 
+    # ---- sharing-density headline: effective tokens per byte of pages ---- #
+    # int4 quantized pages + prefix sharing (this runtime) vs the unshared
+    # fp16 page cache it replaces (the vLLM-default shape).  "Effective"
+    # counts every token each sequence can attend over; "stored" counts the
+    # unique token slots actually written — the ratio is the sharing factor,
+    # and bytes/token carries the quantization factor.
+    eff_tokens = sum(len(r.prompt) + len(r.out) for r in shared_reqs)
+    stored_tokens = (shared_stats["prefill_tokens"]
+                     + sum(len(r.out) for r in shared_reqs))
+    bpt_int4 = shared_eng.pool.nbytes / (shared_eng.pool.num_pages * page)
+    bpt_fp16 = kv_bytes(1, 1, cfg.n_layers, cfg.n_kv_heads,
+                        cfg.resolved_head_dim, 16)
+    dens_int4 = eff_tokens / (stored_tokens * bpt_int4)
+    dens_fp16 = 1.0 / bpt_fp16                  # unshared: effective == stored
+    rows.append((f"serve,page_density_int4_shared,{tag}", dens_int4,
+                 "tok_per_B"))
+    rows.append((f"serve,page_density_fp16_unshared,{tag}", dens_fp16,
+                 "tok_per_B"))
+    rows.append((f"serve,page_density_gain,{tag}", dens_int4 / dens_fp16,
+                 "x"))
+    rows.append((f"serve,page_bytes_per_token_int4,{tag}", bpt_int4, "B"))
+
     # quantize-once pipeline: weight memory + artifact cold-boot cost.
     # Rotation choice doesn't matter for bytes — use the Hadamard pack so the
     # bench never pays calibration time.
@@ -279,4 +301,60 @@ def run(smoke: bool = False) -> list:
                  "s"))
     rows.append((f"serve,loadgen_itl_p99_worst,{tag}",
                  lg_stats["itl_p99_worst_s"], "s"))
+
+    # ---- tensor-parallel serve (8 virtual devices, subprocess) ----------- #
+    # The bench process pins a single device, so the TP rows come from a
+    # child with XLA_FLAGS-forced 8 CPU devices (same launcher discipline as
+    # tests/_mesh_compat).  Per-device decode is tolerant (IQR, emulated
+    # devices time-share one socket); cache-bytes/device and the analytic
+    # psum-bytes/token are strict byte accounting.  The reduced config ships
+    # 4 heads — the TP child bumps to 8 uniform heads so the mesh divides.
+    import json as _json
+    import os as _os
+    import subprocess as _sp
+    import sys as _sys
+    tp_code = f"""
+import json
+import jax, numpy as np
+from repro.configs import get_config
+from repro.launch.mesh import make_serve_mesh
+from repro.models import model as M
+from repro.serve import PagedServeEngine, Request
+cfg = get_config("llama2-7b").reduced().replace(n_heads=8, n_kv_heads=8,
+                                                head_dim=8)
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+eng = PagedServeEngine(cfg, params, mesh=make_serve_mesh(8),
+                       batch_slots={slots}, max_seq={max_seq},
+                       page_size={page}, kv_bits=4, prefix_cache=False)
+def serve():
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, {plen}),
+                    max_new={max_new}) for _ in range({n_req})]
+    _, stats = eng.generate(reqs)
+    return stats
+serve()                                     # compile
+warm = [serve() for _ in range({repeats})]
+out = dict(decode=[s["decode_tok_per_s"] for s in warm],
+           tp=warm[-1]["tp_devices"],
+           cache_per_dev=warm[-1]["kv_cache_bytes_per_device"],
+           psum_per_tok=warm[-1]["psum_bytes_per_token"])
+print("TPJSON " + json.dumps(out))
+"""
+    env = dict(_os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS=_os.environ.get("JAX_PLATFORMS", "cpu"))
+    r = _sp.run([_sys.executable, "-c", tp_code], capture_output=True,
+                text=True, env=env, timeout=560)
+    tp_line = [ln for ln in r.stdout.splitlines()
+               if ln.startswith("TPJSON ")]
+    assert tp_line, r.stdout + r.stderr
+    tp = _json.loads(tp_line[0][len("TPJSON "):])
+    assert tp["tp"] == 8
+    rows.append(record_from_samples(
+        f"serve,tp8_decode_per_device,{tag}",
+        [d / tp["tp"] for d in tp["decode"]], "tok_per_s", warmup=0))
+    rows.append((f"serve,tp8_cache_bytes_per_device,{tag}",
+                 tp["cache_per_dev"], "B"))
+    rows.append((f"serve,tp8_psum_bytes_per_token,{tag}",
+                 tp["psum_per_tok"], "B"))
     return rows

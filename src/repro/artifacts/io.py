@@ -5,6 +5,16 @@ blob; ``load_artifact`` memory-maps the blob and hands out zero-copy views —
 no per-tensor file opens, no deserialization copies.  Manifest hashes are
 verified on load by default (format invariant: a corrupted artifact never
 serves).
+
+Tensor-parallel cold boot rides the same views: the serve TP loader
+(``repro.dist.sharding.place_serve_params``) feeds each mmap view through
+``jax.make_array_from_callback``, so every device copies ONLY its own block
+out of the blob — a big packed artifact boots onto an N-way mesh without any
+host or device ever materializing a full projection weight.  The per-tensor
+64-byte alignment (``ALIGN``) is what keeps those per-shard reads free:
+every leaf starts on its own cache line / page-aligned stride, so a shard
+slice never drags in another tensor's bytes.  ``leaf_alignment`` is the
+introspection hook the TP tests assert this contract with.
 """
 from __future__ import annotations
 
@@ -58,6 +68,16 @@ def save_artifact(path: str, artifact: QuantArtifact) -> dict:
     with open(os.path.join(path, MANIFEST), "w") as f:
         json.dump(manifest, f, indent=1)
     return manifest
+
+
+def leaf_alignment(manifest: dict) -> dict:
+    """name -> (offset, nbytes, offset % ALIGN) for every stored tensor.
+
+    The serve-TP contract requires every entry's third element to be 0:
+    shard-wise artifact reads are only zero-waste when each tensor starts on
+    its own ``ALIGN`` boundary."""
+    return {e["name"]: (e["offset"], e["nbytes"], e["offset"] % ALIGN)
+            for e in manifest["tensors"]}
 
 
 def load_artifact(path: str, mmap: bool = True,

@@ -128,26 +128,49 @@ def hadamard_chain(n: int) -> list:
     raise ValueError(f"no Hadamard construction for n={n}")
 
 
-def random_hadamard(n: int, key) -> jax.Array:
+def _kernel_wht() -> bool:
+    """True when the Pallas WHT kernel is the fast path (real accelerator).
+
+    In interpret mode (CPU CI) the kernel is strictly slower than the jnp
+    matmul reference, so dispatch stays off there by default.
+    """
+    from repro.kernels.common import use_interpret   # lazy: no cycle at import
+    return not use_interpret()
+
+
+def random_hadamard(n: int, key, use_kernel: Optional[bool] = None) -> jax.Array:
     """Randomized orthogonal Hadamard: H diag(s) / sqrt(n), s ~ Rademacher.
 
-    Falls back to a random orthogonal matrix when no construction exists.
+    On accelerator backends the matrix is built by pushing the identity
+    through the two-factor Pallas WHT kernel — the host never materializes
+    the n x n Sylvester/Paley product, which dominates calibration init time
+    for d_model-sized sites.  ``use_kernel`` pins either path (parity tests);
+    falls back to a random orthogonal matrix when no construction exists.
     """
     if _is_constructible(n):
-        h = jnp.asarray(hadamard_matrix(n), jnp.float32) / np.sqrt(n)
         s = jax.random.rademacher(key, (n,), jnp.float32)
+        if use_kernel if use_kernel is not None else _kernel_wht():
+            from repro.kernels.hadamard import ops as _ops   # lazy: ops imports us
+            return _ops.online_hadamard(jnp.eye(n, dtype=jnp.float32)) * s[None, :]
+        h = jnp.asarray(hadamard_matrix(n), jnp.float32) / np.sqrt(n)
         return h * s[None, :]
     z = jax.random.normal(key, (n, n), jnp.float32)
     q, r = jnp.linalg.qr(z)
     return q * jnp.sign(jnp.diagonal(r))[None, :]
 
 
-def online_hadamard(x: jax.Array) -> jax.Array:
+def online_hadamard(x: jax.Array, use_kernel: Optional[bool] = None) -> jax.Array:
     """Apply the (deterministic, unrandomized) WHT to the last dim: x @ H/sqrt(n).
 
-    jnp reference implementation; the Pallas kernel in repro.kernels.hadamard
-    provides the TPU fast path.  Requires a constructible last dim.
+    The R3/R4 online op of the calibration engine.  Dispatches to the Pallas
+    two-factor kernel (repro.kernels.hadamard) on real accelerator backends;
+    keeps the jnp matmul reference under interpret mode (CPU CI), where the
+    kernel is slower.  ``use_kernel`` pins either path for parity tests.
+    Requires a constructible last dim.
     """
+    if use_kernel if use_kernel is not None else _kernel_wht():
+        from repro.kernels.hadamard import ops as _ops       # lazy: ops imports us
+        return _ops.online_hadamard(x)
     n = x.shape[-1]
     h = jnp.asarray(hadamard_matrix(n), x.dtype) / np.sqrt(n).astype(np.float32)
     return x @ h

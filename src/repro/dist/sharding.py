@@ -25,7 +25,9 @@ engine (``repro.core.qr_orth``) places its inputs with.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -178,3 +180,282 @@ class Sharding:
         return jax.tree.map(
             lambda x: P(*((None, self.dp) + (None,) * (x.ndim - 2)))
             if x.ndim >= 2 else P(), cache)
+
+
+# --------------------------------------------------------------------------- #
+# Serve tensor parallelism: explicit Megatron-style specs for the paged
+# engine's shard_map.  Unlike Sharding._leaf_param_spec (a shape heuristic for
+# GSPMD jit), these rules are *path-keyed* — the shard_map body computes with
+# the local array blocks directly, so every leaf's partitioning must agree
+# exactly with the psum seams in repro.models.{attention,ffn}:
+#
+#   column (out-dim)  wq wk wv wq_b wkv_b  + w_gate/w_up/fc1 when the FFN
+#                     shards; their biases shard the same way
+#   row (in-dim)      wo                   + w_down/fc2 when the FFN shards;
+#                     after-psum biases (bo, b2) replicate
+#   expert (E-dim)    MoE expert stacks when moe_impl == 'ragged' and E
+#                     divides; the router replicates (identical routing per
+#                     shard, see ffn.moe_tp_local)
+#   replicated        everything else: norms, embeddings, lm_head, router,
+#                     wq_a/wkv_a (the MLA latent path feeds the replicated
+#                     latent pages), and ALL SSM leaves — the Mamba2 gating
+#                     norm spans the full d_inner, so sharding it would cost
+#                     a second psum per layer; SSM blocks replicate instead.
+#
+# The FFN shards only when no online R4 rotation is active: the R4 Walsh-
+# Hadamard globally mixes the hidden dim, so applying it shard-locally would
+# break bit-parity with the single-device engine.  On the production path
+# (quantized artifact, R4 fused into the weights) the FFN therefore
+# replicates and the decode step carries EXACTLY ONE psum per layer — at the
+# attention output projection.
+# --------------------------------------------------------------------------- #
+_TP_ATTN_COL = {"wq", "wk", "wv", "wq_b", "wkv_b"}
+_TP_ATTN_COL_BIAS = {"bq", "bk", "bv"}
+_TP_ATTN_ROW = {"wo"}
+_TP_FFN_COL = {"w_gate", "w_up", "fc1"}
+_TP_FFN_COL_BIAS = {"b1"}
+_TP_FFN_ROW = {"w_down", "fc2"}
+_TP_MOE_STACK = {"w_gate", "w_up", "w_down"}
+
+
+def tp_degree(mesh) -> int:
+    """Size of the mesh 'model' axis (1 when absent or mesh is None)."""
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return 1
+    return int(mesh.shape["model"])
+
+
+def _axis_spec(ndim: int, axis: int) -> P:
+    spec = [None] * ndim
+    spec[axis] = "model"
+    return P(*spec)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "name", p))) for p in path)
+
+
+def _leaf_mode(names: Tuple[str, ...], ffn_sharded: bool,
+               moe_sharded: bool) -> str:
+    name = names[-1]
+    if "moe" in names and "shared" not in names:
+        if name in _TP_MOE_STACK:
+            return "expert" if moe_sharded else "rep"
+        return "rep"                      # router / router_bias
+    if name in _TP_ATTN_COL:
+        return "col"
+    if name in _TP_ATTN_ROW:
+        return "row"
+    if name in _TP_ATTN_COL_BIAS:
+        return "colbias"
+    if name in _TP_FFN_COL:
+        return "col" if ffn_sharded else "rep"
+    if name in _TP_FFN_ROW:
+        return "row" if ffn_sharded else "rep"
+    if name in _TP_FFN_COL_BIAS:
+        return "colbias" if ffn_sharded else "rep"
+    return "rep"
+
+
+def _check_div(n: int, tp: int, what: str, where: str) -> None:
+    if n % tp:
+        raise ValueError(
+            f"serve TP: {where}: {what} = {n} is not divisible by the "
+            f"model-axis size {tp} — pick a mesh that divides it (or "
+            f"--mesh 1)")
+
+
+def _array_tp_spec(leaf, mode: str, tp: int, where: str) -> P:
+    nd = leaf.ndim
+    if mode == "rep" or nd == 0:
+        return P()
+    if mode == "col":
+        _check_div(leaf.shape[nd - 2], tp, "out-features", where)
+        return _axis_spec(nd, nd - 2)
+    if mode == "row":
+        _check_div(leaf.shape[nd - 1], tp, "in-features", where)
+        return _axis_spec(nd, nd - 1)
+    if mode == "colbias":
+        _check_div(leaf.shape[nd - 1], tp, "bias length", where)
+        return _axis_spec(nd, nd - 1)
+    # expert stacks: [..., E, f, d] / [..., E, d, f]
+    _check_div(leaf.shape[nd - 3], tp, "n_experts", where)
+    return _axis_spec(nd, nd - 3)
+
+
+def _qtensor_tp_spec(qt, mode: str, tp: int, where: str):
+    """Spec-QTensor: a QTensor whose q/scale slots hold PartitionSpecs and
+    whose static aux matches the parameter leaf exactly, so it flattens
+    leaf-aligned with the params tree (shard_map in_specs / tree.map)."""
+    from repro.quant.quantizers import QTensor
+    nd = qt.q.ndim
+    if mode in ("col", "expert"):
+        ax = nd - 2 if mode == "col" else nd - 3
+        _check_div(qt.q.shape[ax], tp,
+                   "out-features" if mode == "col" else "n_experts", where)
+        qs, ss = _axis_spec(nd, ax), _axis_spec(qt.scale.ndim, ax)
+    elif mode == "row":
+        # row-sharding splits the stored (possibly nibble-packed) in-dim:
+        # the blocks must be padding-free and group/byte aligned per shard,
+        # else shard-local dequantization would see phantom columns
+        if qt.in_features is not None and qt.in_features != qt.stored_in_dim:
+            raise ValueError(
+                f"serve TP: {where}: packed weight has in-feature padding "
+                f"({qt.in_features} logical vs {qt.stored_in_dim} stored) — "
+                "row-sharding would split mid-pad; use --mesh 1 or repack "
+                "with an aligned group size")
+        _check_div(qt.q.shape[nd - 1], tp, "stored in-features", where)
+        if qt.group > 0:
+            _check_div(qt.stored_in_dim // tp, qt.group,
+                       "per-shard in-features (scale-group alignment)", where)
+        qs = _axis_spec(nd, nd - 1)
+        # per-channel scales ([..., out, 1]) replicate; grouped scales split
+        # with their columns
+        ss = P() if qt.scale.shape[-1] == 1 \
+            else _axis_spec(qt.scale.ndim, qt.scale.ndim - 1)
+    else:
+        qs, ss = P(), P()
+    spec = object.__new__(QTensor)
+    spec.q, spec.scale, spec.zero = qs, ss, None
+    spec.bits, spec.group = qt.bits, qt.group
+    spec.in_features, spec.packed = qt.in_features, qt.packed
+    return spec
+
+
+def serve_param_specs(cfg: ModelConfig, params, tp: int, *,
+                      ffn_sharded: bool, moe_sharded: bool):
+    """PartitionSpec tree for the paged serve shard_map (QTensor leaves get
+    spec-QTensors).  Raises with an actionable message on any dimension the
+    mesh cannot divide."""
+    from repro.quant.quantizers import QTensor
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, QTensor))
+    specs = []
+    for path, leaf in flat:
+        names = _path_names(path)
+        mode = _leaf_mode(names, ffn_sharded, moe_sharded)
+        where = "/".join(names)
+        if isinstance(leaf, QTensor):
+            specs.append(_qtensor_tp_spec(leaf, mode, tp, where))
+        else:
+            specs.append(_array_tp_spec(leaf, mode, tp, where))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+@dataclass(frozen=True)
+class ServeTPPlan:
+    """Everything the paged engine needs to run one decode/prefill program
+    tensor-parallel over the mesh 'model' axis: the per-leaf parameter
+    specs, the per-adapter pool specs, and the two trace-time flags that
+    gate the FFN/MoE psums (see repro.models.common.tp_context)."""
+    mesh: Any
+    tp: int
+    cfg: ModelConfig
+    ffn_sharded: bool
+    moe_sharded: bool
+    param_specs: Any
+    pool_specs: Any
+
+    def local_cfg(self) -> ModelConfig:
+        """Per-shard config: head counts divided over the model axis (the
+        layer code derives every other dimension from array shapes)."""
+        cfg, tp = self.cfg, self.tp
+        if cfg.attn_type == "gqa":
+            return dataclasses.replace(cfg, n_heads=cfg.n_heads // tp,
+                                       n_kv_heads=cfg.n_kv_heads // tp)
+        if cfg.attn_type == "mla":
+            return dataclasses.replace(cfg, n_heads=cfg.n_heads // tp)
+        return cfg
+
+    def psums_per_token(self) -> int:
+        """Decode-step collective count (the acceptance check's analytic
+        reference): one psum per attention layer, plus the FFN/MoE psums
+        when those sub-blocks shard."""
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return 0
+        if cfg.family == "hybrid":
+            groups = cfg.n_layers // cfg.shared_attn_every
+            return groups * (1 + int(self.ffn_sharded))
+        n_moe = 0
+        if cfg.n_experts:
+            n_moe = (cfg.n_layers - cfg.n_dense_layers) \
+                if cfg.n_dense_layers else cfg.n_layers
+        n_mlp = cfg.n_layers - n_moe
+        shared_ffn = n_moe if cfg.n_shared_experts else 0
+        return (cfg.n_layers
+                + int(self.ffn_sharded) * (n_mlp + shared_ffn)
+                + int(self.moe_sharded) * n_moe)
+
+    def psum_bytes_per_token(self, dtype_bytes: int = 4) -> int:
+        """Interconnect bytes one decoded token pays to psums (f32 partials
+        by default — the compute dtype of the reduced test configs)."""
+        return self.psums_per_token() * self.cfg.d_model * dtype_bytes
+
+
+def serve_tp_plan(cfg: ModelConfig, params, mesh, *, rot=None,
+                  kv_bits: int = 4, state_bits: int = 8
+                  ) -> Optional[ServeTPPlan]:
+    """Build the serve-TP plan for a mesh, or None when the mesh has a
+    trivial 'model' axis (single-device serving, zero TP machinery)."""
+    tp = tp_degree(mesh)
+    if tp <= 1:
+        return None
+    if cfg.attn_type == "gqa":
+        _check_div(cfg.n_heads, tp, "n_heads", cfg.arch_id)
+        _check_div(cfg.n_kv_heads, tp, "n_kv_heads", cfg.arch_id)
+    elif cfg.attn_type == "mla":
+        _check_div(cfg.n_heads, tp, "n_heads", cfg.arch_id)
+    # FFN shards only without an online R4 (the WHT mixes the full hidden
+    # dim) and when every FFN hidden divides evenly (int4 nibble pairs must
+    # not straddle a shard boundary)
+    r4_online = rot is not None and rot.get("r4") is not None
+    f_dims = [cfg.d_ff]
+    if cfg.n_experts and cfg.n_shared_experts:
+        f_dims.append(cfg.ffn_hidden * cfg.n_shared_experts)
+    ffn_sharded = (not r4_online) and cfg.family != "ssm" and all(
+        f % tp == 0 and (f // tp) % 2 == 0 for f in f_dims)
+    moe_sharded = bool(cfg.n_experts) and cfg.moe_impl == "ragged" \
+        and cfg.n_experts % tp == 0
+    param_specs = serve_param_specs(cfg, params, tp,
+                                    ffn_sharded=ffn_sharded,
+                                    moe_sharded=moe_sharded)
+    from repro.serve.cache_adapters import adapters_for
+    ads = adapters_for(cfg, kv_bits=kv_bits, state_bits=state_bits)
+    pool_specs = {name: ad.partition_specs(tp) for name, ad in ads.items()}
+    return ServeTPPlan(mesh=mesh, tp=tp, cfg=cfg, ffn_sharded=ffn_sharded,
+                       moe_sharded=moe_sharded, param_specs=param_specs,
+                       pool_specs=pool_specs)
+
+
+def place_serve_params(params, plan: ServeTPPlan):
+    """device_put a param tree against the plan's specs, shard-wise.
+
+    Host leaves (the artifact loader's np.memmap views) go through
+    ``jax.make_array_from_callback``: each device reads ONLY its own block
+    off the mmap — a big packed artifact cold-boots without ever
+    materializing a full projection weight on one device (the manifest's
+    64-byte-aligned per-tensor offsets make the per-shard reads free).
+    Already-committed jax.Arrays take the plain device_put path (a no-op
+    when they are already placed correctly)."""
+    import numpy as np
+    mesh = plan.mesh
+
+    def put(leaf, spec):
+        sharding = NamedSharding(mesh, spec)
+        if isinstance(leaf, jax.Array):
+            return jax.device_put(leaf, sharding)
+        arr = np.asarray(leaf)
+        return jax.make_array_from_callback(
+            arr.shape, sharding,
+            lambda idx, a=arr: np.ascontiguousarray(a[idx]))
+
+    return jax.tree.map(put, params, plan.param_specs)
+
+
+def place_serve_pool(state, plan: ServeTPPlan):
+    """device_put the page-pool state against the plan's adapter specs."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(plan.mesh, s)),
+        state, plan.pool_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -22,6 +22,15 @@ def make_host_mesh():
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
+def make_serve_mesh(model: int | None = None):
+    """Mesh for tensor-parallel serving: ``model`` devices on the 'model'
+    axis (default: every local device), trivial 'data' axis.  The paged
+    engine shards weights, pages and SSM state over 'model' and keeps the
+    scheduler / prefix index host-side and mesh-oblivious."""
+    n = len(jax.devices()) if model is None else model
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
 def make_calib_mesh(data: int | None = None):
     """Mesh for token-sharded calibration: ``data`` devices on the 'data'
     axis (default: every local device = the host mesh), trivial 'model'

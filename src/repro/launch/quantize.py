@@ -46,6 +46,11 @@ def main(argv=None):
                          "latents replicate — see repro.launch.calibrate")
     ap.add_argument("--full", action="store_true",
                     help="use the full config instead of the reduced smoke one")
+    ap.add_argument("--override", default=None, metavar="K=V[,K=V...]",
+                    help="override int ModelConfig fields after --full/"
+                         "reduced resolution (e.g. n_heads=8,n_kv_heads=8,"
+                         "head_dim=8 — the TP serve smoke needs head counts "
+                         "the mesh divides)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write calib_site spans (JSONL) here")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
@@ -66,6 +71,10 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if not args.full:
         cfg = cfg.reduced()
+    if args.override:
+        cfg = cfg.replace(**{k: int(v) for k, v in
+                             (kv.split("=", 1)
+                              for kv in args.override.split(","))})
     qcfg = cfg.quant.replace(w_bits=args.w_bits, w_group_size=args.w_group,
                              a_bits=args.a_bits, kv_bits=args.kv_bits)
     cfg = cfg.replace(quant=qcfg)

@@ -85,8 +85,21 @@ def main(argv=None):
                     help="per-request sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="restrict sampling to the top-k logits (0 = full)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = no truncation)")
+    ap.add_argument("--rep-penalty", type=float, default=1.0,
+                    help="CTRL repetition penalty over the last 64 "
+                         "prompt+output tokens (1.0 = off)")
     ap.add_argument("--seed", type=int, default=None,
                     help="base PRNG seed for sampled decoding")
+    ap.add_argument("--mesh", default=None, metavar="N|auto",
+                    help="tensor-parallel serving over N devices on the "
+                         "mesh 'model' axis ('auto' = all local devices; "
+                         "default: single device)")
+    ap.add_argument("--dump-tokens", default=None, metavar="PATH",
+                    help="write every request's output token ids (one "
+                         "space-separated line per request) — the TP parity "
+                         "smoke diffs this across --mesh values")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a shared system prompt of this many tokens "
                          "to every request (exercises the prefix cache)")
@@ -143,7 +156,15 @@ def main(argv=None):
         args.kv_bits = 4 if args.kv_bits is None else args.kv_bits
 
     max_seq = args.prompt_len + args.shared_prefix + args.max_new * 4
-    eng_kw = dict(batch_slots=args.slots, max_seq=max_seq)
+    mesh = None
+    if args.mesh:
+        n = len(jax.devices()) if args.mesh == "auto" else int(args.mesh)
+        if n > 1:
+            from repro.launch.mesh import make_serve_mesh
+            mesh = make_serve_mesh(n)
+            print(f"[serve] tensor-parallel over {n} devices "
+                  f"(mesh 'model' axis)")
+    eng_kw = dict(batch_slots=args.slots, max_seq=max_seq, mesh=mesh)
     base_seed = 0 if args.seed is None else args.seed
 
     # one Obs for the primary engine; the parity baseline below gets its own
@@ -227,7 +248,8 @@ def main(argv=None):
                              rng.integers(0, cfg.vocab_size,
                                           args.prompt_len)]).astype(np.int64),
                         max_new=args.max_new, temperature=args.temperature,
-                        top_k=args.top_k)
+                        top_k=args.top_k, top_p=args.top_p,
+                        rep_penalty=args.rep_penalty)
                 for _ in range(args.requests)]
 
     if args.loadgen:
@@ -271,6 +293,15 @@ def main(argv=None):
           f"{stats['decode_tok_per_s']:.1f} tok/s decode; "
           f"kv cache {stats['kv_cache_bytes']} B; "
           f"weights {stats['weight_bytes']} B")
+    if stats.get("tp_devices", 1) > 1:
+        print(f"[serve] tp={stats['tp_devices']}: "
+              f"{stats['kv_cache_bytes_per_device']} B cache/device, "
+              f"{stats['psum_bytes_per_token']} B psum/token")
+    if args.dump_tokens:
+        with open(args.dump_tokens, "w") as f:
+            for r in reqs:
+                f.write(" ".join(str(t) for t in r.out) + "\n")
+        print(f"[serve] output tokens -> {args.dump_tokens}")
     if "prefix_hit_rate" in stats:
         print(f"[serve] prefix hit rate {stats['prefix_hit_rate']:.2f} "
               f"({stats['prefix_hit_tokens']}/{stats['prompt_tokens']} prompt "

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.common import (NO_SHARD, apply_rope, dense_init, linear,
-                                 norm_params, rmsnorm, softcap)
+                                 norm_params, rmsnorm, softcap, tp_psum_attn,
+                                 tp_row_linear)
 
 
 # --------------------------------------------------------------------------- #
@@ -432,7 +433,11 @@ def paged_gqa_decode(cfg: ModelConfig, p: dict, x: jax.Array, pool_l: dict,
     o = paged_attention(q[:, 0], new_pool, block_tables, lengths,
                         bits=kv_bits, window=window,
                         logit_cap=cfg.attn_softcap)
-    out = linear(o.reshape(B, 1, -1), p["wo"], p.get("bo"))
+    # TP: heads are sharded, wo is row-sharded — psum the partial output
+    # projection, then add the (replicated) bias exactly once
+    out = tp_psum_attn(tp_row_linear(o.reshape(B, 1, -1), p["wo"]))
+    if p.get("bo") is not None:
+        out = out + p["bo"].astype(out.dtype)
     return out, new_pool
 
 
@@ -471,7 +476,9 @@ def paged_gqa_prefill_chunk(cfg: ModelConfig, p: dict, x: jax.Array,
     o = chunked_attention(q, kd, vd, positions, k_pos, causal=True,
                           window=window, logit_cap=cfg.attn_softcap,
                           chunk=min(512, kd.shape[1]))
-    out = linear(o.reshape(B, C, -1), p["wo"], p.get("bo"))
+    out = tp_psum_attn(tp_row_linear(o.reshape(B, C, -1), p["wo"]))
+    if p.get("bo") is not None:
+        out = out + p["bo"].astype(out.dtype)
     return out, new_pool
 
 
@@ -531,7 +538,10 @@ def paged_mla_decode(cfg: ModelConfig, p: dict, x: jax.Array, pool_l: dict,
                                 block_tables, lengths, bits=kv_bits,
                                 scale=scale)
     o = jnp.einsum("bhk,hvk->bhv", o_lat.astype(jnp.float32), w_uv)
-    out = linear(o.reshape(B, 1, h * vd).astype(x.dtype), p["wo"])
+    # h is the *local* head count under TP (latent pages replicate; only the
+    # absorbed per-head projections shard) — psum the row-sharded wo output
+    out = tp_psum_attn(tp_row_linear(o.reshape(B, 1, h * vd)
+                                  .astype(x.dtype), p["wo"]))
     return out, new_pool
 
 
@@ -571,7 +581,8 @@ def paged_mla_prefill_chunk(cfg: ModelConfig, p: dict, x: jax.Array,
     o_lat = chunked_attention(qfull, k, v, positions, k_pos, causal=True,
                               chunk=min(512, k.shape[1]), scale=scale)
     o = jnp.einsum("bshk,hvk->bshv", o_lat.astype(jnp.float32), w_uv)
-    out = linear(o.reshape(B, C, h * vd).astype(x.dtype), p["wo"])
+    out = tp_psum_attn(tp_row_linear(o.reshape(B, C, h * vd)
+                                  .astype(x.dtype), p["wo"]))
     return out, new_pool
 
 

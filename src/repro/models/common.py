@@ -1,6 +1,8 @@
 """Shared model building blocks: norms, RoPE, init, softcap, sharding helper."""
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import math
 from typing import Optional
 
@@ -21,6 +23,102 @@ class NoSharding:
 
 
 NO_SHARD = NoSharding()
+
+
+# --------------------------------------------------------------------------- #
+# Tensor-parallel context (serve TP under shard_map).
+#
+# The paged decode/prefill programs run their whole body inside one shard_map
+# over the mesh 'model' axis; the layer code is mesh-oblivious except for the
+# psum seams at the output projections.  Those seams consult this contextvar
+# (same pattern as the activation-quant context in repro.quant.context):
+# outside a TP trace every tp_psum is the identity, so single-device code is
+# untouched.  ``ffn``/``moe`` record whether the FFN / MoE expert stacks are
+# sharded in this trace — a replicated sub-block must NOT psum (it would
+# multiply its output by the shard count).
+# --------------------------------------------------------------------------- #
+class TPContext:
+    __slots__ = ("axis", "ffn", "moe")
+
+    def __init__(self, axis: str, ffn: bool, moe: bool):
+        self.axis = axis
+        self.ffn = ffn
+        self.moe = moe
+
+
+_TP_CTX: contextvars.ContextVar = contextvars.ContextVar("tp_ctx", default=None)
+
+
+def get_tp_ctx() -> Optional[TPContext]:
+    return _TP_CTX.get()
+
+
+@contextlib.contextmanager
+def tp_context(axis: str = "model", ffn: bool = False, moe: bool = False):
+    token = _TP_CTX.set(TPContext(axis, ffn, moe))
+    try:
+        yield
+    finally:
+        _TP_CTX.reset(token)
+
+
+def tp_psum_attn(x: jax.Array) -> jax.Array:
+    """Reduce a head-sharded attention output projection (identity w/o TP)."""
+    ctx = _TP_CTX.get()
+    return jax.lax.psum(x, ctx.axis) if ctx is not None else x
+
+
+def tp_psum_ffn(x: jax.Array) -> jax.Array:
+    """Reduce an f-sharded FFN down projection; identity when the FFN is
+    replicated in this trace (online R4 pins the full hidden per shard)."""
+    ctx = _TP_CTX.get()
+    return jax.lax.psum(x, ctx.axis) if (ctx is not None and ctx.ffn) else x
+
+
+def tp_psum_moe(x: jax.Array) -> jax.Array:
+    """Combine expert-sharded MoE partial outputs (identity when replicated)."""
+    ctx = _TP_CTX.get()
+    return jax.lax.psum(x, ctx.axis) if (ctx is not None and ctx.moe) else x
+
+
+def tp_row_linear(x: jax.Array, w, b: Optional[jax.Array] = None, *,
+                  kind: str = "attn") -> jax.Array:
+    """``linear`` for a row-sharded (in-feature-partitioned) projection.
+
+    The per-token activation quantizer (repro.quant.context) derives its grid
+    from the row's min/max.  Under TP the inputs of ``wo`` / the FFN down
+    projection are shard-local — 1/tp of the feature axis — so a naive hook
+    application would quantize on a different grid than the single-device
+    engine and break token parity.  Fix: pmin/pmax the per-token extremes
+    over the model axis (two 4-byte-per-token collectives, no psum) and
+    append them as sentinel columns; the hook's local min/max then equal the
+    global ones, reproducing the full-axis grid bit-for-bit, and the matmul
+    runs with the hook disarmed.  ``kind="ffn"`` projections are only
+    sharded when the trace's ffn flag is set (online R4 replicates them).
+    Identity-cost outside TP or without a quant hook.
+    """
+    ctx = _TP_CTX.get()
+    sharded = ctx is not None and (kind == "attn" or ctx.ffn)
+    from repro.quant import context as qctx
+    aq = qctx.get_act_quant()
+    if not sharded or aq is None:
+        return linear(x, w, b)
+    lo = jax.lax.pmin(jnp.min(x, axis=-1, keepdims=True), ctx.axis)
+    hi = jax.lax.pmax(jnp.max(x, axis=-1, keepdims=True), ctx.axis)
+    xq = aq(jnp.concatenate([x, lo, hi], axis=-1))[..., :-2]
+    with qctx.act_quant(None):
+        return linear(xq, w, b)
+
+
+def tp_shard_index() -> int:
+    """This shard's index along the TP axis (0 outside a TP trace)."""
+    ctx = _TP_CTX.get()
+    return jax.lax.axis_index(ctx.axis) if ctx is not None else 0
+
+
+def tp_moe_sharded() -> bool:
+    ctx = _TP_CTX.get()
+    return bool(ctx is not None and ctx.moe)
 
 
 # --------------------------------------------------------------------------- #

@@ -23,7 +23,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.common import NO_SHARD, dense_init, linear
+from repro.models.common import (NO_SHARD, dense_init, linear, tp_moe_sharded,
+                                 tp_psum_ffn, tp_psum_moe, tp_row_linear,
+                                 tp_shard_index)
 from repro.quant.qlinear import dense_weight
 
 MOE_GROUP = 2048          # einsum-path dispatch group size (tokens)
@@ -59,12 +61,16 @@ def mlp_forward(cfg: ModelConfig, p: dict, x: jax.Array, shd=NO_SHARD,
         h = shd(h, "act_bsf")
         if rot is not None and rot.get("r4") is not None:
             h = rot["r4"](h)   # online Hadamard before down-proj (R4)
-        return linear(h, p["w_down"])
+        # serve TP: when the FFN is f-sharded, gate/up are column-sharded and
+        # w_down row-sharded — psum the partial down projection (identity
+        # when replicated, e.g. under an online R4 that needs the full f dim)
+        return tp_psum_ffn(tp_row_linear(h, p["w_down"], kind="ffn"))
     h = jax.nn.gelu(linear(x, p["fc1"], p["b1"]))
     h = shd(h, "act_bsf")
     if rot is not None and rot.get("r4") is not None:
         h = rot["r4"](h)
-    return linear(h, p["fc2"], p["b2"])
+    y = tp_psum_ffn(tp_row_linear(h, p["fc2"], kind="ffn"))
+    return y + p["b2"].astype(y.dtype)
 
 
 # --------------------------------------------------------------------------- #
@@ -309,12 +315,49 @@ def moe_ragged_ep(cfg: ModelConfig, p: dict, x: jax.Array, mesh,
     return y, jnp.mean(aux)
 
 
+def moe_tp_local(cfg: ModelConfig, p: dict, x: jax.Array, rot=None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Serve-TP MoE: one shard's slice of an expert-sharded stack.
+
+    Runs *inside* the paged engine's shard_map (never builds its own): the
+    expert stacks arrive E-sharded along their leading axis while the router
+    is replicated, so every shard routes all tokens over the full expert set
+    identically to the single-device engine, masks the assignments that land
+    outside its local expert range, ragged_dots the local slice, and the
+    combine psum produces the full MoE output on every shard.
+    """
+    T, D = x.shape
+    K = cfg.moe_top_k
+    wg = dense_weight(p["w_gate"], x.dtype)
+    wu = dense_weight(p["w_up"], x.dtype)
+    wd = dense_weight(p["w_down"], x.dtype)
+    e_local = wg.shape[0]
+    m = tp_shard_index()
+    w, idx, aux = _route(cfg, p["router"], p.get("router_bias"), x)
+    flat_e = idx.reshape(-1)                              # [T*K] global ids
+    local_e = flat_e - m * e_local
+    valid = (local_e >= 0) & (local_e < e_local)
+    local_clamped = jnp.where(valid, local_e, e_local - 1)
+    order = jnp.argsort(local_clamped)
+    xs = jnp.repeat(x, K, axis=0)[order]
+    group_sizes = jnp.bincount(local_clamped, length=e_local).astype(jnp.int32)
+    ys = _ragged_ffn(wg, wu, wd, xs, group_sizes, rot=rot)
+    ys = jnp.where(valid[order][:, None], ys, 0.0)
+    y = jnp.zeros_like(xs).at[order].set(ys).reshape(T, K, D)
+    y = (y * w[..., None].astype(x.dtype)).sum(1)
+    return tp_psum_moe(y), aux
+
+
 def moe_forward(cfg: ModelConfig, p: dict, x: jax.Array, shd=NO_SHARD,
                 mesh=None, rot=None) -> Tuple[jax.Array, jax.Array]:
     """x [B,S,D] -> (y [B,S,D], aux_loss). Adds shared experts if configured."""
     B, S, D = x.shape
     xt = x.reshape(B * S, D)
-    if cfg.moe_impl == "ragged":
+    if tp_moe_sharded():
+        # inside the serve-TP shard_map with E-sharded expert stacks — the
+        # mesh arg must NOT route to moe_ragged_ep (no nested shard_map)
+        y, aux = moe_tp_local(cfg, p, xt, rot=rot)
+    elif cfg.moe_impl == "ragged":
         if mesh is not None and "model" in mesh.shape and mesh.shape["model"] > 1:
             dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
             ep_axis = ("data", "model") if cfg.ep_axes == "all" else "model"

@@ -601,11 +601,17 @@ def paged_decode_step(cfg: ModelConfig, params: dict, token: jax.Array,
                       positions: jax.Array, lengths: jax.Array,
                       state_slots: Optional[jax.Array] = None,
                       shd=NO_SHARD, mesh=None, rot=None, kv_bits: int = 4,
-                      state_bits: int = 8):
+                      state_bits: int = 8, tp_plan=None):
     """token [B,1]; pool: nested per-adapter state (leaves lead with the
     layer dim); positions/lengths [B] — each slot advances at its own
     position; state_slots [B] physical state slot per lane (0 = null slot,
-    for idle lanes).  Returns (logits [B,1,V], new pool)."""
+    for idle lanes).  Returns (logits [B,1,V], new pool).
+
+    With a ``tp_plan`` (repro.dist.sharding.serve_tp_plan) the whole step
+    runs under one shard_map over the mesh 'model' axis: every shard traces
+    the same mesh-oblivious body against its local weight/page blocks, and
+    the only collectives are the psum seams in the layer code (exactly one
+    per layer on the quantized-artifact path)."""
     if not supports_paged(cfg):
         raise NotImplementedError(f"no paged decode for {cfg.arch_id}")
     from repro.serve.cache_adapters import DecodeCtx
@@ -617,6 +623,26 @@ def paged_decode_step(cfg: ModelConfig, params: dict, token: jax.Array,
                 f"{cfg.arch_id}: recurrent-state families require explicit "
                 "state_slots (physical slot per lane; 0 is the null slot)")
         state_slots = jnp.zeros_like(lengths)
+    if tp_plan is not None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.models.common import tp_context
+        lcfg = tp_plan.local_cfg()
+
+        def _body(params_l, token_l, pool_l, bt, pos, lens, slots):
+            with tp_context(ffn=tp_plan.ffn_sharded, moe=tp_plan.moe_sharded):
+                return paged_decode_step(
+                    lcfg, params_l, token_l, pool_l, bt, pos, lens, slots,
+                    rot=rot, kv_bits=kv_bits, state_bits=state_bits)
+
+        step = shard_map(
+            _body, mesh=tp_plan.mesh,
+            in_specs=(tp_plan.param_specs, P(), tp_plan.pool_specs,
+                      P(), P(), P(), P()),
+            out_specs=(P(), tp_plan.pool_specs),
+            check_rep=False)
+        return step(params, token, pool, block_tables, positions, lengths,
+                    state_slots)
     ctx = DecodeCtx(block_tables, positions, lengths, state_slots)
     x = _embed(cfg, params, token)
     x, new_pool, _ = _paged_step(cfg, params, x, pool, ctx, None, shd, mesh,
@@ -630,12 +656,16 @@ def paged_prefill_chunk(cfg: ModelConfig, params: dict, tokens: jax.Array,
                         carry: Optional[dict] = None, chunk_len=None,
                         shd=NO_SHARD, mesh=None, rot=None, kv_bits: int = 4,
                         state_bits: int = 8,
-                        n_pages: Optional[int] = None):
+                        n_pages: Optional[int] = None, tp_plan=None):
     """tokens [1,C] (one chunk of one prompt); start: scalar chunk offset;
     carry: fp32 recurrent-state carry from the previous chunk (see
     ``init_prefill_carry``); chunk_len: valid tokens in the chunk (padding
     must not advance recurrent state); n_pages: static page prefix covering
-    the chunk.  Returns (logits [1,C,V], new pool, new carry)."""
+    the chunk.  Returns (logits [1,C,V], new pool, new carry).
+
+    ``tp_plan`` runs the chunk tensor-parallel under shard_map (see
+    ``paged_decode_step``); the fp32 recurrent carry replicates — it spans
+    the full model dims by construction."""
     if not supports_paged(cfg):
         raise NotImplementedError(f"no paged prefill for {cfg.arch_id}")
     from repro.serve.cache_adapters import PrefillCtx
@@ -644,6 +674,28 @@ def paged_prefill_chunk(cfg: ModelConfig, params: dict, tokens: jax.Array,
                                    state_bits=state_bits)
     if chunk_len is None:
         chunk_len = tokens.shape[1]
+    if tp_plan is not None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.models.common import tp_context
+        lcfg = tp_plan.local_cfg()
+
+        def _body(params_l, tokens_l, pool_l, bt, st, carry_l, cl):
+            with tp_context(ffn=tp_plan.ffn_sharded, moe=tp_plan.moe_sharded):
+                return paged_prefill_chunk(
+                    lcfg, params_l, tokens_l, pool_l, bt, st, carry_l, cl,
+                    rot=rot, kv_bits=kv_bits, state_bits=state_bits,
+                    n_pages=n_pages)
+
+        step = shard_map(
+            _body, mesh=tp_plan.mesh,
+            in_specs=(tp_plan.param_specs, P(), tp_plan.pool_specs,
+                      P(), P(), P(), P()),
+            out_specs=(P(), tp_plan.pool_specs, P()),
+            check_rep=False)
+        return step(params, tokens, pool, block_table,
+                    jnp.asarray(start, jnp.int32), carry,
+                    jnp.asarray(chunk_len, jnp.int32))
     ctx = PrefillCtx(block_table, jnp.asarray(start, jnp.int32),
                      jnp.asarray(chunk_len, jnp.int32), n_pages)
     x = _embed(cfg, params, tokens)

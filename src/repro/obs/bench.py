@@ -35,7 +35,7 @@ Unit policy — the unit string decides how a metric is compared:
   lower-is-better, tolerance + IQR gated
       s ms us us_per_step  (timings) and ppl mse abs % per_token whip (quality)
   higher-is-better, tolerance + IQR gated
-      tok_per_s req_per_s flops_per_s x ratio
+      tok_per_s req_per_s flops_per_s x ratio tok_per_B
 
 Unknown units are reported but never gate (forward compatibility: a new
 benchmark row must not break the baseline comparison that predates it).
@@ -75,7 +75,8 @@ TIME_UNITS = frozenset({"s", "ms", "us", "us_per_step"})
 # quality metrics: lower is better, float-noise tolerant
 QUALITY_UNITS = frozenset({"ppl", "mse", "abs", "%", "per_token", "whip"})
 # throughput/speedup/utilization: higher is better
-RATE_UNITS = frozenset({"tok_per_s", "req_per_s", "flops_per_s", "x", "ratio"})
+RATE_UNITS = frozenset({"tok_per_s", "req_per_s", "flops_per_s", "x",
+                        "ratio", "tok_per_B"})
 
 # below this magnitude a relative comparison is undefined (zero baseline)
 _ABS_FLOOR = 1e-12

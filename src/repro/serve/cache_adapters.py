@@ -36,10 +36,11 @@ targets for idle-slot writes.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import NamedTuple, Optional
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models.common import NO_SHARD
@@ -72,6 +73,16 @@ class PrefillCtx(NamedTuple):
 def _state_nbytes(state: dict) -> int:
     return sum(int(x.size) * x.dtype.itemsize
                for x in jax.tree_util.tree_leaves(state))
+
+
+def _sharded_nbytes(state: dict, specs: Dict[str, P], tp: int) -> int:
+    """Bytes ONE device holds: leaves whose spec carries the 'model' axis
+    count 1/tp of their global size, replicated leaves count in full."""
+    total = 0
+    for name, x in state.items():
+        div = tp if any(ax == "model" for ax in specs[name] if ax) else 1
+        total += int(x.size) * x.dtype.itemsize // div
+    return total
 
 
 def _quant_rows(x: jax.Array, bits: int):
@@ -128,6 +139,28 @@ class GQAPages:
         return paged_kv_bytes(num_pages, page_size, self.layers,
                               cfg.n_kv_heads, cfg.resolved_head_dim,
                               self.kv_bits)
+
+    def partition_specs(self, tp: int = 1) -> Dict[str, P]:
+        """Pool specs over the mesh 'model' axis: KV pages split their head
+        axis (each shard attends its own kv heads — the psum at the output
+        projection reassembles), scale/zero meta splits alongside."""
+        if tp <= 1:
+            return ({"k": P(), "v": P()} if self.kv_bits >= 16 else
+                    {k: P() for k in ("kq", "ks", "kz", "vq", "vs", "vz")})
+        if self.cfg.n_kv_heads % tp:
+            raise ValueError(
+                f"serve TP: {self.cfg.arch_id}: n_kv_heads = "
+                f"{self.cfg.n_kv_heads} is not divisible by the model-axis "
+                f"size {tp}")
+        codes = P(None, None, None, "model", None)   # [L,P,T,H,·]
+        meta = P(None, None, None, "model")          # [L,P,T,H]
+        if self.kv_bits >= 16:
+            return {"k": codes, "v": codes}
+        return {"kq": codes, "ks": meta, "kz": meta,
+                "vq": codes, "vs": meta, "vz": meta}
+
+    def nbytes_per_device(self, state: dict, tp: int = 1) -> int:
+        return _sharded_nbytes(state, self.partition_specs(tp), tp)
 
     def init_slot(self, state: dict, phys_slot) -> dict:
         return state               # pages are write-before-read; length-masked
@@ -209,6 +242,19 @@ class MLALatentPages:
         return latent_bytes(num_pages * page_size, self.layers,
                             cfg.kv_lora_rank, cfg.qk_rope_head_dim,
                             self.kv_bits)
+
+    def partition_specs(self, tp: int = 1) -> Dict[str, P]:
+        """Latent pages REPLICATE: c_kv comes off the replicated ``wkv_a``
+        projection, so every shard computes the identical row and writes the
+        identical page — queries shard over heads instead (``wq_b``) and
+        attend the full latent locally.  Replication is what keeps the
+        absorbed-decode write deterministic across shards."""
+        keys = (("ckv", "krope") if self.kv_bits >= 16 else
+                ("cq", "cs", "cz", "rq", "rs", "rz"))
+        return {k: P() for k in keys}
+
+    def nbytes_per_device(self, state: dict, tp: int = 1) -> int:
+        return _state_nbytes(state)
 
     def init_slot(self, state: dict, phys_slot) -> dict:
         return state
@@ -293,6 +339,20 @@ class SSMStatePool:
         K1, C, H, P, N = self._dims()
         return ssm_state_bytes(n_slots + 1, self.layers, K1, C, H, P, N,
                                self.state_bits)
+
+    def partition_specs(self, tp: int = 1) -> Dict[str, P]:
+        """SSM state REPLICATES under TP: the Mamba2 gated output norm spans
+        the full d_inner (``rmsnorm(y * silu(z))``), so sharding the heads
+        would force a second per-layer psum before it — against the
+        one-psum-per-layer contract — and the in_proj segment layout is not
+        contiguously shardable anyway.  Mamba blocks run whole per shard;
+        only attention (and FFN/MoE when eligible) shard."""
+        keys = (("conv", "h") if self.state_bits >= 16 else
+                ("cvq", "cvs", "cvz", "hq", "hs", "hz"))
+        return {k: P() for k in keys}
+
+    def nbytes_per_device(self, state: dict, tp: int = 1) -> int:
+        return _state_nbytes(state)
 
     def init_slot(self, state: dict, phys_slot) -> dict:
         return {k: v.at[:, phys_slot].set(jnp.zeros_like(v[:, 0]))

@@ -79,29 +79,61 @@ def _from_artifact(cls, artifact, paged: bool, **kw):
             "stores integer KV pages by default — pass kv_bits=4/8 (or 16 "
             "for raw fp16 pages) explicitly, or use the ServeEngine wrapper")
     kw.setdefault("kv_bits", qc.kv_bits)
+    from repro.dist.sharding import tp_degree
+    if tp_degree(kw.get("mesh")) > 1:
+        # tensor-parallel cold boot: hand the engine the HOST mmap views —
+        # PagedServeEngine places each leaf shard-wise off the artifact
+        # (make_array_from_callback), so no device ever holds a full
+        # projection weight
+        return cls(cfg, artifact.params, **kw)
     params = jax.device_put(artifact.params)    # one transfer off the mmap
     return cls(cfg, params, **kw)
 
 
+MAX_REP_HISTORY = 64     # repetition-penalty window (tokens per request)
+
+
 def _build_sampler(vocab: int):
     """Per-slot sampling: greedy at temperature 0 (the oracle), else
-    temperature softmax restricted to the top-k logits, keyed by the
-    request key folded with the absolute position (deterministic replay)."""
-    def sample(logits, temps, top_ks, keys, positions):
+    repetition penalty -> top-k -> top-p (nucleus) -> temperature softmax,
+    keyed by the request key folded with the absolute position
+    (deterministic replay: replaying a preempted request rebuilds the same
+    history and keys, hence the same tokens).
+
+    ``hist`` rows hold the last ``MAX_REP_HISTORY`` prompt+output tokens,
+    padded with ``vocab`` (one past the real ids, scattered with
+    mode='drop').  top_p=1.0 / rep_pen=1.0 are exact no-ops, so the default
+    path is bit-identical to plain temperature/top-k sampling."""
+    def sample(logits, temps, top_ks, top_ps, rep_pens, hist, keys,
+               positions):
         lg = logits[:, 0, :vocab].astype(jnp.float32)
         greedy = jnp.argmax(lg, axis=-1)
 
-        def one(lg_b, t, k, key, pos):
+        def one(lg_b, t, k, p, rp, h, key, pos):
             key = jax.random.fold_in(key, pos)
+            # repetition penalty (CTRL): damp every token in the history —
+            # divide positive logits, multiply negative ones
+            seen = jnp.zeros((vocab,), bool).at[h].set(True, mode="drop")
+            pen = jnp.where(lg_b > 0, lg_b / rp, lg_b * rp)
+            lg_b = jnp.where(seen & (rp != 1.0), pen, lg_b)
+            # top-k: k <= 0 means unrestricted
             kk = jnp.where(k > 0, k, vocab)
             srt = jnp.sort(lg_b)[::-1]                      # descending
             thresh = srt[jnp.clip(kk - 1, 0, vocab - 1)]
-            masked = jnp.where(lg_b >= thresh,
-                               lg_b / jnp.maximum(t, 1e-6), -jnp.inf)
-            return jax.random.categorical(key, masked)
+            lg_b = jnp.where(lg_b >= thresh, lg_b, -jnp.inf)
+            # top-p over the survivors: keep the smallest prefix of the
+            # descending distribution with mass >= p (the top token always
+            # survives: its exclusive prefix mass is 0 < p)
+            ps = jax.nn.softmax(lg_b)
+            order = jnp.argsort(-lg_b)
+            ps_sorted = ps[order]
+            excl = jnp.cumsum(ps_sorted) - ps_sorted        # exclusive prefix
+            keep = jnp.zeros((vocab,), bool).at[order].set(excl < p)
+            lg_b = jnp.where(keep | (p >= 1.0), lg_b, -jnp.inf)
+            return jax.random.categorical(key, lg_b / jnp.maximum(t, 1e-6))
 
-        sampled = jax.vmap(one)(lg, temps, top_ks, keys,
-                                positions.astype(jnp.uint32))
+        sampled = jax.vmap(one)(lg, temps, top_ks, top_ps, rep_pens, hist,
+                                keys, positions.astype(jnp.uint32))
         return jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
     return sample
 
@@ -166,6 +198,25 @@ class PagedServeEngine:
         self._has_state = any(not a.needs_pages
                               for a in self.pool.adapters.values())
 
+        # tensor parallelism: a mesh with a non-trivial 'model' axis turns
+        # the decode/prefill programs into one shard_map over that axis.
+        # Params land shard-wise (host leaves — e.g. artifact mmap views —
+        # are read block-by-block per device), KV pages split their head
+        # axis, and the scheduler/prefix/CoW machinery above stays entirely
+        # mesh-oblivious.
+        from repro.dist.sharding import (place_serve_params, place_serve_pool,
+                                         serve_tp_plan)
+        self.tp_plan = serve_tp_plan(cfg, params, mesh, rot=self.rot,
+                                     kv_bits=kv_bits, state_bits=state_bits) \
+            if mesh is not None else None
+        self.tp = self.tp_plan.tp if self.tp_plan is not None else 1
+        if self.tp_plan is not None:
+            self.params = place_serve_params(params, self.tp_plan)
+            self.pool.state = place_serve_pool(self.pool.state, self.tp_plan)
+            mesh, shd = None, NO_SHARD      # the shard_map owns the mesh
+        elif not isinstance(jax.tree_util.tree_leaves(params)[0], jax.Array):
+            self.params = jax.device_put(params)    # host views, tp=1 boot
+
         from repro.train import steps as S
         aq = _act_quant_hook(a_bits)
         # donate the pool state (arg 2 / arg 0): the step's output pool
@@ -175,10 +226,12 @@ class PagedServeEngine:
         donate = () if cpu else (2,)
         qkw = dict(kv_bits=kv_bits, state_bits=state_bits)
         self._prefill = jax.jit(S.build_paged_prefill_chunk(
-            cfg, mesh=mesh, shd=shd, rot=self.rot, act_quant=aq, **qkw),
+            cfg, mesh=mesh, shd=shd, rot=self.rot, act_quant=aq,
+            tp_plan=self.tp_plan, **qkw),
             donate_argnums=donate, static_argnums=(7,))
         self._decode = jax.jit(S.build_paged_decode_step(
-            cfg, mesh=mesh, shd=shd, rot=self.rot, act_quant=aq, **qkw),
+            cfg, mesh=mesh, shd=shd, rot=self.rot, act_quant=aq,
+            tp_plan=self.tp_plan, **qkw),
             donate_argnums=donate)
         pool_donate = () if cpu else (0,)
         self._commit = jax.jit(S.build_paged_commit(cfg, **qkw),
@@ -204,10 +257,16 @@ class PagedServeEngine:
         r = seq.req
         if r.temperature <= 0:
             return int(self._greedy(jnp.asarray(logits_row)[None, None])[0])
+        hist = np.full((1, MAX_REP_HISTORY), self.cfg.vocab_size, np.int32)
+        tail = (list(r.prompt) + list(r.out))[-MAX_REP_HISTORY:]
+        hist[0, :len(tail)] = tail
         tok = self._sample(
             jnp.asarray(logits_row)[None, None],
             jnp.asarray([r.temperature], jnp.float32),
             jnp.asarray([r.top_k], jnp.int32),
+            jnp.asarray([r.top_p], jnp.float32),
+            jnp.asarray([r.rep_penalty], jnp.float32),
+            jnp.asarray(hist),
             jnp.asarray(seq.key_data[None]),
             jnp.asarray([pos], jnp.int32))
         return int(tok[0])
@@ -374,7 +433,8 @@ class PagedServeEngine:
             # surviving sequence has a page under its next write position
             sched.ensure_capacity()
             (tokens, tables, positions, lengths, state_slots,
-             (temps, top_ks, keys)) = sched.batch_inputs()
+             (temps, top_ks, top_ps, rep_pens, hist, keys)) \
+                = sched.batch_inputs()
             t0 = time.perf_counter()
             with self.obs.annotate("serve.decode_step"):
                 logits, state = self._decode(
@@ -387,7 +447,9 @@ class PagedServeEngine:
                 else:
                     nxt = np.asarray(self._sample(
                         logits, jnp.asarray(temps), jnp.asarray(top_ks),
-                        jnp.asarray(keys), jnp.asarray(positions)))
+                        jnp.asarray(top_ps), jnp.asarray(rep_pens),
+                        jnp.asarray(hist), jnp.asarray(keys),
+                        jnp.asarray(positions)))
             # np.asarray above already synced the sampled tokens, so dt is
             # real device time — no extra fence needed
             dt = time.perf_counter() - t0
@@ -432,6 +494,14 @@ class PagedServeEngine:
             # actual paged footprint, not a dense-cache estimate
             "kv_cache_bytes": self.pool.nbytes,
             "cache_bytes_by_kind": self.pool.nbytes_by_kind,
+            # tensor-parallel footprint: bytes ONE device holds (KV pages
+            # split their head axis; latent/SSM state replicates), and the
+            # analytic interconnect cost of the decode psums
+            "tp_devices": self.tp,
+            "kv_cache_bytes_per_device": self.pool.nbytes_per_device(self.tp),
+            "psum_bytes_per_token": (
+                self.tp_plan.psum_bytes_per_token()
+                if self.tp_plan is not None else 0),
             "kv_cache_bytes_dense": kv_bytes(
                 self.slots, self.max_seq, cfg.n_layers,
                 max(cfg.n_kv_heads, 1), cfg.resolved_head_dim or 1,

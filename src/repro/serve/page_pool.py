@@ -330,3 +330,15 @@ class PagePool:
             (ad.predicted_nbytes(self.num_pages, self.page_size)
              if ad.needs_pages else ad.predicted_nbytes(self.n_slots))
             for ad in self.adapters.values())
+
+    # ------------------------------------------------------------- tensor TP
+    def partition_specs(self, tp: int = 1) -> Dict[str, dict]:
+        """Per-adapter PartitionSpec trees for the serve shard_map (GQA KV
+        pages split heads over 'model'; MLA latent and SSM state replicate)."""
+        return {name: ad.partition_specs(tp)
+                for name, ad in self.adapters.items()}
+
+    def nbytes_per_device(self, tp: int = 1) -> int:
+        """Bytes ONE device holds under tp-way model-axis sharding."""
+        return sum(ad.nbytes_per_device(self.state[name], tp)
+                   for name, ad in self.adapters.items())

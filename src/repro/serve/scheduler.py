@@ -57,6 +57,8 @@ class Request:
     max_new: int = 16
     temperature: float = 0.0        # 0 = greedy argmax (the default oracle)
     top_k: int = 0                  # 0 = full vocab
+    top_p: float = 1.0              # nucleus mass; 1.0 = no truncation
+    rep_penalty: float = 1.0        # CTRL repetition penalty; 1.0 = off
     seed: Optional[int] = None      # per-request PRNG seed (None -> seq id)
     out: List[int] = field(default_factory=list)
     done: bool = False
@@ -366,7 +368,12 @@ class TokenScheduler:
         masked), write position 0 (the pool's null page) and state slot 0
         (the null state slot).  Returns (tokens, tables, positions, lengths,
         state_slots, sample_inputs) where sample_inputs = (temps, top_ks,
-        key_data) drives per-request sampling."""
+        top_ps, rep_pens, hist, key_data) drives per-request sampling.
+        ``hist`` rows are the last ``MAX_REP_HISTORY`` prompt+output tokens,
+        padded with vocab_size (the sampler drops out-of-range scatters);
+        preemption clears ``out``, so a replayed request rebuilds the exact
+        same history at every position — deterministic replay holds."""
+        from repro.serve.engine import MAX_REP_HISTORY
         B, Pmax = self.slots, self.pool.max_pages_per_seq
         tokens = np.zeros((B, 1), np.int32)
         tables = np.zeros((B, Pmax), np.int32)
@@ -375,6 +382,10 @@ class TokenScheduler:
         state_slots = np.zeros((B,), np.int32)
         temps = np.zeros((B,), np.float32)
         top_ks = np.zeros((B,), np.int32)
+        top_ps = np.ones((B,), np.float32)
+        rep_pens = np.ones((B,), np.float32)
+        hist = np.full((B, MAX_REP_HISTORY), self.pool.cfg.vocab_size,
+                       np.int32)
         keys = np.zeros((B, 2), np.uint32)
         for slot, seq in enumerate(self.running):
             if seq is None:
@@ -386,9 +397,13 @@ class TokenScheduler:
             state_slots[slot] = self.state_slot(seq)
             temps[slot] = seq.req.temperature
             top_ks[slot] = seq.req.top_k
+            top_ps[slot] = seq.req.top_p
+            rep_pens[slot] = seq.req.rep_penalty
+            tail = (list(seq.req.prompt) + seq.req.out)[-MAX_REP_HISTORY:]
+            hist[slot, :len(tail)] = tail
             keys[slot] = seq.key_data
         return (tokens, tables, positions, lengths, state_slots,
-                (temps, top_ks, keys))
+                (temps, top_ks, top_ps, rep_pens, hist, keys))
 
     def advance(self, next_tokens: np.ndarray) -> List[SeqState]:
         """Consume one decode step's sampled tokens; returns newly finished."""

@@ -96,7 +96,7 @@ def build_decode_step(cfg: ModelConfig, mesh=None, shd=NO_SHARD, rot=None,
 
 def build_paged_prefill_chunk(cfg: ModelConfig, mesh=None, shd=NO_SHARD,
                               rot=None, act_quant=None, kv_bits: int = 4,
-                              state_bits: int = 8):
+                              state_bits: int = 8, tp_plan=None):
     def prefill_chunk(params, tokens, pool, block_table, start, carry,
                       chunk_len, n_pages):
         # n_pages is static (jit specializes per covered-page count): only the
@@ -110,13 +110,13 @@ def build_paged_prefill_chunk(cfg: ModelConfig, mesh=None, shd=NO_SHARD,
                                          shd=shd, mesh=mesh, rot=rot,
                                          kv_bits=kv_bits,
                                          state_bits=state_bits,
-                                         n_pages=n_pages)
+                                         n_pages=n_pages, tp_plan=tp_plan)
     return prefill_chunk
 
 
 def build_paged_decode_step(cfg: ModelConfig, mesh=None, shd=NO_SHARD,
                             rot=None, act_quant=None, kv_bits: int = 4,
-                            state_bits: int = 8):
+                            state_bits: int = 8, tp_plan=None):
     def decode_step(params, token, pool, block_tables, positions, lengths,
                     state_slots):
         with qctx.act_quant(act_quant):
@@ -124,7 +124,7 @@ def build_paged_decode_step(cfg: ModelConfig, mesh=None, shd=NO_SHARD,
                                        positions, lengths,
                                        state_slots=state_slots, shd=shd,
                                        mesh=mesh, rot=rot, kv_bits=kv_bits,
-                                       state_bits=state_bits)
+                                       state_bits=state_bits, tp_plan=tp_plan)
     return decode_step
 
 

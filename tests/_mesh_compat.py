@@ -1,0 +1,31 @@
+"""Shared launcher for multi-virtual-device subprocess tests.
+
+Mesh tests (token-sharded calibration, tensor-parallel serve) need
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``, which must be set
+before jax initializes — so each test body runs in a fresh subprocess with a
+minimal, pinned environment.  Import as ``from _mesh_compat import
+run_in_mesh_subprocess`` (pytest puts tests/ on sys.path).
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def run_in_mesh_subprocess(code: str, devices: int = 8,
+                           timeout: int = 560) -> subprocess.CompletedProcess:
+    """Run ``code`` under ``devices`` virtual CPU devices.
+
+    JAX_PLATFORMS must survive into the subprocess: images that ship libtpu
+    hang for minutes probing for TPU hardware otherwise.
+    """
+    return subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+             "XLA_FLAGS":
+                 f"--xla_force_host_platform_device_count={devices}",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+             "HOME": os.environ.get("HOME", "/root")},
+        timeout=timeout)

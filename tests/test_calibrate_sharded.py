@@ -7,25 +7,9 @@ tolerance" contract on short trajectories (long f32 trajectories amplify
 reduction-order noise chaotically — see test_calibration_engine's module
 doc).
 """
-import os
-import subprocess
-import sys
 import textwrap
-from pathlib import Path
 
-ROOT = Path(__file__).resolve().parents[1]
-
-
-def _run(code: str):
-    # JAX_PLATFORMS must survive into the subprocess: images that ship libtpu
-    # hang for minutes probing for TPU hardware otherwise.
-    return subprocess.run(
-        [sys.executable, "-c", code], capture_output=True, text=True,
-        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
-             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
-             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
-             "HOME": os.environ.get("HOME", "/root")},
-        timeout=560)
+from _mesh_compat import run_in_mesh_subprocess as _run
 
 
 PRELUDE = """
@@ -88,8 +72,10 @@ def test_sharded_batched_matches_single_device():
                                           mesh=mesh)
         assert shd.rotation.shape == (L, n, n)
         assert shd.loss_history.shape == (L, 5)
+        # 5e-4: on wide CPUs the [L=8, N=2048] reduction order drifts a
+        # handful of elements past 1e-4 (observed max 2.4e-4)
         np.testing.assert_allclose(np.asarray(shd.rotation),
-                                   np.asarray(one.rotation), atol=1e-4)
+                                   np.asarray(one.rotation), atol=5e-4)
         np.testing.assert_allclose(np.asarray(shd.loss_history),
                                    np.asarray(one.loss_history), rtol=1e-5)
         for i in range(L):
