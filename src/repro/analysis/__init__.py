@@ -1,0 +1,45 @@
+"""repro.analysis: compiled-program contract checker + repo-discipline lint.
+
+Two layers:
+
+  * **Trace-time program lint** (:mod:`repro.analysis.jaxpr_lint`,
+    :mod:`repro.analysis.rules`): walk ``ClosedJaxpr``s structurally and
+    check ``Contract`` objects declared at the seams that own them
+    (``repro.serve.engine``, ``repro.core.qr_orth``,
+    ``repro.models.common``, ``repro.obs.quant_health``).
+  * **AST repo lint** (:mod:`repro.analysis.ast_lint`): convention rules
+    over ``src/repro`` source, with a checked-in suppression file
+    (``analysis/suppressions.toml``) requiring a justification per entry.
+
+CLI: ``python -m repro.analysis`` (see ``__main__.py``).  Exit codes mirror
+``repro.obs.bench compare``: 0 clean, 1 findings, 2 usage/config error.
+"""
+from repro.analysis.ast_lint import (AST_RULES, lint_file, lint_source,
+                                     lint_tree)
+from repro.analysis.jaxpr_lint import (CALLBACK_PRIMS, COLLECTIVE_PRIMS,
+                                       EqnSite, aliased_donations,
+                                       callback_census, collective_census,
+                                       iter_eqns, packed_payload_indices,
+                                       packed_taint)
+from repro.analysis.rules import (ALLOWED_DEQUANT_SITES, CollectiveCensus,
+                                  Contract, DonationAliased, Finding,
+                                  HostCallbackCount, PackedDtypeAudit,
+                                  RecompileCount, run_contract,
+                                  run_contracts)
+from repro.analysis.suppress import (Suppression, filter_findings,
+                                     load_suppressions)
+
+__all__ = [
+    # contracts + trace-time rules
+    "Contract", "Finding", "run_contract", "run_contracts",
+    "CollectiveCensus", "HostCallbackCount", "PackedDtypeAudit",
+    "DonationAliased", "RecompileCount", "ALLOWED_DEQUANT_SITES",
+    # jaxpr walking
+    "EqnSite", "iter_eqns", "collective_census", "callback_census",
+    "packed_taint", "packed_payload_indices", "aliased_donations",
+    "COLLECTIVE_PRIMS", "CALLBACK_PRIMS",
+    # AST lint
+    "AST_RULES", "lint_source", "lint_file", "lint_tree",
+    # suppressions
+    "Suppression", "load_suppressions", "filter_findings",
+]

@@ -1,0 +1,221 @@
+"""``python -m repro.analysis`` — the repo's gating static-analysis run.
+
+Two passes, one verdict:
+
+  1. **AST repo lint** over ``src/repro`` (rules: ``time-time``,
+     ``prng-reuse``, ``host-sync-in-jit``, ``mutable-default``), filtered
+     through ``src/repro/analysis/suppressions.toml`` — every suppression
+     must carry a justification (a bare one is a config error, exit 2),
+     and a suppression that matches nothing is itself reported
+     (``unused-suppression``).
+  2. **Trace-time contracts** on smoke-geometry programs: the sharded
+     calibration scan census (structural — valid on one device), and the
+     packed-artifact serve engine's contracts (disarmed-obs callbacks,
+     packed-dtype audit, donation aliasing).  With ``--devices N >= 2``
+     the TP decode census runs too (``XLA_FLAGS`` virtual host devices
+     are set before jax imports — pass the flag rather than exporting).
+
+Options::
+
+  --rules a,b,...        run only these rule ids (AST rule names and/or
+                         trace rule ids: collective-census, host-callback,
+                         packed-dtype, donation, recompile)
+  --ast-only             skip the trace-time contract pass (fast; no jax)
+  --contracts-only       skip the AST pass
+  --baseline FILE        known-findings file: matching fingerprints are
+                         reported but do not gate
+  --write-baseline FILE  record current findings as the baseline and exit 0
+  --devices N            virtual CPU devices for the contract pass
+
+Exit codes mirror ``repro.obs.bench compare``: 0 clean, 1 findings,
+2 usage/config error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+from repro.analysis.ast_lint import AST_RULES, lint_tree
+from repro.analysis.rules import Finding, run_contract
+from repro.analysis.suppress import (SuppressionError, filter_findings,
+                                     load_suppressions)
+
+TRACE_RULES = ("collective-census", "host-callback", "packed-dtype",
+               "donation", "recompile")
+
+_DEF_SUPPRESSIONS = Path(__file__).resolve().parent / "suppressions.toml"
+
+
+def _find_root(start: Path) -> Path:
+    """Repo root = nearest ancestor holding src/repro."""
+    p = start.resolve()
+    for cand in (p, *p.parents):
+        if (cand / "src" / "repro").is_dir():
+            return cand
+    raise SystemExit(f"error: no src/repro found above {start}")
+
+
+def _smoke_contracts(devices: int):
+    """The declared contracts, instantiated on smoke geometry.
+
+    One engine per declaring seam: the sharded calibration scan (psum
+    census is structural, so the host mesh suffices), and the packed-int4
+    serve engine on the artifact path (online R3/R4, A8, quantized KV).
+    """
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import qr_orth
+    from repro.core.whip import whip
+    from repro.kernels.hadamard.ops import online_hadamard
+    from repro.launch.mesh import make_calib_mesh
+    from repro.models import model as M
+    from repro.quant import pack_params
+    from repro.serve import PagedServeEngine
+
+    contracts = []
+    contracts.append(qr_orth.sharded_scan_contract(make_calib_mesh(), whip))
+
+    key = jax.random.PRNGKey(0)
+    rot = {"r3": online_hadamard, "r4": online_hadamard}
+    cfg = get_config("llama2-7b").reduced()
+    eng = PagedServeEngine(cfg, pack_params(cfg, M.init_params(cfg, key)),
+                           rot=rot, a_bits=8, kv_bits=4, batch_slots=2,
+                           max_seq=64, page_size=8)
+    contracts += eng.analysis_contracts()
+
+    if devices >= 2:
+        from repro.launch.mesh import make_serve_mesh
+        cfg8 = cfg.replace(n_heads=8, n_kv_heads=8, head_dim=8)
+        eng8 = PagedServeEngine(
+            cfg8,
+            pack_params(cfg8, M.init_params(cfg8, jax.random.fold_in(key, 1))),
+            rot=rot, a_bits=8, kv_bits=4, mesh=make_serve_mesh(devices),
+            batch_slots=2, max_seq=64, page_size=8)
+        tp = [c for c in eng8.analysis_contracts()
+              if c.name == "serve/tp-decode-collectives"]
+        if not tp:
+            raise SystemExit(
+                "error: --devices >= 2 but the TP engine declared no "
+                "collective-census contract")
+        contracts += tp
+    return contracts
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="compiled-program contract checker + repo lint")
+    ap.add_argument("--rules", default="",
+                    help="comma-separated rule ids (default: all)")
+    ap.add_argument("--root", default="", help="repo root (default: auto)")
+    ap.add_argument("--suppressions", default="",
+                    help=f"suppression file (default: {_DEF_SUPPRESSIONS})")
+    ap.add_argument("--baseline", default="",
+                    help="known-findings JSON; matches do not gate")
+    ap.add_argument("--write-baseline", default="",
+                    help="write current findings as the baseline, exit 0")
+    ap.add_argument("--ast-only", action="store_true")
+    ap.add_argument("--contracts-only", action="store_true")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="virtual CPU devices for the contract pass")
+    args = ap.parse_args(argv)
+
+    if args.ast_only and args.contracts_only:
+        print("error: --ast-only and --contracts-only are exclusive",
+              file=sys.stderr)
+        return 2
+
+    known = AST_RULES + TRACE_RULES
+    selected = tuple(r.strip() for r in args.rules.split(",") if r.strip())
+    for r in selected:
+        if r not in known:
+            print(f"error: unknown rule {r!r}; known: {', '.join(known)}",
+                  file=sys.stderr)
+            return 2
+    want = (lambda r: r in selected) if selected else (lambda r: True)
+
+    root = Path(args.root) if args.root else _find_root(Path.cwd())
+    findings: list = []
+
+    # ---- pass 1: AST lint ------------------------------------------------ #
+    if not args.contracts_only:
+        ast_rules = tuple(r for r in AST_RULES if want(r))
+        if ast_rules:
+            raw = lint_tree(root, rules=ast_rules)
+            sup_path = Path(args.suppressions) if args.suppressions \
+                else _DEF_SUPPRESSIONS
+            try:
+                sups = load_suppressions(sup_path)
+            except SuppressionError as e:
+                print(f"error: {e}", file=sys.stderr)
+                return 2
+            kept, unused = filter_findings(raw, sups, root)
+            findings += kept
+            findings += [
+                Finding("unused-suppression",
+                        str(sup_path.relative_to(root)) if
+                        sup_path.is_relative_to(root) else str(sup_path),
+                        f"suppression (rule={s.rule}, path={s.path}, "
+                        f"match={s.match!r}) matched no finding — delete it")
+                for s in unused]
+
+    # ---- pass 2: trace-time contracts ------------------------------------ #
+    if not args.ast_only and any(want(r) for r in TRACE_RULES):
+        if args.devices > 1 and "xla_force_host_platform_device_count" \
+                not in os.environ.get("XLA_FLAGS", ""):
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "") +
+                f" --xla_force_host_platform_device_count={args.devices}"
+            ).strip()
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        for contract in _smoke_contracts(args.devices):
+            relevant = [c for c in contract.checks if want(c.rule)]
+            if not relevant:
+                continue
+            findings += run_contract(
+                type(contract)(name=contract.name, owner=contract.owner,
+                               checks=tuple(relevant), trace=contract.trace,
+                               lower=contract.lower, live=contract.live,
+                               description=contract.description))
+
+    # ---- verdict --------------------------------------------------------- #
+    if args.write_baseline:
+        Path(args.write_baseline).write_text(json.dumps(
+            {"fingerprints": sorted({f.fingerprint for f in findings})},
+            indent=2) + "\n")
+        print(f"wrote {len(findings)} finding fingerprint(s) to "
+              f"{args.write_baseline}")
+        return 0
+
+    baselined = set()
+    if args.baseline:
+        try:
+            baselined = set(json.loads(Path(args.baseline).read_text())
+                            .get("fingerprints", []))
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"error: cannot read baseline {args.baseline}: {e}",
+                  file=sys.stderr)
+            return 2
+
+    gating = []
+    for f in findings:
+        tag = ""
+        if f.fingerprint in baselined:
+            tag = "  [baselined]"
+        else:
+            gating.append(f)
+        print(f"{f}{tag}")
+
+    n_old = len(findings) - len(gating)
+    suffix = f" ({n_old} baselined)" if n_old else ""
+    print(f"repro.analysis: {len(gating)} gating finding(s)"
+          f"{suffix}")
+    return 1 if gating else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,408 @@
+"""Repo-discipline AST lint over ``src/repro``.
+
+Four rules, each encoding a convention this repo has already paid for
+violating once:
+
+  ``time-time``         ``time.time()`` measures wall-clock time — NTP
+                        steps corrupt elapsed-time brackets.  Intervals
+                        must use ``time.perf_counter()``; the few
+                        intentional wall-clock *stamps* (trace correlation
+                        fields, checkpoint metadata) are suppressed with a
+                        justification in ``suppressions.toml``.
+  ``prng-reuse``        a PRNG key passed to two consumers without an
+                        intervening ``split``/``fold_in`` correlates the
+                        streams (the PR-5 calibration bug: capture
+                        sampling and rotation inits shared a key).
+                        Branch-aware: uses in mutually exclusive ``if``
+                        arms do not conflict; a consumer inside a loop of
+                        a key created outside it is flagged.
+  ``host-sync-in-jit``  ``.item()`` / ``np.asarray`` / ``np.array`` /
+                        ``jax.device_get`` / ``block_until_ready`` inside
+                        a function decorated with (or passed to)
+                        ``jax.jit`` — a host sync inside a traced function
+                        either fails at trace time or silently fences the
+                        program it was supposed to stay out of.
+  ``mutable-default``   mutable default arguments ([], {}, set(), ...).
+
+``lint_file``/``lint_tree`` return ``repro.analysis.rules.Finding``s with
+``path:line`` locations; suppression handling lives in the CLI layer.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.rules import Finding
+
+__all__ = ["AST_RULES", "lint_source", "lint_file", "lint_tree"]
+
+AST_RULES = ("time-time", "prng-reuse", "host-sync-in-jit",
+             "mutable-default")
+
+# callees that *derive* a new key rather than consuming one
+_KEY_DERIVERS = {"split", "fold_in", "key_data", "PRNGKey", "key",
+                 "wrap_key_data", "clone"}
+# assignments from these calls introduce a key variable
+_KEY_MAKERS = {"PRNGKey", "key", "split", "fold_in", "wrap_key_data"}
+
+_SYNC_CALLS = {"asarray", "array", "device_get", "block_until_ready",
+               "item"}
+
+
+def _call_name(func: ast.AST) -> str:
+    """Terminal name of a call target: ``jax.random.split`` -> ``split``."""
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def _qual_parts(func: ast.AST) -> List[str]:
+    """Dotted parts of a call target: ``np.asarray`` -> ['np','asarray']."""
+    parts: List[str] = []
+    node = func
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return parts[::-1]
+
+
+# --------------------------------------------------------------------------- #
+# time-time
+# --------------------------------------------------------------------------- #
+def _rule_time_time(tree: ast.AST, path: str, src_lines) -> List[Finding]:
+    out = []
+    # names bound by `from time import time [as alias]`
+    aliases: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "time":
+            for a in node.names:
+                if a.name == "time":
+                    aliases.add(a.asname or a.name)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        hit = (isinstance(f, ast.Attribute) and f.attr == "time"
+               and isinstance(f.value, ast.Name) and f.value.id == "time") \
+            or (isinstance(f, ast.Name) and f.id in aliases)
+        if hit:
+            out.append(Finding(
+                "time-time", f"{path}:{node.lineno}",
+                "time.time() is wall-clock (NTP-steppable); use "
+                "time.perf_counter() for intervals, or suppress an "
+                "intentional wall-clock stamp with a justification"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# mutable-default
+# --------------------------------------------------------------------------- #
+def _rule_mutable_default(tree: ast.AST, path: str, _src) -> List[Finding]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+            continue
+        args = node.args
+        for d in list(args.defaults) + [d for d in args.kw_defaults if d]:
+            bad = isinstance(d, (ast.List, ast.Dict, ast.Set)) or (
+                isinstance(d, ast.Call) and isinstance(d.func, ast.Name)
+                and d.func.id in ("list", "dict", "set", "bytearray"))
+            if bad:
+                fn = getattr(node, "name", "<lambda>")
+                out.append(Finding(
+                    "mutable-default", f"{path}:{d.lineno}",
+                    f"mutable default argument in {fn}(); default to None "
+                    "and construct inside the body"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# host-sync-in-jit
+# --------------------------------------------------------------------------- #
+def _is_jit_expr(node: ast.AST) -> bool:
+    """``jax.jit`` / ``jit`` / ``partial(jax.jit, ...)`` / ``jax.jit(...)``."""
+    if isinstance(node, ast.Call):
+        parts = _qual_parts(node.func)
+        if parts and parts[-1] == "partial":
+            return any(_is_jit_expr(a) for a in node.args)
+        return parts[-1:] == ["jit"] if parts else False
+    parts = _qual_parts(node)
+    return bool(parts) and parts[-1] == "jit"
+
+
+def _rule_host_sync(tree: ast.AST, path: str, _src) -> List[Finding]:
+    out = []
+    # function names passed to jax.jit(...) in this module
+    jit_wrapped: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_jit_expr(node.func) and \
+                node.args and isinstance(node.args[0], ast.Name):
+            jit_wrapped.add(node.args[0].id)
+
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        jitted = any(_is_jit_expr(d) for d in node.decorator_list) \
+            or node.name in jit_wrapped
+        if not jitted:
+            continue
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            parts = _qual_parts(sub.func)
+            if not parts:
+                continue
+            name = parts[-1]
+            if name in _SYNC_CALLS and (
+                    name not in ("asarray", "array")
+                    or parts[0] in ("np", "numpy", "onp")):
+                out.append(Finding(
+                    "host-sync-in-jit", f"{path}:{sub.lineno}",
+                    f"{'.'.join(parts)}() inside jit-traced function "
+                    f"{node.name}(): host syncs do not belong in compiled "
+                    "programs"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# prng-reuse
+# --------------------------------------------------------------------------- #
+class _KeyUse:
+    __slots__ = ("line", "branch", "loops", "snippet")
+
+    def __init__(self, line, branch, loops, snippet):
+        self.line, self.branch, self.loops = line, branch, loops
+        self.snippet = snippet
+
+
+def _branches_compatible(a: Tuple, b: Tuple) -> bool:
+    """Two branch paths conflict unless they take different arms of some
+    shared ``if``."""
+    arms_a = dict(a)
+    for node_id, arm in b:
+        if node_id in arms_a and arms_a[node_id] != arm:
+            return False
+    return True
+
+
+def _terminates(stmts) -> bool:
+    """Does this block unconditionally leave the enclosing scope/loop?"""
+    return bool(stmts) and isinstance(
+        stmts[-1], (ast.Return, ast.Raise, ast.Break, ast.Continue))
+
+
+class _PrngScope(ast.NodeVisitor):
+    """Per-function-scope key tracking with branch and loop context."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: List[Finding] = []
+        self._seen: Set[Tuple[str, int]] = set()
+        self._reset_scope()
+        self.branch: Tuple = ()
+        self.loops: Tuple = ()
+
+    def _reset_scope(self):
+        self.gen: Dict[str, int] = {}
+        self.born_loops: Dict[Tuple[str, int], Tuple] = {}
+        self.uses: Dict[Tuple[str, int], List[_KeyUse]] = {}
+
+    # ---- block walking with early-return awareness ------------------------
+    def _visit_block(self, stmts):
+        """Visit a statement list; an ``if`` whose body terminates (return/
+        raise/break/continue) makes the REST of the block its implicit
+        else-arm — the early-return idiom must not read as key reuse."""
+        stmts = list(stmts)
+        for i, s in enumerate(stmts):
+            if isinstance(s, ast.If) and _terminates(s.body) and not s.orelse:
+                self.visit(s.test)
+                outer = self.branch
+                self.branch = outer + ((id(s), "body"),)
+                self._visit_block(s.body)
+                self.branch = outer + ((id(s), "orelse"),)
+                self._visit_block(stmts[i + 1:])
+                self.branch = outer
+                return
+            self.visit(s)
+
+    # ---- scope boundaries -------------------------------------------------
+    def visit_FunctionDef(self, node):
+        outer = (self.gen, self.born_loops, self.uses, self.branch,
+                 self.loops)
+        self._reset_scope()
+        self.branch, self.loops = (), ()
+        self._visit_block(node.body)
+        self._flush()
+        (self.gen, self.born_loops, self.uses, self.branch,
+         self.loops) = outer
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # ---- key births / rebinds --------------------------------------------
+    def _is_key_rhs(self, value: ast.AST) -> bool:
+        if isinstance(value, ast.Call):
+            return _call_name(value.func) in _KEY_MAKERS
+        if isinstance(value, ast.Subscript):
+            return self._is_key_rhs(value.value) or (
+                isinstance(value.value, ast.Name)
+                and value.value.id in self.gen)
+        if isinstance(value, ast.Name):
+            return value.id in self.gen
+        return False
+
+    def _bind(self, target: ast.AST):
+        names = []
+        if isinstance(target, ast.Name):
+            names = [target.id]
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            names = [e.id for e in target.elts if isinstance(e, ast.Name)]
+        for n in names:
+            self.gen[n] = self.gen.get(n, 0) + 1
+            self.born_loops[(n, self.gen[n])] = self.loops
+
+    def visit_Assign(self, node):
+        self.visit(node.value)
+        if self._is_key_rhs(node.value):
+            for t in node.targets:
+                self._bind(t)
+
+    def visit_AugAssign(self, node):
+        self.visit(node.value)
+
+    # ---- consumers --------------------------------------------------------
+    def _key_expr(self, arg: ast.AST) -> Optional[Tuple[str, str]]:
+        """(var_name, display) when ``arg`` reads a tracked key."""
+        if isinstance(arg, ast.Name) and arg.id in self.gen:
+            return arg.id, arg.id
+        if isinstance(arg, ast.Subscript) and \
+                isinstance(arg.value, ast.Name) and \
+                arg.value.id in self.gen and \
+                isinstance(arg.slice, ast.Constant):
+            return (f"{arg.value.id}[{arg.slice.value!r}]",
+                    f"{arg.value.id}[{arg.slice.value!r}]")
+        return None
+
+    def visit_Call(self, node):
+        callee = _call_name(node.func)
+        if callee not in _KEY_DERIVERS:
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                ref = self._key_expr(arg)
+                if ref is None:
+                    continue
+                var, disp = ref
+                base = var.split("[")[0]
+                key = (var, self.gen.get(base, 0))
+                self.uses.setdefault(key, []).append(_KeyUse(
+                    node.lineno, self.branch, self.loops,
+                    f"{disp} -> {callee or '<call>'}"))
+        self.generic_visit(node)
+
+    # ---- control flow -----------------------------------------------------
+    def visit_If(self, node):
+        self.visit(node.test)
+        outer = self.branch
+        self.branch = outer + ((id(node), "body"),)
+        self._visit_block(node.body)
+        self.branch = outer + ((id(node), "orelse"),)
+        self._visit_block(node.orelse)
+        self.branch = outer
+
+    def _visit_loop(self, node):
+        outer = self.loops
+        self.loops = outer + (id(node),)
+        self._visit_block(node.body)
+        self.loops = outer
+        self._visit_block(node.orelse)
+
+    def visit_For(self, node):
+        self.visit(node.iter)
+        self._visit_loop(node)
+
+    def visit_While(self, node):
+        self.visit(node.test)
+        self._visit_loop(node)
+
+    # ---- reporting --------------------------------------------------------
+    def _emit(self, line: int, var: str, msg: str):
+        if (var, line) in self._seen:
+            return
+        self._seen.add((var, line))
+        self.findings.append(Finding(
+            "prng-reuse", f"{self.path}:{line}", msg))
+
+    def _flush(self):
+        for (var, gen), uses in self.uses.items():
+            base = var.split("[")[0]
+            born = self.born_loops.get((base, gen), ())
+            # consumer inside a loop the key was created outside of
+            for u in uses:
+                if len(u.loops) > len(born):
+                    self._emit(
+                        u.line, var,
+                        f"PRNG key {var!r} consumed inside a loop it was "
+                        "created outside of; fold_in/split per iteration")
+            if len(uses) < 2:
+                continue
+            for i, a in enumerate(uses):
+                for b in uses[i + 1:]:
+                    if a.line != b.line and \
+                            _branches_compatible(a.branch, b.branch):
+                        self._emit(
+                            b.line, var,
+                            f"PRNG key {var!r} passed to two consumers "
+                            f"({a.snippet} at line {a.line}, then "
+                            f"{b.snippet}) without split/fold_in")
+
+
+def _rule_prng_reuse(tree: ast.AST, path: str, _src) -> List[Finding]:
+    scope = _PrngScope(path)
+    # module level counts as a scope too (launch CLIs build keys inline)
+    for node in tree.body:
+        scope.visit(node)
+    scope._flush()
+    return scope.findings
+
+
+_RULE_FNS = {
+    "time-time": _rule_time_time,
+    "prng-reuse": _rule_prng_reuse,
+    "host-sync-in-jit": _rule_host_sync,
+    "mutable-default": _rule_mutable_default,
+}
+
+
+# --------------------------------------------------------------------------- #
+# Entry points
+# --------------------------------------------------------------------------- #
+def lint_source(src: str, path: str,
+                rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    tree = ast.parse(src, filename=path)
+    lines = src.splitlines()
+    out: List[Finding] = []
+    for rule in rules or AST_RULES:
+        if rule not in _RULE_FNS:
+            raise ValueError(f"unknown AST rule {rule!r}; "
+                             f"known: {', '.join(AST_RULES)}")
+        out.extend(_RULE_FNS[rule](tree, path, lines))
+    return out
+
+
+def lint_file(path: Path, root: Optional[Path] = None,
+              rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    rel = str(path.relative_to(root)) if root else str(path)
+    return lint_source(path.read_text(), rel, rules)
+
+
+def lint_tree(root: Path, subdir: str = "src/repro",
+              rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint every ``.py`` under ``root/subdir`` (repo-relative locations)."""
+    out: List[Finding] = []
+    for p in sorted((root / subdir).rglob("*.py")):
+        out.extend(lint_file(p, root=root, rules=rules))
+    return out

@@ -1,0 +1,258 @@
+"""Trace-time program lint: structural checks over ``ClosedJaxpr``s.
+
+The repo's hardest-won program invariants — exactly one psum per layer on
+the TP serve path, zero host callbacks when observability is disarmed,
+packed ``QTensor`` payloads staying integer outside the sanctioned dequant
+sites, donated pool buffers actually aliased — used to be enforced by
+one-off test assertions (the worst a substring match over
+``str(jax.make_jaxpr(...))``).  This module walks the jaxpr *structurally*:
+
+  * ``iter_eqns``        — depth-first equation walk that recurses into
+                           every sub-jaxpr (``pjit``/``shard_map``/``scan``/
+                           ``while``/``cond``/custom-derivative calls),
+                           tagging each equation with its enclosing
+                           primitive path (so a rule can ask "is this psum
+                           inside a scan body?").
+  * ``collective_census``— count/kind of collective equations.
+  * ``callback_census``  — host-callback primitives
+                           (``debug_callback``/``io_callback``/
+                           ``pure_callback``).
+  * ``packed_taint``     — forward dataflow from designated invars (packed
+                           quantized payloads) with a visitor for dtype
+                           rules.
+  * ``aliased_donations``— ``tf.aliasing_output`` markers in a lowered
+                           module (the compiled-executable side of
+                           ``donate_argnums``).
+
+Rules that interpret these walks live in ``repro.analysis.rules``;
+contract declaration (the shared source of truth between the owning
+modules, pytest, and CI) lives in ``repro.analysis`` itself.
+
+Everything here duck-types the jaxpr data structures (``.eqns``,
+``.jaxpr``, ``.invars``…) rather than importing private jax classes, so
+the walker survives jax's module reshuffles as long as the IR shape holds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterator, List, Set, Tuple
+
+__all__ = [
+    "EqnSite", "iter_eqns", "collective_census", "callback_census",
+    "packed_taint", "packed_payload_indices", "aliased_donations",
+    "eqn_site_names", "COLLECTIVE_PRIMS", "CALLBACK_PRIMS",
+]
+
+# collective primitives the census recognizes (jax primitive names)
+COLLECTIVE_PRIMS = ("psum", "all_gather", "all_to_all", "ppermute",
+                    "reduce_scatter", "pmax", "pmin", "axis_index")
+
+# host-callback primitives: anything that re-enters Python from compiled code
+CALLBACK_PRIMS = ("debug_callback", "io_callback", "pure_callback",
+                  "python_callback", "callback")
+
+# primitives whose sub-jaxprs are an *opaque compiled kernel* — the fused
+# dequant inside a Pallas kernel is the sanctioned site by construction, so
+# dtype rules must not descend into it (censuses still may).
+OPAQUE_KERNEL_PRIMS = ("pallas_call",)
+
+
+def _is_jaxpr(obj) -> bool:
+    return hasattr(obj, "eqns") and hasattr(obj, "invars")
+
+
+def _as_jaxpr(obj):
+    """Unwrap a ClosedJaxpr (``.jaxpr``) to the raw jaxpr, else pass through."""
+    inner = getattr(obj, "jaxpr", None)
+    return inner if inner is not None and _is_jaxpr(inner) else obj
+
+
+def _sub_jaxprs(eqn) -> List[Tuple[str, Any]]:
+    """Every (param_name, jaxpr) reachable from an equation's params."""
+    out = []
+    for k, v in eqn.params.items():
+        vals = v if isinstance(v, (tuple, list)) else (v,)
+        for item in vals:
+            j = _as_jaxpr(item)
+            if _is_jaxpr(j):
+                out.append((k, j))
+    return out
+
+
+@dataclass(frozen=True)
+class EqnSite:
+    """One equation plus where the walker found it."""
+    eqn: Any
+    path: Tuple[str, ...]       # enclosing primitive names, outermost first
+
+    @property
+    def prim(self) -> str:
+        return self.eqn.primitive.name
+
+    def in_scope(self, prim_name: str) -> bool:
+        return prim_name in self.path
+
+    @property
+    def in_scan(self) -> bool:
+        return "scan" in self.path or "while" in self.path
+
+    @property
+    def in_opaque_kernel(self) -> bool:
+        return any(p in OPAQUE_KERNEL_PRIMS for p in self.path)
+
+
+def iter_eqns(closed_jaxpr, _path: Tuple[str, ...] = (),
+              _depth: int = 0) -> Iterator[EqnSite]:
+    """Depth-first walk over every equation, recursing into sub-jaxprs.
+
+    Each structural occurrence is visited once — matching what
+    ``str(jaxpr)`` prints, which the old substring censuses counted — and
+    tagged with the stack of enclosing primitive names.
+    """
+    if _depth > 64:     # cycle/pathology guard; real jaxprs are shallow
+        return
+    jaxpr = _as_jaxpr(closed_jaxpr)
+    for eqn in jaxpr.eqns:
+        yield EqnSite(eqn, _path)
+        for _, sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub, _path + (eqn.primitive.name,),
+                                 _depth + 1)
+
+
+def eqn_site_names(eqn) -> Set[str]:
+    """Function names on the equation's trace-time Python call stack.
+
+    Used to attribute an equation to the source seam that traced it (e.g.
+    a ``convert_element_type`` inside ``dense_weight``).  Returns an empty
+    set when jax recorded no traceback (rules should treat that
+    conservatively).
+    """
+    names: Set[str] = set()
+    src = getattr(eqn, "source_info", None)
+    tb = getattr(src, "traceback", None)
+    if tb is not None:
+        try:
+            for frame in tb.frames:
+                names.add(frame.function_name)
+        except Exception:
+            pass
+    ns = getattr(src, "name_stack", None)
+    if ns is not None:
+        names.update(str(ns).replace("(", "/").replace(")", "/").split("/"))
+    names.discard("")
+    return names
+
+
+# --------------------------------------------------------------------------- #
+# Censuses
+# --------------------------------------------------------------------------- #
+def collective_census(closed_jaxpr,
+                      prims: Tuple[str, ...] = COLLECTIVE_PRIMS
+                      ) -> Dict[str, List[EqnSite]]:
+    """Map collective primitive name -> structural occurrence sites."""
+    out: Dict[str, List[EqnSite]] = {}
+    for site in iter_eqns(closed_jaxpr):
+        if site.prim in prims:
+            out.setdefault(site.prim, []).append(site)
+    return out
+
+
+def callback_census(closed_jaxpr) -> List[EqnSite]:
+    """Every host-callback equation in the program."""
+    return [s for s in iter_eqns(closed_jaxpr) if s.prim in CALLBACK_PRIMS]
+
+
+# --------------------------------------------------------------------------- #
+# Packed-payload taint walk
+# --------------------------------------------------------------------------- #
+def packed_payload_indices(example_args) -> Set[int]:
+    """Flat invar indices of packed/quantized ``QTensor`` code payloads.
+
+    ``example_args`` is the tuple of arguments a program was traced with;
+    the returned indices address the program's flattened invars (jax's
+    default pytree flatten order, which ``QTensor`` registers as
+    ``(q, scale, zero)``).
+    """
+    import jax
+    from repro.quant.quantizers import QTensor
+
+    outer, _ = jax.tree_util.tree_flatten(
+        example_args, is_leaf=lambda x: isinstance(x, QTensor))
+    idx = 0
+    payloads: Set[int] = set()
+    for leaf in outer:
+        n = len(jax.tree_util.tree_leaves(leaf))
+        if isinstance(leaf, QTensor) and leaf.bits < 16:
+            payloads.add(idx)           # q is the first registered child
+        idx += n
+    return payloads
+
+
+def _is_float_var(v) -> bool:
+    try:
+        return "float" in str(v.aval.dtype)
+    except Exception:
+        return False
+
+
+def packed_taint(closed_jaxpr, payload_invars: Set[int],
+                 visit: Callable[[EqnSite, bool], None],
+                 _path: Tuple[str, ...] = (), _depth: int = 0) -> None:
+    """Forward *code* taint from designated invars (packed integer
+    payloads).
+
+    ``visit(site, tainted)`` is called for every equation with whether any
+    of its inputs descend from a payload invar **while still integer**:
+    taint propagates only to non-float outputs — the moment codes are
+    converted to a float dtype they stop being packed payload (the convert
+    itself is visited as tainted; whether it was sanctioned is the rule's
+    call), so ordinary float math downstream of a legitimate dequant is
+    never flagged.  Binding follows the suffix-aligned argument convention
+    into sub-jaxprs (``pjit``/``scan``/``cond``/``while``-body/
+    ``shard_map``, whose body invars are a suffix of the call equation's
+    invars).
+    """
+    if _depth > 64:
+        return
+    jaxpr = _as_jaxpr(closed_jaxpr)
+    tainted: Set[int] = set()       # id() of tainted Var objects
+    for i, v in enumerate(jaxpr.invars):
+        if i in payload_invars:
+            tainted.add(id(v))
+
+    def var_tainted(v) -> bool:
+        return id(v) in tainted
+
+    for eqn in jaxpr.eqns:
+        hit = any(var_tainted(v) for v in eqn.invars
+                  if not isinstance(v, (int, float)))
+        site = EqnSite(eqn, _path)
+        visit(site, hit)
+        if hit:
+            for v in eqn.outvars:
+                if not _is_float_var(v):
+                    tainted.add(id(v))
+        for _, sub in _sub_jaxprs(eqn):
+            sj = _as_jaxpr(sub)
+            n = len(sj.invars)
+            bind = eqn.invars[-n:] if 0 < n <= len(eqn.invars) else []
+            sub_payloads = {i for i, v in enumerate(bind) if var_tainted(v)}
+            packed_taint(sub, sub_payloads, visit,
+                         _path + (eqn.primitive.name,), _depth + 1)
+
+
+# --------------------------------------------------------------------------- #
+# Donation / aliasing
+# --------------------------------------------------------------------------- #
+def aliased_donations(lowered) -> int:
+    """Number of program inputs the lowered module aliases to outputs.
+
+    ``jax.jit(fn, donate_argnums=...).lower(*args)`` records accepted
+    donations as ``tf.aliasing_output`` attributes on the MLIR arguments —
+    the marker the compiled executable honors.  A donated-but-unaliased
+    buffer (shape/dtype mismatch with every output) never receives the
+    attribute, which is exactly the regression the donation audit exists
+    to catch.
+    """
+    text = lowered.as_text() if hasattr(lowered, "as_text") else str(lowered)
+    return text.count("tf.aliasing_output")

@@ -1,0 +1,343 @@
+"""Contract declarations + the trace-time rules that check them.
+
+A ``Contract`` is declared *at the seam that owns the invariant* —
+``repro.serve.engine`` declares its decode program's collective budget,
+``repro.core.qr_orth`` its sharded scan's psum count, ``repro.obs.
+quant_health`` the disarmed-path zero-callback guarantee — and is the ONE
+source of truth the owning module, pytest, and the CI gate all consume.
+
+A contract bundles a lazily-evaluated program (``trace`` -> ``ClosedJaxpr``,
+``lower`` -> a ``jax.stages.Lowered``, ``live`` -> live jitted callables)
+with a tuple of checks:
+
+  ``CollectiveCensus``   count/kind of collectives (replaces the
+                         ``str(jax.make_jaxpr(...))`` substring match)
+  ``HostCallbackCount``  host-callback primitive budget (0 = the disarmed
+                         observability guarantee)
+  ``PackedDtypeAudit``   packed QTensor payloads never materialize as
+                         floats outside the sanctioned dequant sites, and
+                         matmuls consuming them accumulate in f32
+  ``DonationAliased``    donated buffers are actually aliased in the
+                         lowered module
+  ``RecompileCount``     jitted-program cache sizes after a geometry sweep
+                         match the declared compile budget
+
+``run_contract(contract)`` returns ``Finding``s (empty = contract holds).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+from repro.analysis.jaxpr_lint import (CALLBACK_PRIMS, EqnSite,
+                                       aliased_donations, callback_census,
+                                       collective_census, eqn_site_names,
+                                       iter_eqns, packed_payload_indices,
+                                       packed_taint)
+
+__all__ = [
+    "Finding", "Contract", "run_contract", "run_contracts",
+    "CollectiveCensus", "HostCallbackCount", "PackedDtypeAudit",
+    "DonationAliased", "RecompileCount", "ALLOWED_DEQUANT_SITES",
+]
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One violation.  ``where`` is ``path:line`` for AST findings and
+    ``<contract-name>/<detail>`` for trace-time findings."""
+    rule: str
+    where: str
+    message: str
+    contract: Optional[str] = None
+
+    @property
+    def fingerprint(self) -> str:
+        """Stable identity for baselines: rule + location sans line number."""
+        loc = self.where.rsplit(":", 1)[0] if self.where.rpartition(
+            ":")[2].isdigit() else self.where
+        return f"{self.rule}|{loc}|{self.message.split(' (')[0]}"
+
+    def __str__(self) -> str:
+        c = f" [{self.contract}]" if self.contract else ""
+        return f"{self.rule}: {self.where}{c}: {self.message}"
+
+
+class ContractContext:
+    """Lazily traces/lowers the contract's program once and shares it
+    across the contract's checks."""
+
+    def __init__(self, contract: "Contract"):
+        self.contract = contract
+        self._jaxpr = None
+        self._lowered = None
+
+    @property
+    def jaxpr(self):
+        if self._jaxpr is None:
+            if self.contract.trace is None:
+                raise ValueError(
+                    f"contract {self.contract.name!r} has jaxpr checks but "
+                    "no trace= callable")
+            self._jaxpr = self.contract.trace()
+        return self._jaxpr
+
+    @property
+    def lowered(self):
+        if self._lowered is None:
+            if self.contract.lower is None:
+                raise ValueError(
+                    f"contract {self.contract.name!r} has lowering checks "
+                    "but no lower= callable")
+            self._lowered = self.contract.lower()
+        return self._lowered
+
+
+@dataclass(frozen=True)
+class Contract:
+    """A declared program invariant: what to trace and what must hold."""
+    name: str
+    owner: str                                   # declaring module
+    checks: Tuple[Any, ...]
+    trace: Optional[Callable[[], Any]] = None    # () -> ClosedJaxpr
+    lower: Optional[Callable[[], Any]] = None    # () -> jax.stages.Lowered
+    live: Optional[Callable[[], Mapping[str, Any]]] = None  # jitted fns
+    description: str = ""
+
+
+def run_contract(contract: Contract) -> list:
+    ctx = ContractContext(contract)
+    findings: list = []
+    for check in contract.checks:
+        findings.extend(check.run(ctx))
+    return findings
+
+
+def run_contracts(contracts: Sequence[Contract]) -> list:
+    out: list = []
+    for c in contracts:
+        out.extend(run_contract(c))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Rule 1: collective census
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class CollectiveCensus:
+    """Structural collective budget: ``expect`` maps primitive name ->
+    exact occurrence count; ``forbid`` primitives must not appear at all;
+    ``require_in_scan`` additionally demands every expected collective sit
+    inside a scanned body (the per-layer placement: a collective hoisted
+    out of — or duplicated into — the layer scan changes the count *per
+    token* even when the structural total looks right)."""
+    expect: Mapping[str, int] = field(default_factory=dict)
+    forbid: Tuple[str, ...] = ()
+    require_in_scan: bool = False
+    rule = "collective-census"
+
+    def run(self, ctx: ContractContext) -> list:
+        census = collective_census(ctx.jaxpr)
+        name = ctx.contract.name
+        out = []
+        for prim, want in sorted(self.expect.items()):
+            sites = census.get(prim, [])
+            if len(sites) != want:
+                out.append(Finding(
+                    self.rule, f"{name}/{prim}",
+                    f"expected {want} {prim} equation(s), found "
+                    f"{len(sites)}", contract=name))
+            elif self.require_in_scan and want > 0:
+                loose = [s for s in sites if not s.in_scan]
+                if loose:
+                    out.append(Finding(
+                        self.rule, f"{name}/{prim}",
+                        f"{len(loose)} of {len(sites)} {prim} equation(s) "
+                        "sit outside the layer scan body", contract=name))
+        for prim in self.forbid:
+            sites = census.get(prim, [])
+            if sites:
+                out.append(Finding(
+                    self.rule, f"{name}/{prim}",
+                    f"forbidden collective {prim} appears "
+                    f"{len(sites)} time(s)", contract=name))
+        return out
+
+
+# --------------------------------------------------------------------------- #
+# Rule 2: host-callback budget
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class HostCallbackCount:
+    """Exact host-callback primitive budget.  ``expect=0`` is the disarmed
+    observability guarantee: a program traced with tracing/quant-health off
+    must contain no ``debug_callback``/``io_callback``/``pure_callback`` —
+    a smuggled callback syncs the device every step."""
+    expect: int = 0
+    rule = "host-callback"
+
+    def run(self, ctx: ContractContext) -> list:
+        sites = callback_census(ctx.jaxpr)
+        name = ctx.contract.name
+        if len(sites) == self.expect:
+            return []
+        prims = sorted({s.prim for s in sites}) or ["none"]
+        return [Finding(
+            self.rule, f"{name}/callbacks",
+            f"expected {self.expect} host-callback equation(s), found "
+            f"{len(sites)} ({', '.join(prims)})", contract=name)]
+
+
+# --------------------------------------------------------------------------- #
+# Rule 3: packed-payload dtype promotion
+# --------------------------------------------------------------------------- #
+# the sanctioned dequant seams: the fused Pallas kernel dispatch, its jnp
+# oracle, and the declared non-GEMM dense_weight sites (MoE expert stacks,
+# absorbed-MLA wkv_b).  Pallas kernel bodies are opaque by construction.
+ALLOWED_DEQUANT_SITES = ("quant_matmul", "qtensor_matmul", "qlinear_matmul",
+                         "dense_weight")
+
+# seams whose dot_generals ARE the quantized matmul: anything traced from
+# them must accumulate in f32 (f16/bf16 accumulation silently ruins W4A4 at
+# scale while staying invisible on toy shapes)
+QUANT_MATMUL_SITES = ("quant_matmul", "qtensor_matmul", "qlinear_matmul")
+
+_FLOAT_DTYPES = ("float16", "bfloat16", "float32", "float64")
+
+
+@dataclass(frozen=True)
+class PackedDtypeAudit:
+    """Packed/quantized QTensor payloads must stay integer in device
+    memory: any ``convert_element_type`` to a float dtype on a value
+    carrying code taint (see ``packed_taint`` — taint dies at the float
+    boundary, so downstream float math is never flagged) is a violation
+    unless traced from one of ``allowed_sites``.  Additionally, every
+    ``dot_general`` traced from a quantized-matmul seam
+    (``QUANT_MATMUL_SITES``) must produce f32/f64 — the accumulator
+    contract.
+
+    ``payload_args`` returns the traced example arguments (the same tuple
+    passed to ``jax.make_jaxpr``) so the audit can find which flat invars
+    are packed codes."""
+    payload_args: Callable[[], Any]
+    allowed_sites: Tuple[str, ...] = ALLOWED_DEQUANT_SITES
+    matmul_sites: Tuple[str, ...] = QUANT_MATMUL_SITES
+    rule = "packed-dtype"
+
+    def run(self, ctx: ContractContext) -> list:
+        payloads = packed_payload_indices(self.payload_args())
+        name = ctx.contract.name
+        if not payloads:
+            return [Finding(
+                self.rule, f"{name}/payloads",
+                "contract declares a packed-dtype audit but the traced "
+                "arguments carry no quantized QTensor payloads",
+                contract=name)]
+        out = []
+
+        def visit(site: EqnSite, tainted: bool):
+            if not tainted or site.in_opaque_kernel:
+                return
+            if site.prim == "convert_element_type":
+                new = str(site.eqn.params.get("new_dtype", ""))
+                if any(f in new for f in _FLOAT_DTYPES):
+                    sites = eqn_site_names(site.eqn)
+                    if not sites & set(self.allowed_sites):
+                        where = ", ".join(sorted(
+                            s for s in sites if not s.startswith("_"))[:5]) \
+                            or "<no source>"
+                        out.append(Finding(
+                            self.rule, f"{name}/dequant",
+                            f"packed payload materialized as {new} outside "
+                            f"the sanctioned dequant sites (traced from: "
+                            f"{where})", contract=name))
+
+        packed_taint(ctx.jaxpr, payloads, visit)
+
+        for site in iter_eqns(ctx.jaxpr):
+            if site.prim != "dot_general" or site.in_opaque_kernel:
+                continue
+            if not eqn_site_names(site.eqn) & set(self.matmul_sites):
+                continue
+            try:
+                out_dt = str(site.eqn.outvars[0].aval.dtype)
+            except Exception:
+                continue
+            if out_dt not in ("float32", "float64"):
+                out.append(Finding(
+                    self.rule, f"{name}/accum",
+                    f"quantized matmul accumulates in {out_dt}; the "
+                    "quant-matmul seams must accumulate in f32",
+                    contract=name))
+        return out
+
+
+# --------------------------------------------------------------------------- #
+# Rule 4: donation audit
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class DonationAliased:
+    """Donated buffers must actually alias: ``jax.jit(..., donate_argnums)``
+    only *offers* the buffers — a shape/dtype mismatch with every output
+    silently drops the donation and the step copies the whole pool every
+    token.  The lowered module records accepted donations as
+    ``tf.aliasing_output`` argument attributes; this check requires at
+    least ``min_aliased`` of them."""
+    min_aliased: int
+    rule = "donation"
+
+    def run(self, ctx: ContractContext) -> list:
+        n = aliased_donations(ctx.lowered)
+        name = ctx.contract.name
+        if n >= self.min_aliased:
+            return []
+        return [Finding(
+            self.rule, f"{name}/aliasing",
+            f"expected >= {self.min_aliased} donated inputs aliased to "
+            f"outputs in the lowered module, found {n} (donation dropped: "
+            "the program copies instead of reusing the buffers)",
+            contract=name)]
+
+
+# --------------------------------------------------------------------------- #
+# Rule 5: recompilation sentinel
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class RecompileCount:
+    """Program-cache budget after a geometry sweep.
+
+    ``expect`` maps program name -> exact jit-cache entry count (or a
+    ``(min, max)`` range).  The contract's ``live`` callable returns the
+    live jitted callables (measured via their ``_cache_size``) or plain
+    integers — the engine exposes ``program_cache_sizes()``.  A count above
+    budget means the cache key leaked a traced-value dependency (every
+    decode step recompiles); below budget means the sweep never exercised
+    the declared geometry."""
+    expect: Mapping[str, Any]
+    rule = "recompile"
+
+    def run(self, ctx: ContractContext) -> list:
+        if ctx.contract.live is None:
+            raise ValueError(
+                f"contract {ctx.contract.name!r} declares RecompileCount "
+                "but no live= callable")
+        live = ctx.contract.live()
+        name = ctx.contract.name
+        out = []
+        for prog, want in sorted(self.expect.items()):
+            fn = live.get(prog)
+            if fn is None:
+                out.append(Finding(
+                    self.rule, f"{name}/{prog}",
+                    f"program {prog!r} not found in the live program map",
+                    contract=name))
+                continue
+            got = fn if isinstance(fn, int) else fn._cache_size()
+            lo, hi = want if isinstance(want, tuple) else (want, want)
+            if not (lo <= got <= hi):
+                bound = f"{lo}" if lo == hi else f"[{lo}, {hi}]"
+                out.append(Finding(
+                    self.rule, f"{name}/{prog}",
+                    f"program {prog!r} compiled {got} time(s); budget "
+                    f"{bound} for this geometry sweep", contract=name))
+        return out

@@ -1,0 +1,146 @@
+"""Suppression file handling for the AST lint.
+
+``analysis/suppressions.toml`` is the checked-in allowlist of *intentional*
+rule violations.  Every entry must carry a non-empty ``justification`` —
+a suppression without a reason is itself a config error (exit 2), which is
+the mechanism that keeps the file honest: you cannot silence a finding
+without writing down why.
+
+Entry schema (array-of-tables)::
+
+    [[suppress]]
+    rule = "time-time"                 # required: rule id
+    path = "src/repro/obs/trace.py"    # required: repo-relative file
+    match = "t_wall"                   # optional: substring of source line
+    justification = "..."              # required, non-empty
+
+``match`` narrows the suppression to findings whose *source line* contains
+the substring; without it the (rule, path) pair suppresses the whole file,
+which the loader accepts but the README discourages.
+
+TOML parsing prefers :mod:`tomllib` (3.11+) then :mod:`tomli`; a minimal
+internal parser handles the restricted subset above so the checker runs on
+the 3.10 CI image without new dependencies.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Sequence, Tuple
+
+from repro.analysis.rules import Finding
+
+__all__ = ["Suppression", "load_suppressions", "filter_findings",
+           "SuppressionError"]
+
+
+class SuppressionError(ValueError):
+    """Malformed suppression file — a config error, not a finding."""
+
+
+@dataclass
+class Suppression:
+    rule: str
+    path: str
+    justification: str
+    match: str = ""
+    used: bool = field(default=False, compare=False)
+
+    def covers(self, finding: Finding, src_line: str) -> bool:
+        if finding.rule != self.rule:
+            return False
+        floc = finding.where.rsplit(":", 1)[0]
+        if floc != self.path:
+            return False
+        return (self.match in src_line) if self.match else True
+
+
+def _parse_minimal_toml(text: str) -> List[Dict[str, str]]:
+    """Fallback parser for the restricted array-of-tables subset."""
+    entries: List[Dict[str, str]] = []
+    cur: Dict[str, str] = None  # type: ignore[assignment]
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line == "[[suppress]]":
+            cur = {}
+            entries.append(cur)
+            continue
+        if "=" in line and cur is not None:
+            key, _, val = line.partition("=")
+            key, val = key.strip(), val.strip()
+            if len(val) >= 2 and val[0] == val[-1] and val[0] in "\"'":
+                cur[key] = val[1:-1]
+                continue
+        raise SuppressionError(
+            f"suppressions.toml:{lineno}: cannot parse {raw!r} "
+            "(restricted subset: [[suppress]] tables with string keys)")
+    return entries
+
+
+def _load_toml(path: Path) -> List[Dict[str, str]]:
+    text = path.read_text()
+    try:
+        import tomllib as toml_mod          # 3.11+
+    except ModuleNotFoundError:
+        try:
+            import tomli as toml_mod        # common on 3.10 images
+        except ModuleNotFoundError:
+            return _parse_minimal_toml(text)
+    data = toml_mod.loads(text)
+    return list(data.get("suppress", []))
+
+
+def load_suppressions(path: Path) -> List[Suppression]:
+    """Parse and validate; raises :class:`SuppressionError` on a missing
+    field or an empty justification."""
+    if not path.exists():
+        return []
+    out = []
+    for i, entry in enumerate(_load_toml(path)):
+        missing = [k for k in ("rule", "path", "justification")
+                   if not str(entry.get(k, "")).strip()]
+        if missing:
+            raise SuppressionError(
+                f"suppression entry #{i + 1} missing required "
+                f"field(s): {', '.join(missing)} — every suppression must "
+                "say which rule, which file, and WHY")
+        out.append(Suppression(
+            rule=str(entry["rule"]), path=str(entry["path"]),
+            justification=str(entry["justification"]),
+            match=str(entry.get("match", ""))))
+    return out
+
+
+def _source_line(root: Path, finding: Finding) -> str:
+    loc, _, line = finding.where.rpartition(":")
+    if not line.isdigit():
+        return ""
+    try:
+        lines = (root / loc).read_text().splitlines()
+        return lines[int(line) - 1]
+    except (OSError, IndexError):
+        return ""
+
+
+def filter_findings(findings: Sequence[Finding],
+                    suppressions: Sequence[Suppression],
+                    root: Path) -> Tuple[List[Finding], List[Suppression]]:
+    """Drop suppressed findings.  Returns ``(kept, unused_suppressions)``
+    — unused entries are reported (a stale suppression hides nothing but
+    rots the file)."""
+    kept: List[Finding] = []
+    for f in findings:
+        src = _source_line(root, f)
+        hit = None
+        for s in suppressions:
+            if s.covers(f, src):
+                hit = s
+                break
+        if hit is None:
+            kept.append(f)
+        else:
+            hit.used = True
+    unused = [s for s in suppressions if not s.used]
+    return kept, unused

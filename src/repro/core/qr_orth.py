@@ -436,6 +436,50 @@ def calibrate_rotations_batched(xs: jax.Array, z0s: jax.Array,
     return res
 
 
+def sharded_scan_contract(mesh, objective: Callable, *, steps: int = 2,
+                          n: int = 16, metrics=(), data_axes=None,
+                          name: str = "calib/sharded-scan-collectives"):
+    """The token-sharded calibration scan's collective contract, declared
+    at the seam that owns the psums (``_scan_core_sharded``): every
+    optimization step reduces exactly one loss partial, one partial per
+    metric, and one latent gradient over the data axes — ``2 + len(metrics)``
+    structural psum equations, all inside the scan body — and never gathers
+    (latents stay replicated by construction; a gather would mean a shard
+    stopped trusting that).
+
+    The psum placement is structural, so the trace is valid on any mesh —
+    including a single-device one, which is how the CI gate checks it
+    without virtual devices.  The compressed-gradient path routes its psum
+    through ``psum_compressed`` (different equation mix) and declares no
+    census here.
+    """
+    from repro.analysis.rules import CollectiveCensus, Contract
+    metrics = _norm_metrics(metrics)
+    axes = tuple(data_axes) if data_axes else calib_data_axes(mesh)
+    k = calib_group_size(mesh, axes)
+
+    def trace():
+        x = jnp.ones((4 * k, n), jnp.float32)
+        z0 = jnp.eye(n, dtype=jnp.float32)
+        x, w, n_valid = _pad_tokens(x, k, axis=0)
+        x, w, z0, lr = _place_sharded(mesh, axes, x, w, z0,
+                                      jnp.asarray(1e-2, jnp.float32))
+        return jax.make_jaxpr(
+            lambda x_, w_, z_, lr_: _scan_one_sharded(
+                x_, w_, z_, lr_, objective, "qr", "sgd", steps, "cholqr",
+                metrics, mesh, axes, n_valid, False))(x, w, z0, lr)
+
+    return Contract(
+        name=name, owner="repro.core.qr_orth",
+        checks=(CollectiveCensus(
+            expect={"psum": 2 + len(metrics)},
+            forbid=("all_gather", "all_to_all"),
+            require_in_scan=True),),
+        trace=trace,
+        description="loss + per-metric + gradient psums per calibration "
+                    "step, inside the scan body; no gathers")
+
+
 # --------------------------------------------------------------------------- #
 # Compatibility shims (legacy signatures, scanned engine underneath)
 # --------------------------------------------------------------------------- #

@@ -91,6 +91,10 @@ def main(argv=None):
     cfg = get_config(args.arch).reduced()
     key = jax.random.PRNGKey(0)
     params = M.init_params(cfg, key)
+    # independent streams for the calibration capture sampling and the
+    # Hadamard baseline (repro.analysis prng-reuse: one key, one consumer)
+    k_calib = jax.random.fold_in(key, 1)
+    k_had = jax.random.fold_in(key, 2)
     if args.ckpt:
         from repro.train.checkpoint import latest_step, restore
         s = latest_step(args.ckpt)
@@ -105,11 +109,11 @@ def main(argv=None):
     ppl_rtn = eval_ppl(cfg, quantize_params(cfg, params), toks, labels,
                        a_bits=args.a_bits)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     histories = {}
     obs.start_profile()
     try:
-        pack = calibrate_model(cfg, params, calib, key=key,
+        pack = calibrate_model(cfg, params, calib, key=k_calib,
                                objective=args.objective, method=args.method,
                                optimizer=args.optimizer, steps=args.steps,
                                r2_batched=not args.serial_r2,
@@ -138,7 +142,7 @@ def main(argv=None):
     ppl_dart = eval_ppl(fcfg, qparams, toks, labels,
                         a_bits=args.a_bits, rot=rot)
 
-    hcfg, hfused = fuse_rotations(cfg, params, random_pack(cfg, key))
+    hcfg, hfused = fuse_rotations(cfg, params, random_pack(cfg, k_had))
     ppl_had = eval_ppl(hcfg, quantize_params(hcfg, hfused), toks, labels,
                        a_bits=args.a_bits, rot=rot)
 
@@ -147,7 +151,7 @@ def main(argv=None):
     print(f"  RTN  ppl       : {ppl_rtn:.3f}")
     print(f"  QuaRot(Hadamard): {ppl_had:.3f}")
     print(f"  DartQuant      : {ppl_dart:.3f}  "
-          f"(calibrated in {time.time()-t0:.1f}s)")
+          f"(calibrated in {time.perf_counter()-t0:.1f}s)")
 
     if args.metrics_out:
         obs.metrics.write_prom(args.metrics_out)

@@ -80,19 +80,22 @@ def main(argv=None):
     cfg = cfg.replace(quant=qcfg)
     key = jax.random.PRNGKey(args.seed)
     params = M.init_params(cfg, key)
+    # rotation-pack stream independent of the init stream (repro.analysis
+    # prng-reuse: one key, one consumer)
+    k_rot = jax.random.fold_in(key, 1)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     obs.start_profile()
     try:
         if args.rotation == "dart":
             calib = jnp.asarray(calibration_batch(cfg, args.calib_seqs,
                                                   args.calib_len))
-            pack = calibrate_model(cfg, params, calib, key=key,
+            pack = calibrate_model(cfg, params, calib, key=k_rot,
                                    steps=args.steps, mesh=mesh, obs=obs)
         else:
-            pack = random_pack(cfg, key)
+            pack = random_pack(cfg, k_rot)
         cfg, params = fuse_rotations(cfg, params, pack)
-        calib_s = time.time() - t0
+        calib_s = time.perf_counter() - t0
 
         if args.metrics_out:
             # arm the QDQ taps: packing quantizes every projection weight,

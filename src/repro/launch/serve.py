@@ -110,6 +110,12 @@ def main(argv=None):
                     help="re-serve the same requests with the prefix cache "
                          "off and assert token-for-token parity, a nonzero "
                          "hit rate and fewer prefilled tokens (CI smoke)")
+    ap.add_argument("--assert-program-cache", action="store_true",
+                    help="after serving, check every jitted program's cache "
+                         "size against the engine's declared compile budget "
+                         "(the repro.analysis recompile contract: above "
+                         "budget = a leaked cache-key dependency recompiling "
+                         "per step; CI smoke)")
     ap.add_argument("--loadgen", action="store_true",
                     help="drive the engine with the open-loop Poisson load "
                          "generator (real scheduler admission) instead of a "
@@ -204,7 +210,8 @@ def main(argv=None):
             from repro.data.pipeline import calibration_batch
             from repro.quant import pack_params, quantize_params
             calib = jnp.asarray(calibration_batch(cfg, 4, 64))
-            pack = calibrate_model(cfg, params, calib, key=key, steps=30)
+            pack = calibrate_model(cfg, params, calib,
+                                   key=jax.random.fold_in(key, 1), steps=30)
             cfg, params = fuse_rotations(cfg, params, pack)
             if args.qdq:
                 params = quantize_params(cfg, params)
@@ -322,6 +329,20 @@ def main(argv=None):
         print(f"[serve] prefix parity OK: {len(reqs)} requests identical "
               f"with the cache off; prefill tokens "
               f"{stats['prefill_tokens']} vs {base_stats['prefill_tokens']}")
+
+    if args.assert_program_cache:
+        if not hasattr(eng, "recompile_contract"):
+            ap.error("--assert-program-cache needs the paged engine (the "
+                     "compile budget is declared per paged program)")
+        from repro.analysis import run_contract
+        findings = run_contract(eng.recompile_contract())
+        for f in findings:
+            print(f"[serve] {f}")
+        if findings:
+            raise SystemExit(1)
+        sizes = eng.program_cache_sizes()
+        print("[serve] program cache within budget: "
+              + ", ".join(f"{k}={v}" for k, v in sorted(sizes.items())))
 
     if args.metrics_out:
         obs.metrics.write_prom(args.metrics_out)

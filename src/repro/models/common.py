@@ -121,6 +121,54 @@ def tp_moe_sharded() -> bool:
     return bool(ctx is not None and ctx.moe)
 
 
+def expected_structural_tp_psums(cfg: ModelConfig, plan) -> int:
+    """Structural psum count of ONE TP decode/prefill program trace.
+
+    This module owns the psum seams (``tp_psum_attn``/``tp_psum_ffn``/
+    ``tp_psum_moe``), so it also owns the expected census: single-stack
+    attention families scan one shared layer body, which the jaxpr prints
+    once — one attention psum plus the FFN psum when that sub-block shards.
+    Mixed stacks (MoE interleaves, hybrid shared-attention groups) trace
+    config-dependent multi-scan programs; the structural census is not
+    declared for them (the analytic per-token count stays
+    ``ServeTPPlan.psums_per_token``).
+    """
+    if plan is None:
+        return 0
+    if cfg.attn_type != "gqa" or cfg.n_experts or cfg.family == "hybrid":
+        raise ValueError(
+            f"structural TP psum census is declared only for single-stack "
+            f"GQA families; {cfg.arch_id} (family={cfg.family}, "
+            f"attn={cfg.attn_type}) traces a config-dependent multi-scan "
+            "program")
+    return 1 + int(plan.ffn_sharded)
+
+
+def tp_decode_collective_contract(cfg: ModelConfig, plan, trace, *,
+                                  name: str = "serve/tp-decode-collectives"):
+    """The TP decode program's collective contract, declared at the seam
+    that inserts the psums: exactly ``expected_structural_tp_psums`` psum
+    equations, every one inside the layer scan body, and no
+    ``all_gather``/``all_to_all`` anywhere (the paged TP path never
+    rematerializes a full projection or gathers KV).
+
+    ``trace`` is a thunk returning the decode program's ``ClosedJaxpr``
+    (the engine supplies it); pytest and the CI gate consume this one
+    declaration via ``repro.analysis.run_contract``.
+    """
+    from repro.analysis.rules import CollectiveCensus, Contract
+    return Contract(
+        name=name, owner="repro.models.common",
+        checks=(CollectiveCensus(
+            expect={"psum": expected_structural_tp_psums(cfg, plan)},
+            forbid=("all_gather", "all_to_all"),
+            require_in_scan=True),),
+        trace=trace,
+        description="one psum per layer-scan body on the TP decode path "
+                    "(FFN psum only when the plan shards it); gathers "
+                    "forbidden")
+
+
 # --------------------------------------------------------------------------- #
 # Norms
 # --------------------------------------------------------------------------- #

@@ -29,7 +29,8 @@ from typing import Optional
 
 from repro.obs.metrics import MetricsRegistry
 
-__all__ = ["arm", "disarm", "armed", "tap", "sampling"]
+__all__ = ["arm", "disarm", "armed", "tap", "sampling",
+           "disarmed_callback_contract"]
 
 _TAP: Optional[MetricsRegistry] = None
 
@@ -64,6 +65,35 @@ def sampling(registry: MetricsRegistry):
         yield registry
     finally:
         _TAP = prev
+
+
+def disarmed_callback_contract(name: str, trace, *,
+                               owner: str = "repro.obs.quant_health"):
+    """The disarmed-observability guarantee, declared at the seam that owns
+    the only sanctioned host callback: a program traced while the
+    quant-health tap is disarmed must contain ZERO host-callback equations
+    (``debug_callback``/``io_callback``/``pure_callback``) — a smuggled
+    callback syncs the device every step for runs that never asked for
+    observability.
+
+    ``trace`` is a thunk returning the program's ``ClosedJaxpr``; the
+    returned ``Contract`` refuses to trace while armed (the contract is
+    about the disarmed path, and an armed trace would legitimately carry
+    callbacks)."""
+    from repro.analysis.rules import Contract, HostCallbackCount
+
+    def checked_trace():
+        if armed():
+            raise RuntimeError(
+                f"contract {name!r} asserts the disarmed path but the "
+                "quant-health tap is armed; disarm() before tracing")
+        return trace()
+
+    return Contract(
+        name=name, owner=owner,
+        checks=(HostCallbackCount(expect=0),), trace=checked_trace,
+        description="zero host callbacks in any program traced with "
+                    "observability disarmed")
 
 
 def _record(kind: str, clip_rate, dyn_range):

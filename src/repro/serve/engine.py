@@ -229,10 +229,13 @@ class PagedServeEngine:
             cfg, mesh=mesh, shd=shd, rot=self.rot, act_quant=aq,
             tp_plan=self.tp_plan, **qkw),
             donate_argnums=donate, static_argnums=(7,))
-        self._decode = jax.jit(S.build_paged_decode_step(
+        # the raw (unjitted) decode step stays addressable for the analysis
+        # contracts: they re-trace/re-lower it on demand (make_jaxpr,
+        # donation lowering) without touching the serving jit's cache
+        self._decode_fn = S.build_paged_decode_step(
             cfg, mesh=mesh, shd=shd, rot=self.rot, act_quant=aq,
-            tp_plan=self.tp_plan, **qkw),
-            donate_argnums=donate)
+            tp_plan=self.tp_plan, **qkw)
+        self._decode = jax.jit(self._decode_fn, donate_argnums=donate)
         pool_donate = () if cpu else (0,)
         self._commit = jax.jit(S.build_paged_commit(cfg, **qkw),
                                donate_argnums=pool_donate)
@@ -250,6 +253,111 @@ class PagedServeEngine:
     @classmethod
     def from_artifact(cls, artifact, **kw) -> "PagedServeEngine":
         return _from_artifact(cls, artifact, paged=True, **kw)
+
+    # ------------------------------------------------------------------ #
+    # Analysis contracts (repro.analysis): the engine owns its compiled
+    # programs, so it declares the invariants they must satisfy — pytest
+    # and the CI gate consume these, never re-deriving them per-test.
+    # ------------------------------------------------------------------ #
+    def _decode_example_args(self):
+        """Arguments shaped like one decode step on this engine's geometry
+        (the same tuple the serve loop passes), for tracing/lowering."""
+        B = self.slots
+        tokens = jnp.zeros((B, 1), jnp.int32)
+        tables = jnp.zeros((B, max(self.pool.max_pages_per_seq, 1)),
+                           jnp.int32)
+        vec = jnp.zeros((B,), jnp.int32)
+        return (self.params, tokens, self.pool.state, tables, vec, vec, vec)
+
+    def program_cache_sizes(self) -> Dict[str, int]:
+        """Live jit-cache entry counts per compiled program."""
+        progs = {"prefill": self._prefill, "decode": self._decode,
+                 "commit": self._commit, "init_slot": self._init_slot,
+                 "copy_page": self._copy_page, "sample": self._sample,
+                 "greedy": self._greedy}
+        return {k: v._cache_size() for k, v in progs.items()}
+
+    def compile_budget(self) -> Dict[str, tuple]:
+        """Expected jit-cache entry counts after serving any workload on
+        this (fixed) geometry: decode compiles exactly once — more means
+        the cache key leaked a traced-value dependency and every step
+        recompiles; prefill compiles once per distinct chunk page count
+        (``n_pages`` is a static arg, bounded by the pool geometry)."""
+        # sample/greedy run at two geometries: the B=1 prefill tail sample
+        # and the batched decode step
+        return {"decode": (1, 1),
+                "prefill": (1, max(self.pool.max_pages_per_seq, 1)),
+                "commit": (0, 1), "init_slot": (0, 1), "copy_page": (0, 1),
+                "sample": (0, 2), "greedy": (0, 2)}
+
+    def recompile_contract(self, expect=None, *,
+                           name: str = "serve/recompile"):
+        """Recompilation sentinel over the live program caches; ``expect``
+        overrides :meth:`compile_budget` (values: exact int or
+        ``(min, max)``)."""
+        from repro.analysis.rules import Contract, RecompileCount
+        return Contract(
+            name=name, owner="repro.serve.engine",
+            checks=(RecompileCount(expect or self.compile_budget()),),
+            live=self.program_cache_sizes,
+            description="each program compiles within its geometry budget")
+
+    def analysis_contracts(self, include_recompile: bool = False) -> list:
+        """Contracts over this engine's decode program.
+
+        Always: the donation audit (pool-state buffers must alias outputs
+        when donated).  When the params carry packed ``QTensor`` payloads:
+        the dtype-promotion audit.  When quant-health is disarmed and span
+        tracing off: the zero-host-callback guarantee.  Under a TP plan on
+        a single-stack GQA family: the one-psum-per-layer census declared
+        by ``repro.models.common``.
+        """
+        from repro.analysis.jaxpr_lint import packed_payload_indices
+        from repro.analysis.rules import Contract, DonationAliased, \
+            PackedDtypeAudit
+        from repro.models.common import tp_decode_collective_contract
+        from repro.obs import quant_health
+
+        args = self._decode_example_args()
+
+        def trace():
+            return jax.make_jaxpr(self._decode_fn)(*args)
+
+        def lower():
+            return jax.jit(self._decode_fn, donate_argnums=(2,)).lower(*args)
+
+        out = []
+        if self.tp_plan is not None:
+            try:
+                out.append(tp_decode_collective_contract(
+                    self.cfg, self.tp_plan, trace))
+            except ValueError:
+                pass    # mixed stack: no structural census declared
+        if not quant_health.armed() and not self.obs.tracing:
+            out.append(quant_health.disarmed_callback_contract(
+                "serve/disarmed-obs", trace, owner="repro.serve.engine"))
+        if packed_payload_indices(args):
+            out.append(Contract(
+                name="serve/packed-dtype", owner="repro.serve.engine",
+                checks=(PackedDtypeAudit(payload_args=lambda: args),),
+                trace=trace,
+                description="packed weights stay integer outside the "
+                            "sanctioned dequant sites; f32 accumulation"))
+        if self.tp_plan is None:
+            # single-program lowering records accepted donations as
+            # tf.aliasing_output even on CPU; the multi-device shard_map
+            # lowering drops them there, so the TP engine declares no
+            # donation contract (the invariant is backend-visible only on
+            # accelerators)
+            out.append(Contract(
+                name="serve/donation", owner="repro.serve.engine",
+                checks=(DonationAliased(min_aliased=len(
+                    jax.tree_util.tree_leaves(self.pool.state))),),
+                lower=lower,
+                description="donated pool-state buffers alias step outputs"))
+        if include_recompile:
+            out.append(self.recompile_contract())
+        return out
 
     # ------------------------------------------------------------------ #
     def _sample_one(self, seq: SeqState, logits_row, pos: int) -> int:

@@ -56,7 +56,7 @@ class FaultTolerantLoop:
         retries = 0
         while step < n_steps:
             batch = next(it)
-            t0 = time.time()
+            t0 = time.perf_counter()
             try:
                 state = self.step_fn(state, batch)
                 retries = 0
@@ -69,6 +69,6 @@ class FaultTolerantLoop:
                     raise
                 state = self.restore_fn()
                 continue                 # retry the step from restored state
-            self.monitor.observe(step, time.time() - t0)
+            self.monitor.observe(step, time.perf_counter() - t0)
             step += 1
         return state, step

@@ -71,7 +71,7 @@ class Trainer:
             restore_fn=self._restore_latest, monitor=self.monitor)
 
         it = iter(self.data)
-        t0 = time.time()
+        t0 = time.perf_counter()
         while self.step < n_steps:
             n_chunk = min(self.ckpt_every if self.ckpt else log_every,
                           n_steps - self.step)
@@ -83,7 +83,7 @@ class Trainer:
             self.history.append(m)
             if verbose and (self.step % log_every == 0
                             or self.step >= n_steps):
-                dt = time.time() - t0
+                dt = time.perf_counter() - t0
                 print(f"step {self.step:5d} loss {m['loss']:.4f} "
                       f"({dt:.1f}s)", flush=True)
             if self.ckpt:

@@ -1,0 +1,435 @@
+"""repro.analysis — every rule must fire on its seeded-violation fixture
+and stay silent on the idiomatic fix.
+
+A lint that cannot flag its own fixture is dead weight; one that flags the
+fix is noise.  Trace-time fixtures build tiny jaxprs in-process (the census
+walk is structural, so a 1-device mesh suffices); AST fixtures go through
+``lint_source``; the CLI tests exercise exit codes 0/1/2 end-to-end,
+including the clean-tree run the CI gate relies on.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis import (CollectiveCensus, Contract, DonationAliased,
+                            Finding, HostCallbackCount, PackedDtypeAudit,
+                            RecompileCount, collective_census, lint_source,
+                            run_contract)
+from repro.analysis.suppress import (SuppressionError, Suppression,
+                                     filter_findings, load_suppressions)
+from repro.quant.quantizers import QTensor
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _contract(name="fixture", *, checks, trace=None, lower=None, live=None):
+    return Contract(name=name, owner="tests", checks=tuple(checks),
+                    trace=trace, lower=lower, live=live)
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+# --------------------------------------------------------------------------- #
+# Trace-time rule 1: collective census
+# --------------------------------------------------------------------------- #
+def _census_jaxpr(*, loose_psum=False, gather=False):
+    """3 psum equations inside a scanned body (the scan traces its body
+    once, so the structural count is per-equation, not per-iteration);
+    optional violations appended."""
+    mesh = jax.make_mesh((1,), ("model",))
+
+    def body(x):
+        def step(c, _):
+            a = jax.lax.psum(x, "model")
+            b = jax.lax.psum(x * 2.0, "model")
+            d = jax.lax.psum(x * 3.0, "model")
+            return c + a + b + d, ()
+        y, _ = jax.lax.scan(step, x, None, length=2)
+        if loose_psum:
+            y = jax.lax.psum(y, "model")
+        if gather:
+            y = jax.lax.all_gather(y, "model")
+        return y
+
+    f = shard_map(body, mesh=mesh, in_specs=P("model"),
+                  out_specs=P("model"), check_rep=False)
+    return jax.make_jaxpr(f)(jnp.ones((4,)))
+
+
+def test_collective_census_clean_and_wrong_count():
+    jaxpr = _census_jaxpr()
+    census = collective_census(jaxpr)
+    assert len(census.get("psum", [])) == 3
+    assert all(s.in_scan for s in census["psum"])
+
+    ok = _contract(checks=[CollectiveCensus(
+        expect={"psum": 3}, forbid=("all_gather", "all_to_all"),
+        require_in_scan=True)], trace=lambda: jaxpr)
+    assert run_contract(ok) == []
+
+    wrong = _contract(checks=[CollectiveCensus(expect={"psum": 2})],
+                      trace=lambda: jaxpr)
+    findings = run_contract(wrong)
+    assert _rules(findings) == ["collective-census"], findings
+    assert "expected 2 psum" in findings[0].message
+
+
+def test_collective_census_flags_smuggled_gather():
+    jaxpr = _census_jaxpr(gather=True)
+    c = _contract(checks=[CollectiveCensus(
+        expect={"psum": 3}, forbid=("all_gather", "all_to_all"))],
+        trace=lambda: jaxpr)
+    findings = run_contract(c)
+    assert any("forbidden collective all_gather" in f.message
+               for f in findings), findings
+
+
+def test_collective_census_flags_psum_outside_scan():
+    jaxpr = _census_jaxpr(loose_psum=True)
+    # the structural total (4) is right — placement is not
+    c = _contract(checks=[CollectiveCensus(expect={"psum": 4},
+                                           require_in_scan=True)],
+                  trace=lambda: jaxpr)
+    findings = run_contract(c)
+    assert len(findings) == 1 and "outside the layer scan" in \
+        findings[0].message, findings
+
+
+# --------------------------------------------------------------------------- #
+# Trace-time rule 2: host-callback budget
+# --------------------------------------------------------------------------- #
+def test_host_callback_flags_armed_debug_callback():
+    def armed(x):
+        jax.debug.callback(lambda v: None, x)
+        return x * 2.0
+
+    c = _contract(checks=[HostCallbackCount(expect=0)],
+                  trace=lambda: jax.make_jaxpr(armed)(1.0))
+    findings = run_contract(c)
+    assert len(findings) == 1, findings
+    assert "found 1" in findings[0].message
+
+    clean = _contract(checks=[HostCallbackCount(expect=0)],
+                      trace=lambda: jax.make_jaxpr(lambda x: x * 2.0)(1.0))
+    assert run_contract(clean) == []
+
+
+# --------------------------------------------------------------------------- #
+# Trace-time rule 3: packed-dtype audit
+# --------------------------------------------------------------------------- #
+def _qt():
+    return QTensor(jnp.zeros((8, 8), jnp.int8), jnp.ones((8, 1)), bits=4)
+
+
+def _mk_quant_matmul(accum_dtype):
+    # named exactly like the sanctioned seam: dequant inside is allowed,
+    # but the accumulator contract still applies to its dot_general
+    def quant_matmul(qt, x):
+        w = qt.q.astype(accum_dtype) * qt.scale.astype(accum_dtype)
+        return jax.lax.dot_general(x.astype(accum_dtype), w,
+                                   (((1,), (0,)), ((), ())))
+    return quant_matmul
+
+
+def test_packed_dtype_flags_f32_dequant_outside_sanctioned_sites():
+    def leaky(qt, x):
+        w = qt.q.astype(jnp.float32) * qt.scale
+        return x @ w
+
+    args = (_qt(), jnp.ones((2, 8)))
+    c = _contract(checks=[PackedDtypeAudit(payload_args=lambda: args)],
+                  trace=lambda: jax.make_jaxpr(leaky)(*args))
+    findings = run_contract(c)
+    assert findings and "outside the sanctioned dequant sites" in \
+        findings[0].message, findings
+
+
+def test_packed_dtype_sanctioned_site_clean_but_accum_checked():
+    args = (_qt(), jnp.ones((2, 8)))
+
+    good = _mk_quant_matmul(jnp.float32)
+    c = _contract(checks=[PackedDtypeAudit(payload_args=lambda: args)],
+                  trace=lambda: jax.make_jaxpr(good)(*args))
+    assert run_contract(c) == []
+
+    bad = _mk_quant_matmul(jnp.bfloat16)
+    c = _contract(checks=[PackedDtypeAudit(payload_args=lambda: args)],
+                  trace=lambda: jax.make_jaxpr(bad)(*args))
+    findings = run_contract(c)
+    assert len(findings) == 1 and "accumulates in bfloat16" in \
+        findings[0].message, findings
+
+
+def test_packed_dtype_requires_payloads():
+    args = (jnp.ones((2, 8)),)
+    c = _contract(checks=[PackedDtypeAudit(payload_args=lambda: args)],
+                  trace=lambda: jax.make_jaxpr(lambda x: x + 1)(*args))
+    findings = run_contract(c)
+    assert findings and "no quantized QTensor payloads" in \
+        findings[0].message
+
+
+# --------------------------------------------------------------------------- #
+# Trace-time rule 4: donation aliasing
+# --------------------------------------------------------------------------- #
+def test_donation_flags_dropped_donation():
+    x = jnp.ones((16,))
+    step = lambda v: v + 1.0  # noqa: E731 — shape-preserving, aliasable
+
+    ok = _contract(checks=[DonationAliased(min_aliased=1)],
+                   lower=lambda: jax.jit(step, donate_argnums=(0,)).lower(x))
+    assert run_contract(ok) == []
+
+    dropped = _contract(checks=[DonationAliased(min_aliased=1)],
+                        lower=lambda: jax.jit(step).lower(x))
+    findings = run_contract(dropped)
+    assert len(findings) == 1 and "donation dropped" in findings[0].message
+
+
+# --------------------------------------------------------------------------- #
+# Trace-time rule 5: recompilation sentinel
+# --------------------------------------------------------------------------- #
+def test_recompile_sentinel():
+    f = jax.jit(lambda x: x * 2.0)
+    f(jnp.ones((2,)))
+    f(jnp.ones((3,)))  # second geometry -> second cache entry
+    live = lambda: {"f": f, "n": 2}  # noqa: E731
+
+    ok = _contract(checks=[RecompileCount(expect={"f": (1, 2), "n": 2})],
+                   live=live)
+    assert run_contract(ok) == []
+
+    over = _contract(checks=[RecompileCount(expect={"f": 1})], live=live)
+    findings = run_contract(over)
+    assert len(findings) == 1 and "compiled 2 time(s); budget 1" in \
+        findings[0].message, findings
+
+    missing = _contract(checks=[RecompileCount(expect={"g": 1})], live=live)
+    findings = run_contract(missing)
+    assert findings and "not found in the live program map" in \
+        findings[0].message
+
+
+# --------------------------------------------------------------------------- #
+# AST rule fixtures
+# --------------------------------------------------------------------------- #
+def test_ast_time_time():
+    bad = "import time\nt0 = time.time()\n"
+    assert _rules(lint_source(bad, "x.py")) == ["time-time"]
+    aliased = "from time import time as now\nt0 = now()\n"
+    assert _rules(lint_source(aliased, "x.py")) == ["time-time"]
+    clean = "import time\nt0 = time.perf_counter()\n"
+    assert lint_source(clean, "x.py", rules=("time-time",)) == []
+
+
+def test_ast_prng_reuse_two_consumers():
+    bad = textwrap.dedent("""
+        import jax
+        def f():
+            key = jax.random.PRNGKey(0)
+            a = jax.random.normal(key, (3,))
+            b = jax.random.uniform(key, (3,))
+            return a, b
+    """)
+    findings = lint_source(bad, "x.py", rules=("prng-reuse",))
+    assert len(findings) == 1 and "two consumers" in findings[0].message
+
+
+def test_ast_prng_reuse_branch_and_early_return_clean():
+    clean = textwrap.dedent("""
+        import jax
+        def f(flag):
+            key = jax.random.PRNGKey(0)
+            if flag:
+                return jax.random.normal(key, (3,))
+            return jax.random.uniform(key, (3,))
+
+        def g(flag):
+            key = jax.random.PRNGKey(0)
+            if flag:
+                a = jax.random.normal(key, (3,))
+            else:
+                a = jax.random.uniform(key, (3,))
+            return a
+    """)
+    assert lint_source(clean, "x.py", rules=("prng-reuse",)) == []
+
+
+def test_ast_prng_reuse_in_loop():
+    bad = textwrap.dedent("""
+        import jax
+        def f():
+            key = jax.random.PRNGKey(0)
+            outs = []
+            for i in range(3):
+                outs.append(jax.random.normal(key, (3,)))
+            return outs
+    """)
+    findings = lint_source(bad, "x.py", rules=("prng-reuse",))
+    assert len(findings) == 1 and "inside a loop" in findings[0].message
+
+
+def test_ast_prng_reuse_fold_in_clean():
+    clean = textwrap.dedent("""
+        import jax
+        def f():
+            key = jax.random.PRNGKey(0)
+            a = jax.random.normal(jax.random.fold_in(key, 0), (3,))
+            b = jax.random.uniform(jax.random.fold_in(key, 1), (3,))
+            return a, b
+    """)
+    assert lint_source(clean, "x.py", rules=("prng-reuse",)) == []
+
+
+def test_ast_host_sync_in_jit():
+    bad = textwrap.dedent("""
+        import jax, numpy as np
+        @jax.jit
+        def step(x):
+            return np.asarray(x).sum()
+    """)
+    findings = lint_source(bad, "x.py", rules=("host-sync-in-jit",))
+    assert len(findings) == 1 and "np.asarray" in findings[0].message
+
+    wrapped = textwrap.dedent("""
+        import jax
+        def step(x):
+            return x.item()
+        step_j = jax.jit(step)
+    """)
+    findings = lint_source(wrapped, "x.py", rules=("host-sync-in-jit",))
+    assert len(findings) == 1 and "item" in findings[0].message
+
+    clean = textwrap.dedent("""
+        import numpy as np
+        def host_side(x):
+            return np.asarray(x).sum()
+    """)
+    assert lint_source(clean, "x.py", rules=("host-sync-in-jit",)) == []
+
+
+def test_ast_mutable_default():
+    bad = "def f(x, acc=[], *, m=dict()):\n    return acc, m\n"
+    findings = lint_source(bad, "x.py", rules=("mutable-default",))
+    assert len(findings) == 2
+    clean = "def f(x, acc=None):\n    return acc\n"
+    assert lint_source(clean, "x.py", rules=("mutable-default",)) == []
+
+
+# --------------------------------------------------------------------------- #
+# Suppressions
+# --------------------------------------------------------------------------- #
+def test_suppression_requires_justification(tmp_path):
+    bare = tmp_path / "s.toml"
+    bare.write_text('[[suppress]]\nrule = "time-time"\n'
+                    'path = "src/repro/x.py"\n')
+    with pytest.raises(SuppressionError, match="justification"):
+        load_suppressions(bare)
+
+
+def test_suppression_match_and_unused(tmp_path):
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    mod = tmp_path / "src" / "repro" / "m.py"
+    mod.write_text("import time\nstamp = time.time()\nt0 = time.time()\n")
+    findings = [
+        Finding("time-time", "src/repro/m.py:2", "wall clock"),
+        Finding("time-time", "src/repro/m.py:3", "wall clock"),
+    ]
+    sups = [
+        Suppression(rule="time-time", path="src/repro/m.py",
+                    justification="intentional stamp", match="stamp ="),
+        Suppression(rule="time-time", path="src/repro/other.py",
+                    justification="stale entry"),
+    ]
+    kept, unused = filter_findings(findings, sups, tmp_path)
+    assert [f.where for f in kept] == ["src/repro/m.py:3"]
+    assert [s.path for s in unused] == ["src/repro/other.py"]
+
+
+def test_checked_in_suppressions_are_valid_and_used():
+    sups = load_suppressions(
+        ROOT / "src" / "repro" / "analysis" / "suppressions.toml")
+    assert sups, "the repo ships justified suppressions"
+    assert all(s.justification.strip() for s in sups)
+
+
+# --------------------------------------------------------------------------- #
+# CLI: exit codes 0/1/2
+# --------------------------------------------------------------------------- #
+def _cli(*argv, cwd=None, timeout=120):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True, text=True, cwd=cwd or ROOT, timeout=timeout,
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"})
+
+
+def test_cli_clean_tree_ast_pass_exits_zero():
+    r = _cli("--ast-only")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 gating finding(s)" in r.stdout
+
+
+def test_cli_unknown_rule_exits_two():
+    r = _cli("--rules", "nonsense")
+    assert r.returncode == 2
+    assert "unknown rule" in r.stderr
+
+
+def test_cli_seeded_tree_exits_one_and_baseline_forgives(tmp_path):
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "bad.py").write_text(
+        "import time\n\ndef f(acc=[]):\n    return time.time(), acc\n")
+    sup = tmp_path / "empty.toml"
+    sup.write_text("")
+
+    r = _cli("--ast-only", "--root", str(tmp_path),
+             "--suppressions", str(sup))
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "time-time" in r.stdout and "mutable-default" in r.stdout
+
+    base = tmp_path / "baseline.json"
+    r = _cli("--ast-only", "--root", str(tmp_path), "--suppressions",
+             str(sup), "--write-baseline", str(base))
+    assert r.returncode == 0
+    assert json.loads(base.read_text())["fingerprints"]
+
+    r = _cli("--ast-only", "--root", str(tmp_path), "--suppressions",
+             str(sup), "--baseline", str(base))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "[baselined]" in r.stdout
+
+
+def test_cli_bare_suppression_exits_two(tmp_path):
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "ok.py").write_text("x = 1\n")
+    sup = tmp_path / "s.toml"
+    sup.write_text('[[suppress]]\nrule = "time-time"\n'
+                   'path = "src/repro/ok.py"\njustification = "  "\n')
+    r = _cli("--ast-only", "--root", str(tmp_path),
+             "--suppressions", str(sup))
+    assert r.returncode == 2, r.stdout + r.stderr
+    assert "justification" in r.stderr
+
+
+def test_cli_unused_suppression_gates(tmp_path):
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "ok.py").write_text("x = 1\n")
+    sup = tmp_path / "s.toml"
+    sup.write_text('[[suppress]]\nrule = "time-time"\n'
+                   'path = "src/repro/gone.py"\n'
+                   'justification = "file was deleted"\n')
+    r = _cli("--ast-only", "--root", str(tmp_path),
+             "--suppressions", str(sup))
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "unused-suppression" in r.stdout

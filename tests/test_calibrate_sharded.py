@@ -141,6 +141,32 @@ def test_sharded_uneven_tokens():
     assert "OK uneven" in r.stdout, r.stdout + r.stderr
 
 
+def test_sharded_scan_collective_contract():
+    """The sharded scan program satisfies the census qr_orth declares:
+    exactly loss + gradient (+ one per metric) psums, all inside the scan,
+    and no gathers — checked structurally via the shared ``analysis``
+    contract (valid even on a 1-device mesh), not jaxpr string matching."""
+    code = PRELUDE + textwrap.dedent("""
+        from repro.analysis import run_contract
+        from repro.core.qr_orth import sharded_scan_contract
+        for metrics in ((), (("quant_err", quant_error),)):
+            c = sharded_scan_contract(mesh, whip, metrics=metrics)
+            assert c.owner == "repro.core.qr_orth"
+            findings = run_contract(c)
+            assert not findings, (metrics, [str(f) for f in findings])
+        # the census is a real gate: demanding one extra psum must fail
+        from repro.analysis import CollectiveCensus, Contract
+        base = sharded_scan_contract(mesh, whip)
+        wrong = Contract(name=base.name, owner=base.owner,
+                         checks=(CollectiveCensus(expect={"psum": 3}),),
+                         trace=base.trace)
+        assert run_contract(wrong), "census failed to flag a wrong count"
+        print("OK scan contract")
+    """)
+    r = _run(code)
+    assert "OK scan contract" in r.stdout, r.stdout + r.stderr
+
+
 def test_sharded_compressed_grads():
     """int8+error-feedback gradient psum: trajectory tracks the exact-psum
     run and still optimizes the objective."""
